@@ -1,0 +1,58 @@
+//! Design-space exploration over the accelerator microarchitecture:
+//! beyond the paper's three design points, sweep the feature toggles,
+//! FIFO depths and XOF choices for both schemes and print the landscape
+//! (latency/throughput from the cycle-accurate simulator; clock/power/area
+//! from the calibrated analytic models).
+//!
+//! Run with: `cargo run --release --example design_space`
+
+use presto::cipher::SecretKey;
+use presto::hw::config::{DesignPoint, HwConfig};
+use presto::hw::engine::Simulator;
+use presto::hw::model::{FreqModel, PowerModel, ResourceModel};
+use presto::params::ParamSet;
+use presto::xof::XofKind;
+
+fn evaluate(label: &str, cfg: HwConfig) {
+    let p = cfg.params;
+    let sim = Simulator::new(cfg.clone(), 500).expect("valid config");
+    let key = SecretKey::generate(&p, 3);
+    let rep = sim.run(&key.k, 6);
+    let freq = FreqModel::for_scheme(p.scheme).freq_mhz(&cfg);
+    let power = PowerModel::for_scheme(p.scheme).power_w(&cfg);
+    let res = ResourceModel::for_scheme(p.scheme).estimate(&cfg);
+    println!(
+        "{label:<34} {:>5} cyc {:>8.3} µs {:>8.1} Msps {:>7.1} MHz {:>5.2} W {:>8.0} LUT {:>4.0} DSP",
+        rep.latency_cycles,
+        rep.latency_cycles as f64 / freq,
+        rep.elems_per_cycle * freq,
+        freq,
+        power,
+        res.lut,
+        res.dsp,
+    );
+}
+
+fn main() {
+    for p in [ParamSet::hera_128a(), ParamSet::rubato_128l()] {
+        println!("\n=== {} ===", p.name);
+        evaluate("D1 baseline", HwConfig::design(p, DesignPoint::D1Baseline));
+        evaluate("D2 + decoupling", HwConfig::design(p, DesignPoint::D2Decoupled));
+        evaluate("D2 + V", HwConfig::vectorized_only(p));
+        evaluate("D2 + V + FO", HwConfig::vectorized_overlapped(p));
+        evaluate("D3 + V + FO + MRMC", HwConfig::design(p, DesignPoint::D3Full));
+
+        // FIFO depth sensitivity on the full design.
+        for depth in [4usize, 8, 16, 64, 256] {
+            let mut cfg = HwConfig::design(p, DesignPoint::D3Full);
+            cfg.fifo_depth = depth;
+            evaluate(&format!("D3, fifo depth {depth}"), cfg);
+        }
+
+        // XOF sensitivity: the §IV-D AES-vs-SHAKE choice.
+        let mut cfg = HwConfig::design(p, DesignPoint::D3Full);
+        cfg.xof = XofKind::Shake256;
+        evaluate("D3, SHAKE256 XOF (14.7 b/cyc)", cfg);
+    }
+    println!("\n(latency/interval: cycle-accurate sim; MHz/W/LUT/DSP: calibrated models)");
+}

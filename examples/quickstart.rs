@@ -1,0 +1,56 @@
+//! Quickstart: encrypt a real-valued vector with Rubato, decrypt it, and
+//! peek at every layer along the way.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use presto::cipher::{build_cipher, SecretKey};
+use presto::params::ParamSet;
+use presto::rtf::RtfCodec;
+use presto::xof::XofKind;
+
+fn main() {
+    // 1. Pick the paper's headline parameter set: Rubato Par-128L
+    //    (n = 64, r = 2, keystream length l = 60, 25-bit q).
+    let params = ParamSet::rubato_128l();
+    println!("parameter set: {} (n={}, r={}, l={}, q={})",
+        params.name, params.n, params.rounds, params.l, params.q);
+
+    // 2. Generate a client key and build the cipher with the AES-CTR XOF
+    //    (the paper's hardware choice, §IV-D).
+    let key = SecretKey::generate(&params, 42);
+    let cipher = build_cipher(params, XofKind::AesCtr);
+
+    // 3. RtF-encode a real-valued message into Z_q fixed point.
+    let message: Vec<f64> = (0..params.l).map(|i| (i as f64 - 30.0) / 7.0).collect();
+    let codec = RtfCodec::for_params(&params);
+    let encoded = codec.encode_vec(&message);
+
+    // 4. Encrypt: keystream for (nonce, counter) = (7, 0), add mod q.
+    let (nonce, counter) = (7, 0);
+    let ciphertext = cipher.encrypt_block(&key, nonce, counter, &encoded);
+    println!("ciphertext[..6] = {:?}", &ciphertext[..6]);
+
+    // 5. Decrypt + decode, and check the round trip.
+    let decrypted = cipher.decrypt_block(&key, nonce, counter, &ciphertext);
+    let decoded = codec.decode_vec(&decrypted);
+    let max_err = message
+        .iter()
+        .zip(&decoded)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f64::max);
+    println!("round-trip max error = {max_err:.2e} (quantization bound {:.2e})",
+        codec.quantization_bound());
+    assert!(max_err <= codec.quantization_bound() + 1e-12);
+
+    // 6. The RNG-side accounting the paper's §IV-C is about: how many
+    //    random bits did this stream key cost?
+    let block = cipher.keystream(&key, nonce, counter);
+    println!(
+        "randomness: {} round constants ({} bits), noise {} bits ≈ {} AES blocks total",
+        block.rc_used,
+        block.rc_bits,
+        block.noise_bits,
+        (block.rc_bits + block.noise_bits).div_ceil(128),
+    );
+    println!("quickstart OK");
+}

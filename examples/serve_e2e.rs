@@ -1,0 +1,69 @@
+//! End-to-end serving driver (experiment E11): the full three-layer stack
+//! on a real workload.
+//!
+//! Loads the AOT-compiled JAX/Pallas keystream artifact (L1+L2, built by
+//! `make artifacts`), starts the Rust coordinator (L3: dynamic batcher +
+//! decoupled RNG pool + PJRT executor), drives it with a Poisson request
+//! stream of real-valued feature vectors, validates every response by
+//! decrypting it, and reports latency/throughput.
+//!
+//! Run with: `make artifacts && cargo run --release --example serve_e2e`
+
+use presto::cipher::{build_cipher, SecretKey};
+use presto::coordinator::{BatchPolicy, EncryptServer, ServerConfig};
+use presto::params::ParamSet;
+use presto::workload::WorkloadGen;
+use presto::xof::XofKind;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let params = ParamSet::rubato_128l();
+    let sessions = 4;
+    let requests = 4000;
+    let cfg = ServerConfig {
+        params,
+        xof: XofKind::AesCtr,
+        policy: BatchPolicy {
+            batch_size: 8, // the paper's lane count
+            max_wait: Duration::from_millis(2),
+        },
+        rng_depth: 16, // the paper's small decoupled FIFO
+        rng_workers: 2,
+        sessions,
+        artifact_dir: Some("artifacts".into()),
+    };
+    let server = EncryptServer::start(cfg).expect("run `make artifacts` first");
+    println!("encryption service up: {} via PJRT, {} sessions", params.name, sessions);
+
+    // Poisson arrivals of normalized feature vectors.
+    let mut wl = WorkloadGen::new(&params, 5_000.0, sessions, 7);
+    let reqs = wl.take(requests);
+    let originals: Vec<Vec<f64>> = reqs.iter().map(|r| r.message.clone()).collect();
+
+    let t0 = Instant::now();
+    let rxs: Vec<_> = reqs.into_iter().map(|r| server.submit(r)).collect();
+    let responses: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    let wall = t0.elapsed().as_secs_f64();
+
+    // Validate every ciphertext by decrypting with the session key.
+    let codec = server.codec();
+    let cipher = build_cipher(params, XofKind::AesCtr);
+    let f = params.field();
+    let mut checked = 0;
+    for (resp, msg) in responses.iter().zip(&originals) {
+        let key = SecretKey::generate(&params, resp.session + 1);
+        let ks = cipher.keystream(&key, resp.nonce, resp.counter).ks;
+        for (i, &orig) in msg.iter().enumerate() {
+            let dec = codec.decode(f.sub(resp.ciphertext[i], ks[i]));
+            assert!(
+                (dec - orig).abs() <= codec.quantization_bound() + 1e-9,
+                "request {} element {i}: {dec} vs {orig}",
+                resp.id
+            );
+        }
+        checked += 1;
+    }
+    println!("validated {checked}/{requests} responses (exact round trips)");
+    println!("{}", server.metrics().snapshot().report(wall));
+    server.shutdown();
+}

@@ -1,0 +1,120 @@
+"""AOT compile path: lower the JAX/Pallas keystream model to HLO text and
+emit golden cross-layer test vectors.
+
+Run via `make artifacts` (or `python -m compile.aot --out ../artifacts`).
+Python runs ONCE here; the Rust binary is self-contained afterwards.
+
+HLO *text* (not a serialized HloModuleProto) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension
+0.5.1 rejects; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, params
+
+jax.config.update("jax_enable_x64", True)
+
+# Batch size of the compiled executable — the paper's lane count (all
+# evaluated designs process 8 state elements per cycle; the serving batcher
+# groups requests into 8-lane batches).
+DEFAULT_BATCH = 8
+
+# Parameter sets that get an artifact.
+ARTIFACT_SETS = [params.HERA_128A, params.RUBATO_128S, params.RUBATO_128L]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_keystream(p: params.ParamSet, batch: int) -> str:
+    fn = model.jit_keystream(p)
+    lowered = fn.lower(*model.example_args(p, batch))
+    return to_hlo_text(lowered)
+
+
+def artifact_name(p: params.ParamSet, batch: int) -> str:
+    return f"{p.name.replace('-', '_')}_b{batch}.hlo.txt"
+
+
+def golden_vectors(p: params.ParamSet, batch: int, seed: int) -> dict:
+    """Cross-layer golden vectors: explicit inputs + the model's output.
+
+    The inputs are arbitrary canonical Z_q values (NOT XOF-derived — the
+    XOF lives Rust-side); the Rust test feeds the same inputs to
+    `keystream_from_rc` and to the compiled artifact and asserts all three
+    agree. Noise is stored signed (centered) to exercise the Rust i64
+    conversion.
+    """
+    rng = np.random.default_rng(seed)
+    key = rng.integers(0, p.q, size=(batch, p.n), dtype=np.uint64)
+    rc = rng.integers(0, p.q, size=(batch, p.rc_count), dtype=np.uint64)
+    if p.scheme == "rubato":
+        signed_noise = rng.integers(-8, 9, size=(batch, p.l), dtype=np.int64)
+        canonical = np.mod(signed_noise, p.q).astype(np.uint64)
+        ks = model.jit_keystream(p)(key, rc, canonical)[0]
+    else:
+        signed_noise = None
+        ks = model.jit_keystream(p)(key, rc)[0]
+    out = {
+        "scheme": p.scheme,
+        "name": p.name,
+        "q": p.q,
+        "n": p.n,
+        "v": p.v,
+        "rounds": p.rounds,
+        "l": p.l,
+        "batch": batch,
+        "seed": seed,
+        "key": key.tolist(),
+        "rc": rc.tolist(),
+        "ks": np.asarray(ks).tolist(),
+    }
+    if signed_noise is not None:
+        out["noise"] = signed_noise.tolist()
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--batch", type=int, default=DEFAULT_BATCH)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    golden_dir = os.path.join(args.out, "golden")
+    os.makedirs(golden_dir, exist_ok=True)
+
+    for p in ARTIFACT_SETS:
+        hlo = lower_keystream(p, args.batch)
+        path = os.path.join(args.out, artifact_name(p, args.batch))
+        with open(path, "w") as f:
+            f.write(hlo)
+        print(f"wrote {path} ({len(hlo)} chars)")
+
+        vectors = golden_vectors(p, args.batch, seed=20260710)
+        gpath = os.path.join(golden_dir, f"{p.name}.json")
+        with open(gpath, "w") as f:
+            json.dump(vectors, f)
+        print(f"wrote {gpath}")
+
+    # Sentinel consumed by the Makefile's freshness check.
+    with open(os.path.join(args.out, ".stamp"), "w") as f:
+        f.write("ok\n")
+
+
+if __name__ == "__main__":
+    main()

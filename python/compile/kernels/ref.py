@@ -1,0 +1,120 @@
+"""Pure-jnp correctness oracle for the cipher round functions.
+
+Everything operates on canonical Z_q values held in uint64 (q < 2^26, so
+products fit u64 exactly). The mixing matrix Mv is the circulant with first
+row (2, 3, 1, 1, ..., 1); the row-sum identity
+
+    (Mv x)[r] = S + x[r] + 2·x[(r+1) mod v],   S = sum(x)
+
+is the shift-add form the hardware (and the Pallas kernel) uses — no
+general multiplies in the linear layer.
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+U64 = jnp.uint64
+
+
+def mix_columns(x, q):
+    """MixColumns: Y = Mv · X for X of shape (..., v, v)."""
+    s = jnp.sum(x, axis=-2, keepdims=True) % q
+    return (s + x + 2 * jnp.roll(x, -1, axis=-2)) % q
+
+
+def mix_rows(x, q):
+    """MixRows: Y = X · Mvᵀ for X of shape (..., v, v)."""
+    s = jnp.sum(x, axis=-1, keepdims=True) % q
+    return (s + x + 2 * jnp.roll(x, -1, axis=-1)) % q
+
+
+def mrmc(x, q):
+    """Fused MixColumns∘MixRows: Y = Mv · X · Mvᵀ."""
+    return mix_rows(mix_columns(x, q), q)
+
+
+def cube(x, q):
+    """HERA's Cube S-box: elementwise x³ mod q."""
+    x2 = (x * x) % q
+    return (x2 * x) % q
+
+
+def feistel(x, q):
+    """Rubato's Feistel: y_1 = x_1, y_i = x_i + x_{i-1}² (input values).
+
+    x has shape (..., n) flattened.
+    """
+    prev = jnp.roll(x, 1, axis=-1)
+    y = (x + (prev * prev) % q) % q
+    return y.at[..., 0].set(x[..., 0])
+
+
+def ark(x, k, rc, q):
+    """Add-round-key: x + k ⊙ rc mod q (elementwise, flattened shapes)."""
+    return (x + (k * rc) % q) % q
+
+
+def agn(x, noise, q):
+    """Add canonical (already mod-q) Gaussian noise."""
+    return (x + noise) % q
+
+
+def initial_state(p):
+    """The constant initial state ic = (1, 2, ..., n) mod q."""
+    return jnp.arange(1, p.n + 1, dtype=U64) % jnp.uint64(p.q)
+
+
+def keystream(p, key, rc, noise=None):
+    """Reference stream-key generation.
+
+    Args:
+      p: ParamSet.
+      key:   (B, n) uint64.
+      rc:    (B, rc_count) uint64 round constants.
+      noise: (B, l) uint64 canonical noise (Rubato), or None (HERA).
+
+    Returns:
+      (B, l) uint64 keystream.
+    """
+    q = jnp.uint64(p.q)
+    B = key.shape[0]
+    assert key.shape == (B, p.n)
+    assert rc.shape == (B, p.rc_count)
+    x = jnp.broadcast_to(initial_state(p), (B, p.n))
+
+    off = 0
+    x = ark(x, key, rc[:, off : off + p.n], q)
+    off += p.n
+
+    def to_mat(t):
+        return t.reshape(B, p.v, p.v)
+
+    def to_vec(t):
+        return t.reshape(B, p.n)
+
+    if p.scheme == "hera":
+        for _ in range(1, p.rounds):
+            x = to_vec(mrmc(to_mat(x), q))
+            x = cube(x, q)
+            x = ark(x, key, rc[:, off : off + p.n], q)
+            off += p.n
+        x = to_vec(mrmc(to_mat(x), q))
+        x = cube(x, q)
+        x = to_vec(mrmc(to_mat(x), q))
+        x = ark(x, key, rc[:, off : off + p.n], q)
+        return x
+    else:
+        assert noise is not None and noise.shape == (B, p.l)
+        for _ in range(1, p.rounds):
+            x = to_vec(mrmc(to_mat(x), q))
+            x = feistel(x, q)
+            x = ark(x, key, rc[:, off : off + p.n], q)
+            off += p.n
+        x = to_vec(mrmc(to_mat(x), q))
+        x = feistel(x, q)
+        x = to_vec(mrmc(to_mat(x), q))
+        ks = x[:, : p.l]
+        ks = ark(ks, key[:, : p.l], rc[:, off : off + p.l], q)
+        return agn(ks, noise, q)

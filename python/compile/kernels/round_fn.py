@@ -1,0 +1,116 @@
+"""Layer-1 Pallas kernels for the cipher round functions.
+
+The compute hot-spot of stream-key generation is one round — fused
+MixColumns/MixRows (MRMC), the nonlinear layer, and ARK — over a batch of
+independent lanes. Each variant is a single Pallas kernel so the whole
+round lowers into one fused HLO region.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's FPGA
+schedules slices through the MRMC unit with shift-and-add constant
+multipliers; on TPU the analogue keeps the Mv multiply in elementwise
+adds on the VPU (circulant row-sum form — no MXU matmul, since u64 modular
+arithmetic does not map to bf16 systolic tiles) and fuses the two Mv
+applications so no transposed intermediate is materialized. `interpret=True`
+everywhere: the CPU PJRT client cannot execute Mosaic custom-calls.
+
+BlockSpec / VMEM notes for a real TPU target: the natural grid is over the
+batch dimension with per-step blocks of (B_blk, v, v) u32 state plus
+(B_blk, n) key/constants — ≈ 3·B_blk·n·4 bytes per step, comfortably
+double-buffered in 16 MiB of VMEM for B_blk up to ~8192 at n = 64.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _mrmc_block(x, q):
+    """Fused Mv·X·Mvᵀ in shift-add (circulant row-sum) form.
+
+    x: (B, v, v) uint64.
+    """
+    s_col = jnp.sum(x, axis=-2, keepdims=True) % q
+    y = (s_col + x + 2 * jnp.roll(x, -1, axis=-2)) % q
+    s_row = jnp.sum(y, axis=-1, keepdims=True) % q
+    return (s_row + y + 2 * jnp.roll(y, -1, axis=-1)) % q
+
+
+def _cube_block(x, q):
+    x2 = (x * x) % q
+    return (x2 * x) % q
+
+
+def _feistel_block(x, q):
+    prev = jnp.roll(x, 1, axis=-1)
+    y = (x + (prev * prev) % q) % q
+    return y.at[..., 0].set(x[..., 0])
+
+
+def _ark_block(x, k, rc, q):
+    return (x + (k * rc) % q) % q
+
+
+def _rf_kernel(x_ref, k_ref, rc_ref, o_ref, *, q, v, nonlinear):
+    """One RF layer: ARK ∘ NL ∘ MRMC (applied right-to-left on the state)."""
+    b = x_ref.shape[0]
+    n = v * v
+    x = x_ref[...].reshape(b, v, v)
+    y = _mrmc_block(x, q).reshape(b, n)
+    if nonlinear == "cube":
+        y = _cube_block(y, q)
+    else:
+        y = _feistel_block(y, q)
+    o_ref[...] = _ark_block(y, k_ref[...], rc_ref[...], q)
+
+
+def _fin_head_kernel(x_ref, o_ref, *, q, v, nonlinear):
+    """The Fin layer's head: MRMC ∘ NL ∘ MRMC (before truncation/ARK)."""
+    b = x_ref.shape[0]
+    n = v * v
+    x = x_ref[...].reshape(b, v, v)
+    y = _mrmc_block(x, q).reshape(b, n)
+    if nonlinear == "cube":
+        y = _cube_block(y, q)
+    else:
+        y = _feistel_block(y, q)
+    o_ref[...] = _mrmc_block(y.reshape(b, v, v), q).reshape(b, n)
+
+
+def _ark_kernel(x_ref, k_ref, rc_ref, o_ref, *, q):
+    o_ref[...] = _ark_block(x_ref[...], k_ref[...], rc_ref[...], q)
+
+
+def _agn_kernel(x_ref, noise_ref, o_ref, *, q):
+    o_ref[...] = (x_ref[...] + noise_ref[...]) % q
+
+
+def _call(kernel, out_shape, *args, **kw):
+    return pl.pallas_call(
+        functools.partial(kernel, **kw),
+        out_shape=jax.ShapeDtypeStruct(out_shape, jnp.uint64),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(*args)
+
+
+def rf_layer(x, key, rc, *, q, v, nonlinear):
+    """Pallas RF layer on (B, n) state: MRMC → NL → ARK."""
+    return _call(_rf_kernel, x.shape, x, key, rc, q=int(q), v=v, nonlinear=nonlinear)
+
+
+def fin_head(x, *, q, v, nonlinear):
+    """Pallas Fin head on (B, n) state: MRMC → NL → MRMC."""
+    return _call(_fin_head_kernel, x.shape, x, q=int(q), v=v, nonlinear=nonlinear)
+
+
+def ark_layer(x, key, rc, *, q):
+    """Pallas ARK on (B, m) state (m = n or l)."""
+    return _call(_ark_kernel, x.shape, x, key, rc, q=int(q))
+
+
+def agn_layer(x, noise, *, q):
+    """Pallas AGN on (B, l) state."""
+    return _call(_agn_kernel, x.shape, x, noise, q=int(q))

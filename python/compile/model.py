@@ -1,0 +1,86 @@
+"""Layer-2 JAX model: batched stream-key generation.
+
+Composes the Layer-1 Pallas kernels into the full cipher dataflow
+`(AGN ∘ Tr ∘) Fin ∘ RF_{r-1} ∘ … ∘ RF_1 ∘ ARK(k)`. Round constants and
+noise enter as *input tensors* — they are sampled Rust-side by the
+decoupled RNG pool (the paper's §IV-C decoupling), so the XOF is never in
+the compiled graph and Python is never on the request path.
+
+The function is lowered once by `aot.py` to HLO text and executed from
+Rust via PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import round_fn
+from .params import ParamSet
+
+jax.config.update("jax_enable_x64", True)
+
+
+def initial_state(p: ParamSet, batch: int):
+    """Broadcast constant initial state ic = (1, …, n) mod q."""
+    ic = jnp.arange(1, p.n + 1, dtype=jnp.uint64) % jnp.uint64(p.q)
+    return jnp.broadcast_to(ic, (batch, p.n))
+
+
+def keystream(p: ParamSet, key, rc, noise=None):
+    """Batched stream-key generation via the Pallas kernels.
+
+    Args:
+      p: parameter set.
+      key:   (B, n) uint64 secret keys (one per lane).
+      rc:    (B, r·n + l) uint64 round constants.
+      noise: (B, l) uint64 canonical AGN noise (Rubato only).
+
+    Returns:
+      (B, l) uint64 keystream.
+    """
+    B = key.shape[0]
+    nl = "cube" if p.scheme == "hera" else "feistel"
+    x = initial_state(p, B)
+
+    off = 0
+    x = round_fn.ark_layer(x, key, rc[:, off : off + p.n], q=p.q)
+    off += p.n
+
+    for _ in range(1, p.rounds):
+        x = round_fn.rf_layer(x, key, rc[:, off : off + p.n], q=p.q, v=p.v, nonlinear=nl)
+        off += p.n
+
+    x = round_fn.fin_head(x, q=p.q, v=p.v, nonlinear=nl)
+
+    if p.scheme == "hera":
+        return round_fn.ark_layer(x, key, rc[:, off : off + p.n], q=p.q)
+
+    ks = x[:, : p.l]
+    ks = round_fn.ark_layer(ks, key[:, : p.l], rc[:, off : off + p.l], q=p.q)
+    return round_fn.agn_layer(ks, noise, q=p.q)
+
+
+def example_args(p: ParamSet, batch: int):
+    """ShapeDtypeStructs for lowering."""
+    u64 = jnp.uint64
+    key = jax.ShapeDtypeStruct((batch, p.n), u64)
+    rc = jax.ShapeDtypeStruct((batch, p.rc_count), u64)
+    if p.scheme == "hera":
+        return (key, rc)
+    noise = jax.ShapeDtypeStruct((batch, p.l), u64)
+    return (key, rc, noise)
+
+
+def jit_keystream(p: ParamSet):
+    """The jittable entry point with a tuple output (PJRT convention)."""
+
+    if p.scheme == "hera":
+
+        def fn(key, rc):
+            return (keystream(p, key, rc),)
+
+    else:
+
+        def fn(key, rc, noise):
+            return (keystream(p, key, rc, noise),)
+
+    return jax.jit(fn)

@@ -1,0 +1,48 @@
+"""Cipher parameter sets — MUST mirror rust/src/params.rs.
+
+The golden-vector files embed q/n/r/l so the Rust test suite catches any
+drift between the two definitions.
+"""
+
+from dataclasses import dataclass
+
+# 26-bit prime, q ≡ 1 (mod 2^16), gcd(3, q-1) = 1 (Cube bijective),
+# just below 2^26 for high rejection-sampling acceptance.
+HERA_Q = 65_929_217  # 0x3EE0001
+
+# 25-bit prime, q ≡ 1 (mod 2^16), just below 2^25.
+RUBATO_Q = 33_292_289  # 0x1FC0001
+
+
+@dataclass(frozen=True)
+class ParamSet:
+    """A fully-specified cipher instance (mirrors the Rust struct)."""
+
+    name: str
+    scheme: str  # "hera" | "rubato"
+    n: int
+    v: int
+    rounds: int
+    l: int  # noqa: E741 — matches the paper's symbol
+    q: int
+
+    @property
+    def rc_count(self) -> int:
+        """Round constants per stream key: r·n + l (final ARK truncated)."""
+        return self.rounds * self.n + self.l
+
+
+HERA_128A = ParamSet("hera-128a", "hera", n=16, v=4, rounds=5, l=16, q=HERA_Q)
+RUBATO_128S = ParamSet("rubato-128s", "rubato", n=16, v=4, rounds=2, l=12, q=RUBATO_Q)
+RUBATO_128M = ParamSet("rubato-128m", "rubato", n=36, v=6, rounds=2, l=32, q=RUBATO_Q)
+RUBATO_128L = ParamSet("rubato-128l", "rubato", n=64, v=8, rounds=2, l=60, q=RUBATO_Q)
+
+ALL = [HERA_128A, RUBATO_128S, RUBATO_128M, RUBATO_128L]
+
+
+def by_name(name: str) -> ParamSet:
+    """Look up a parameter set by its canonical name."""
+    for p in ALL:
+        if p.name == name:
+            return p
+    raise KeyError(f"unknown parameter set {name!r}")

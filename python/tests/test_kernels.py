@@ -1,0 +1,92 @@
+"""Pallas kernels (L1) vs the pure-jnp oracle, with hypothesis sweeps over
+shapes and values."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import params
+from compile.kernels import ref, round_fn
+
+
+def rand(rng, q, shape):
+    return jnp.asarray(rng.integers(0, q, size=shape, dtype=np.uint64))
+
+
+@pytest.mark.parametrize("p", params.ALL, ids=lambda p: p.name)
+@pytest.mark.parametrize("batch", [1, 3, 8])
+def test_rf_layer_matches_ref(p, batch):
+    rng = np.random.default_rng(batch)
+    x = rand(rng, p.q, (batch, p.n))
+    key = rand(rng, p.q, (batch, p.n))
+    rc = rand(rng, p.q, (batch, p.n))
+    nl = "cube" if p.scheme == "hera" else "feistel"
+    got = round_fn.rf_layer(x, key, rc, q=p.q, v=p.v, nonlinear=nl)
+
+    q = jnp.uint64(p.q)
+    y = ref.mrmc(x.reshape(batch, p.v, p.v), q).reshape(batch, p.n)
+    y = ref.cube(y, q) if nl == "cube" else ref.feistel(y, q)
+    expect = ref.ark(y, key, rc, q)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+
+
+@pytest.mark.parametrize("p", params.ALL, ids=lambda p: p.name)
+def test_fin_head_matches_ref(p):
+    rng = np.random.default_rng(7)
+    B = 4
+    x = rand(rng, p.q, (B, p.n))
+    nl = "cube" if p.scheme == "hera" else "feistel"
+    got = round_fn.fin_head(x, q=p.q, v=p.v, nonlinear=nl)
+
+    q = jnp.uint64(p.q)
+    y = ref.mrmc(x.reshape(B, p.v, p.v), q).reshape(B, p.n)
+    y = ref.cube(y, q) if nl == "cube" else ref.feistel(y, q)
+    expect = ref.mrmc(y.reshape(B, p.v, p.v), q).reshape(B, p.n)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+
+
+@given(
+    batch=st.integers(1, 16),
+    m=st.sampled_from([12, 16, 36, 60, 64]),
+    seed=st.integers(0, 2**31),
+)
+@settings(max_examples=25, deadline=None)
+def test_ark_layer_hypothesis_shapes(batch, m, seed):
+    q = params.RUBATO_Q
+    rng = np.random.default_rng(seed)
+    x = rand(rng, q, (batch, m))
+    k = rand(rng, q, (batch, m))
+    rc = rand(rng, q, (batch, m))
+    got = round_fn.ark_layer(x, k, rc, q=q)
+    expect = ref.ark(x, k, rc, jnp.uint64(q))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+
+
+@given(batch=st.integers(1, 8), seed=st.integers(0, 2**31))
+@settings(max_examples=20, deadline=None)
+def test_agn_layer_hypothesis(batch, seed):
+    q = params.RUBATO_Q
+    rng = np.random.default_rng(seed)
+    x = rand(rng, q, (batch, 60))
+    noise = rand(rng, q, (batch, 60))
+    got = round_fn.agn_layer(x, noise, q=q)
+    np.testing.assert_array_equal(
+        np.asarray(got), (np.asarray(x) + np.asarray(noise)) % q
+    )
+
+
+def test_kernel_values_stay_canonical():
+    """No kernel output may ever reach q (reduction completeness)."""
+    p = params.RUBATO_128L
+    rng = np.random.default_rng(11)
+    # Adversarial inputs at the top of the range.
+    x = jnp.full((2, p.n), p.q - 1, dtype=jnp.uint64)
+    key = jnp.full((2, p.n), p.q - 1, dtype=jnp.uint64)
+    rc = jnp.full((2, p.n), p.q - 1, dtype=jnp.uint64)
+    out = round_fn.rf_layer(x, key, rc, q=p.q, v=p.v, nonlinear="feistel")
+    assert int(jnp.max(out)) < p.q
+    out = round_fn.fin_head(x, q=p.q, v=p.v, nonlinear="feistel")
+    assert int(jnp.max(out)) < p.q
+    del rng

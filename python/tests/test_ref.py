@@ -1,0 +1,114 @@
+"""Tests for the pure-jnp reference oracle: algebraic properties the cipher
+definitions must satisfy (mirroring the Rust component tests)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import params
+from compile.kernels import ref
+
+
+def rand_state(rng, q, shape):
+    return jnp.asarray(rng.integers(0, q, size=shape, dtype=np.uint64))
+
+
+def mv_matrix(v):
+    """Explicit circulant Mv with first row (2, 3, 1, ..., 1)."""
+    first = np.ones(v, dtype=np.uint64)
+    first[0], first[1] = 2, 3
+    return np.stack([np.roll(first, r) for r in range(v)])
+
+
+@pytest.mark.parametrize("p", params.ALL, ids=lambda p: p.name)
+def test_mix_layers_match_explicit_matmul(p):
+    rng = np.random.default_rng(1)
+    x = rand_state(rng, p.q, (3, p.v, p.v))
+    mv = mv_matrix(p.v)
+    # MixColumns: Mv @ X
+    expect = np.einsum("ri,bic->brc", mv, np.asarray(x)) % p.q
+    got = ref.mix_columns(x, jnp.uint64(p.q))
+    np.testing.assert_array_equal(np.asarray(got), expect)
+    # MixRows: X @ Mv^T
+    expect = np.einsum("bri,ci->brc", np.asarray(x), mv) % p.q
+    got = ref.mix_rows(x, jnp.uint64(p.q))
+    np.testing.assert_array_equal(np.asarray(got), expect)
+
+
+@pytest.mark.parametrize("v", [4, 6, 8])
+def test_mrmc_transposition_invariance(v):
+    """The paper's Eq. (2): MRMC(Xᵀ) = (MRMC(X))ᵀ."""
+    q = params.RUBATO_Q
+    rng = np.random.default_rng(2)
+    x = rand_state(rng, q, (5, v, v))
+    a = ref.mrmc(jnp.swapaxes(x, -1, -2), jnp.uint64(q))
+    b = jnp.swapaxes(ref.mrmc(x, jnp.uint64(q)), -1, -2)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_feistel_matches_definition():
+    q = jnp.uint64(17)
+    x = jnp.array([[1, 2, 3, 4]], dtype=jnp.uint64)
+    y = ref.feistel(x, q)
+    np.testing.assert_array_equal(np.asarray(y), [[1, 3, 7, 13]])
+
+
+def test_feistel_is_invertible():
+    q = params.RUBATO_Q
+    rng = np.random.default_rng(3)
+    x0 = np.asarray(rand_state(rng, q, (2, 64)))
+    y = np.asarray(ref.feistel(jnp.asarray(x0), jnp.uint64(q))).astype(np.int64)
+    # Sequential inverse (signed arithmetic: uint64 wraparound mod 2^64
+    # would corrupt the mod-q reduction).
+    x = np.zeros_like(y)
+    x[:, 0] = y[:, 0]
+    for i in range(1, 64):
+        x[:, i] = (y[:, i] - x[:, i - 1] * x[:, i - 1]) % q
+    np.testing.assert_array_equal(x.astype(np.uint64), x0)
+
+
+def test_cube_matches_pow():
+    q = params.HERA_Q
+    rng = np.random.default_rng(4)
+    x = np.asarray(rand_state(rng, q, (100,)))
+    got = np.asarray(ref.cube(jnp.asarray(x), jnp.uint64(q)))
+    expect = np.array([pow(int(xi), 3, q) for xi in x], dtype=np.uint64)
+    np.testing.assert_array_equal(got, expect)
+
+
+@given(st.integers(0, params.RUBATO_Q - 1), st.integers(0, params.RUBATO_Q - 1))
+@settings(max_examples=200, deadline=None)
+def test_ark_elementwise_hypothesis(k, rc):
+    q = params.RUBATO_Q
+    x = jnp.array([[5]], dtype=jnp.uint64)
+    got = int(
+        ref.ark(x, jnp.array([[k]], dtype=jnp.uint64), jnp.array([[rc]], dtype=jnp.uint64), jnp.uint64(q))[0, 0]
+    )
+    assert got == (5 + k * rc) % q
+
+
+@pytest.mark.parametrize("p", params.ALL, ids=lambda p: p.name)
+def test_keystream_shapes_and_range(p):
+    rng = np.random.default_rng(5)
+    B = 4
+    key = rand_state(rng, p.q, (B, p.n))
+    rc = rand_state(rng, p.q, (B, p.rc_count))
+    noise = rand_state(rng, p.q, (B, p.l)) if p.scheme == "rubato" else None
+    ks = ref.keystream(p, key, rc, noise)
+    assert ks.shape == (B, p.l)
+    assert int(jnp.max(ks)) < p.q
+
+
+def test_keystream_is_key_sensitive():
+    p = params.RUBATO_128L
+    rng = np.random.default_rng(6)
+    B = 2
+    rc = rand_state(rng, p.q, (B, p.rc_count))
+    noise = rand_state(rng, p.q, (B, p.l))
+    k1 = rand_state(rng, p.q, (B, p.n))
+    k2 = rand_state(rng, p.q, (B, p.n))
+    a = np.asarray(ref.keystream(p, k1, rc, noise))
+    b = np.asarray(ref.keystream(p, k2, rc, noise))
+    assert (a != b).any()

@@ -1,0 +1,35 @@
+//! Regenerates **Figure 3 — data schedules of the Fin layer** (experiment
+//! E6): the Fin layer contains two MRMC passes; without the optimization
+//! the second pass stalls (Fig. 3a), with it the bubble disappears
+//! (Fig. 3b). Rendered as the MRMC-unit idle-gap comparison plus the
+//! cycle grid around the Fin window.
+
+use presto::cipher::SecretKey;
+use presto::hw::config::{DesignPoint, HwConfig};
+use presto::hw::engine::Simulator;
+use presto::hw::schedule::UnitId;
+use presto::params::ParamSet;
+
+fn main() {
+    let p = ParamSet::rubato_128l();
+    let key = SecretKey::generate(&p, 1);
+    for (cfg, name) in [
+        (HwConfig::vectorized_overlapped(p), "naively vectorized (Fig. 3a)"),
+        (HwConfig::design(p, DesignPoint::D3Full), "MRMC-optimized (Fig. 3b)"),
+    ] {
+        let sim = Simulator::new(cfg, 900).unwrap();
+        let rep = sim.run(&key.k, 2);
+        println!("\n--- {name} ---");
+        print!("{}", rep.trace.render(1));
+        println!(
+            "MRMC max idle gap {} cycles; block latency {} cycles",
+            rep.trace.max_gap(1, UnitId::Mrmc),
+            rep.latency_cycles
+        );
+    }
+    println!(
+        "\npaper reference: the second MRMC pass of Fin stalls waiting for the\n\
+         full Feistel output in the naive schedule; the optimized schedule\n\
+         streams it without a bubble, producing column-major output."
+    );
+}

@@ -1,0 +1,97 @@
+//! Microbenchmarks of the serving hot path (§Perf of EXPERIMENTS.md):
+//! keystream generation end-to-end and its components — XOF byte
+//! generation, rejection sampling, round-function arithmetic — plus the
+//! XLA-engine batch execution when artifacts are present.
+
+use presto::bench::{bench, bench_batched};
+use presto::cipher::{build_cipher, Hera, Rubato, SecretKey};
+use presto::coordinator::rngpool::sample_bundle;
+use presto::params::ParamSet;
+use presto::runtime::Runtime;
+use presto::xof::{Xof, XofKind};
+use std::path::Path;
+
+fn main() {
+    let hera = ParamSet::hera_128a();
+    let rubato = ParamSet::rubato_128l();
+
+    // Full keystream generation (the SW table row's unit of work).
+    for p in [hera, rubato] {
+        let cipher = build_cipher(p, XofKind::AesCtr);
+        let key = SecretKey::generate(&p, 1);
+        let mut ctr = 0;
+        let r = bench(&format!("keystream {}", p.name), 1000, || {
+            let b = cipher.keystream(&key, 9, ctr);
+            std::hint::black_box(&b.ks);
+            ctr += 1;
+        });
+        println!("{}  ({:.1} Msps)", r.report(), r.throughput(p.l as f64) / 1e6);
+    }
+
+    // XOF raw throughput.
+    for kind in [XofKind::AesCtr, XofKind::Shake256] {
+        let mut xof = kind.instantiate(1, 1);
+        let mut buf = [0u8; 4096];
+        let r = bench_batched(&format!("xof {kind:?} 4KiB"), 200, 8, || {
+            xof.squeeze(&mut buf);
+            std::hint::black_box(&buf);
+        });
+        println!(
+            "{}  ({:.0} MB/s)",
+            r.report(),
+            r.throughput(buf.len() as f64) / 1e6
+        );
+    }
+
+    // Round-constant sampling only (the decoupled RNG pool's unit of work).
+    let hera_cipher = Hera::new(hera, XofKind::AesCtr);
+    let mut ctr = 0;
+    let r = bench("sample_rc hera-128a (96 constants)", 1000, || {
+        let (rc, _) = hera_cipher.sample_round_constants(1, ctr);
+        std::hint::black_box(&rc);
+        ctr += 1;
+    });
+    println!("{}", r.report());
+    let rubato_cipher = Rubato::new(rubato, XofKind::AesCtr);
+    let mut ctr = 0;
+    let r = bench("sample_rc+noise rubato-128l (188+60)", 1000, || {
+        let b = sample_bundle(&rubato, XofKind::AesCtr, 1, ctr);
+        std::hint::black_box(&b.rc);
+        ctr += 1;
+    });
+    println!("{}", r.report());
+
+    // Compute phase only (keystream from pre-sampled constants — what the
+    // accelerator/XLA executes after decoupling).
+    let key = SecretKey::generate(&rubato, 1);
+    let (rc, _) = rubato_cipher.sample_round_constants(1, 0);
+    let (noise, _) = rubato_cipher.sample_noise(1, 0);
+    let r = bench_batched("keystream_from_rc rubato-128l", 400, 8, || {
+        let ks = rubato_cipher.keystream_from_rc(&key, &rc, &noise);
+        std::hint::black_box(&ks);
+    });
+    println!("{}", r.report());
+
+    // XLA batch execution (8 lanes), if artifacts are built.
+    if let Ok(rt) = Runtime::cpu() {
+        if let Ok(exe) = rt.load_keystream(Path::new("artifacts"), rubato, 8) {
+            let keys: Vec<Vec<u32>> =
+                (0..8).map(|i| SecretKey::generate(&rubato, i + 1).k).collect();
+            let bundles: Vec<_> =
+                (0..8).map(|i| sample_bundle(&rubato, XofKind::AesCtr, 1, i)).collect();
+            let rcs: Vec<Vec<u32>> = bundles.iter().map(|b| b.rc.clone()).collect();
+            let noises: Vec<Vec<i64>> = bundles.iter().map(|b| b.noise.clone()).collect();
+            let r = bench("xla batch-8 keystream rubato-128l", 200, || {
+                let out = exe.run(&keys, &rcs, &noises).unwrap();
+                std::hint::black_box(&out);
+            });
+            println!(
+                "{}  ({:.1} Msps batched)",
+                r.report(),
+                r.throughput(8.0 * rubato.l as f64) / 1e6
+            );
+        } else {
+            println!("(xla bench skipped: run `make artifacts`)");
+        }
+    }
+}

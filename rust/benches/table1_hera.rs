@@ -1,0 +1,28 @@
+//! Regenerates **Table I — Performance Analysis: HERA** (experiment E1).
+//!
+//! SW row: measured on this machine with the paper's protocol (1000 runs,
+//! first 250 discarded). Hardware rows: cycle-accurate simulation +
+//! calibrated frequency/power models. Paper reference values are printed
+//! alongside for comparison; see EXPERIMENTS.md for the testbed note.
+
+use presto::hw::tables::{perf_table, render_perf_table};
+use presto::params::ParamSet;
+
+fn main() {
+    let rows = perf_table(ParamSet::hera_128a(), 1000);
+    print!(
+        "{}",
+        render_perf_table("Table I — Performance Analysis: HERA", &rows)
+    );
+    println!(
+        "\npaper reference (VCU118 / i7-9700 AVX2):\n\
+         {:<18} {:>9} {:>10} {:>12} {:>10} {:>8} {:>10}\n\
+         {:<18} {:>9} {:>10} {:>12} {:>10} {:>8} {:>10}\n\
+         {:<18} {:>9} {:>10} {:>12} {:>10} {:>8} {:>10}\n\
+         {:<18} {:>9} {:>10} {:>12} {:>10} {:>8} {:>10}",
+        "SW (AVX)", 4575, 1.52, 10.5, 3000, 65, 99,
+        "D1: Baseline", 729, 13.9, 9.24, 52.6, 3.2, 43,
+        "D2: + Decoupling", 512, 2.30, 55.6, 222, 4.3, 9.9,
+        "D3: + V/FO/MRMC", 90, 0.540, 65.8, 167, 3.8, 2.1,
+    );
+}

@@ -1,0 +1,23 @@
+//! Regenerates **Table II — Performance Analysis: Rubato** (experiment E2).
+
+use presto::hw::tables::{perf_table, render_perf_table};
+use presto::params::ParamSet;
+
+fn main() {
+    let rows = perf_table(ParamSet::rubato_128l(), 1000);
+    print!(
+        "{}",
+        render_perf_table("Table II — Performance Analysis: Rubato", &rows)
+    );
+    println!(
+        "\npaper reference (VCU118 / i7-9700 AVX2):\n\
+         {:<18} {:>9} {:>10} {:>12} {:>10} {:>8} {:>10}\n\
+         {:<18} {:>9} {:>10} {:>12} {:>10} {:>8} {:>10}\n\
+         {:<18} {:>9} {:>10} {:>12} {:>10} {:>8} {:>10}\n\
+         {:<18} {:>9} {:>10} {:>12} {:>10} {:>8} {:>10}",
+        "SW (AVX)", 5430, 1.81, 33.1, 3000, 65, 120,
+        "D1: Baseline", 1478, 39.9, 12.0, 37.0, 3.4, 140,
+        "D2: + Decoupling", 800, 4.40, 109.0, 182, 4.9, 21,
+        "D3: + V/FO/MRMC", 66, 0.376, 188.0, 175, 4.1, 1.6,
+    );
+}

@@ -1,0 +1,16 @@
+//! Regenerates **Table III — Resource Utilization: HERA** (experiment E3)
+//! from the structural resource model (calibrated to the paper's Vivado
+//! utilization; see DESIGN.md's substitution table).
+
+use presto::hw::tables::render_resource_table;
+use presto::params::ParamSet;
+
+fn main() {
+    print!("{}", render_resource_table(ParamSet::hera_128a()));
+    println!(
+        "\npaper reference:\n\
+         D1: Baseline        107479   25920   16    86\n\
+         D2: + Decoupling     37672   12401   16    86\n\
+         D3: + V/FO/MRMC      48001   14846   56    86"
+    );
+}

@@ -1,0 +1,14 @@
+//! Regenerates **Table IV — Resource Utilization: Rubato** (experiment E4).
+
+use presto::hw::tables::render_resource_table;
+use presto::params::ParamSet;
+
+fn main() {
+    print!("{}", render_resource_table(ParamSet::rubato_128l()));
+    println!(
+        "\npaper reference:\n\
+         D1: Baseline        273503   83583   32    169\n\
+         D2: + Decoupling     77526   38058   32    169\n\
+         D3: + V/FO/MRMC      64510   24577   32    336.5"
+    );
+}

@@ -1,0 +1,21 @@
+//! Modular arithmetic over the cipher field Z_q.
+//!
+//! Both HERA and Rubato compute over Z_q for a 25/26-bit prime q. Every
+//! element fits in a `u32`; products fit in a `u64`. The hot path uses
+//! Barrett reduction (no division) and, for the MixColumns/MixRows matrix
+//! whose coefficients are in {1,2,3}, shift-and-add constant multiplication
+//! — the same optimization the paper uses to replace DSP multipliers with
+//! LUT logic (§IV-B).
+
+mod shiftadd;
+pub(crate) mod zq;
+
+pub use shiftadd::{mul2_raw, mul3_raw, ShiftAddMv};
+pub use zq::Zq;
+pub use zq::{mod_mul64, mod_pow64};
+
+/// A field element. Values are kept in canonical form `0 <= x < q`.
+pub type Elem = u32;
+
+/// Widened accumulator type for products of field elements.
+pub type Wide = u64;

@@ -1,0 +1,187 @@
+//! Shift-and-add constant multiplication for the mixing matrix.
+//!
+//! The MixColumns/MixRows matrix `Mv` only contains the coefficients
+//! {1, 2, 3}. The paper replaces general multipliers in the MRMC unit with
+//! shift-and-add logic (§IV-B), shrinking area and the critical path. We
+//! mirror that on the software side: `2x = x + x`, `3x = 2x + x` with lazy
+//! reduction, which is measurably faster than Barrett products and is also
+//! the form the Pallas kernel (L1) lowers to.
+
+use super::{Elem, Wide};
+use crate::arith::Zq;
+
+/// `2*x mod q` via one addition (input canonical).
+#[inline(always)]
+pub fn mul2_raw(f: &Zq, x: Elem) -> Elem {
+    f.add(x, x)
+}
+
+/// `3*x mod q` via two additions (input canonical).
+#[inline(always)]
+pub fn mul3_raw(f: &Zq, x: Elem) -> Elem {
+    f.add(f.add(x, x), x)
+}
+
+/// Shift-add evaluator for the circulant mixing matrix `Mv` of size `v`,
+/// whose first row is `(2, 3, 1, 1, ..., 1)`.
+///
+/// Row `r` of `Mv` is the first row rotated right by `r`, so
+/// `y[r] = 2*x[r] + 3*x[(r+1) % v] + sum_{j != r, r+1} x[j]`.
+/// Using the row-sum trick this is
+/// `y[r] = S + x[r] + 2*x[(r+1) % v]` where `S = sum_j x[j]` —
+/// v+2 additions per output vector instead of v multiplications, the exact
+/// arithmetic the shift-add hardware performs.
+#[derive(Debug, Clone, Copy)]
+pub struct ShiftAddMv {
+    field: Zq,
+    v: usize,
+}
+
+impl ShiftAddMv {
+    /// Evaluator for dimension `v` over field `field`.
+    pub fn new(field: Zq, v: usize) -> Self {
+        assert!(v >= 2, "mixing matrix needs v >= 2");
+        ShiftAddMv { field, v }
+    }
+
+    /// The matrix dimension v.
+    pub fn v(&self) -> usize {
+        self.v
+    }
+
+    /// The matrix entry `Mv[r][c]` (1, 2 or 3).
+    pub fn entry(&self, r: usize, c: usize) -> Elem {
+        let first_row_col = (c + self.v - r) % self.v;
+        match first_row_col {
+            0 => 2,
+            1 => 3,
+            _ => 1,
+        }
+    }
+
+    /// `y = Mv * x` for a length-v vector, shift-add form.
+    ///
+    /// Inputs must be canonical. The accumulation is done lazily in u64 and
+    /// reduced once per output element: the maximum accumulator value is
+    /// `(v + 3) * (q - 1) < 2^30` for all supported parameter sets.
+    pub fn mul_vec(&self, x: &[Elem], y: &mut [Elem]) {
+        debug_assert_eq!(x.len(), self.v);
+        debug_assert_eq!(y.len(), self.v);
+        let mut s: Wide = 0;
+        for &xi in x {
+            s += xi as Wide;
+        }
+        for r in 0..self.v {
+            let nxt = x[(r + 1) % self.v] as Wide;
+            let acc = s + x[r] as Wide + nxt + nxt;
+            y[r] = self.field.reduce(acc);
+        }
+    }
+
+    /// Naive `y = Mv * x` with explicit per-entry multiplications — the
+    /// correctness oracle for `mul_vec` and the DSP-based hardware variant.
+    pub fn mul_vec_naive(&self, x: &[Elem], y: &mut [Elem]) {
+        debug_assert_eq!(x.len(), self.v);
+        debug_assert_eq!(y.len(), self.v);
+        for r in 0..self.v {
+            let mut acc: Wide = 0;
+            for c in 0..self.v {
+                acc += self.entry(r, c) as Wide * x[c] as Wide;
+            }
+            y[r] = self.field.reduce(acc);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn matrix_entries_are_circulant() {
+        let m = ShiftAddMv::new(Zq::new(params::HERA_Q), 4);
+        // First row (2,3,1,1); each row rotates right.
+        let expect = [
+            [2, 3, 1, 1],
+            [1, 2, 3, 1],
+            [1, 1, 2, 3],
+            [3, 1, 1, 2],
+        ];
+        for r in 0..4 {
+            for c in 0..4 {
+                assert_eq!(m.entry(r, c), expect[r][c], "({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn shift_add_matches_naive_all_dims() {
+        let mut rng = SplitMix64::new(0xDEC0DE);
+        for &(q, v) in &[
+            (params::HERA_Q, 4usize),
+            (params::RUBATO_Q, 4),
+            (params::RUBATO_Q, 6),
+            (params::RUBATO_Q, 8),
+        ] {
+            let f = Zq::new(q);
+            let m = ShiftAddMv::new(f, v);
+            for _ in 0..2_000 {
+                let x: Vec<Elem> =
+                    (0..v).map(|_| (rng.next_u64() % q as u64) as Elem).collect();
+                let mut ya = vec![0; v];
+                let mut yb = vec![0; v];
+                m.mul_vec(&x, &mut ya);
+                m.mul_vec_naive(&x, &mut yb);
+                assert_eq!(ya, yb, "q={q} v={v} x={x:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn mul2_mul3_match_field_mul() {
+        let f = Zq::new(params::RUBATO_Q);
+        let mut rng = SplitMix64::new(5);
+        for _ in 0..5_000 {
+            let x = (rng.next_u64() % f.q() as u64) as Elem;
+            assert_eq!(mul2_raw(&f, x), f.mul(2, x));
+            assert_eq!(mul3_raw(&f, x), f.mul(3, x));
+        }
+    }
+
+    #[test]
+    fn mv_is_invertible() {
+        // The mixing layer must be a bijection for decryption to exist;
+        // check det(Mv) != 0 via Gaussian elimination over Z_q.
+        for &(q, v) in &[
+            (params::HERA_Q, 4usize),
+            (params::RUBATO_Q, 6),
+            (params::RUBATO_Q, 8),
+        ] {
+            let f = Zq::new(q);
+            let m = ShiftAddMv::new(f, v);
+            let mut a: Vec<Vec<Elem>> =
+                (0..v).map(|r| (0..v).map(|c| m.entry(r, c)).collect()).collect();
+            let mut det: Elem = 1;
+            for col in 0..v {
+                let piv = (col..v).find(|&r| a[r][col] != 0);
+                let piv = piv.expect("singular mixing matrix");
+                if piv != col {
+                    a.swap(piv, col);
+                    det = f.neg(det);
+                }
+                det = f.mul(det, a[col][col]);
+                let inv = f.inv(a[col][col]);
+                for r in col + 1..v {
+                    let factor = f.mul(a[r][col], inv);
+                    for c in col..v {
+                        let t = f.mul(factor, a[col][c]);
+                        a[r][c] = f.sub(a[r][c], t);
+                    }
+                }
+            }
+            assert_ne!(det, 0, "Mv singular for q={q} v={v}");
+        }
+    }
+}

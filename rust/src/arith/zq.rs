@@ -1,0 +1,310 @@
+//! The prime field Z_q with Barrett reduction.
+
+use super::{Elem, Wide};
+
+/// The field Z_q for a prime modulus `q < 2^31`.
+///
+/// Multiplication uses Barrett reduction with a precomputed reciprocal
+/// `m = floor(2^64 / q)`: for a product `r < 2^62`, the quotient estimate
+/// `hi = (r * m) >> 64` satisfies `r - hi*q < 2q`, so a single conditional
+/// subtraction canonicalizes. This keeps the keystream hot loop free of
+/// hardware division.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Zq {
+    q: Elem,
+    /// floor(2^64 / q)
+    barrett: u128,
+}
+
+impl Zq {
+    /// Create the field for modulus `q`. `q` must be an odd prime `< 2^31`;
+    /// primality is enforced in debug builds and by the parameter-set tests.
+    pub const fn new(q: Elem) -> Self {
+        assert!(q >= 3 && q < (1 << 31));
+        let barrett = (1u128 << 64) / (q as u128);
+        Zq { q, barrett }
+    }
+
+    /// The modulus q.
+    #[inline(always)]
+    pub const fn q(&self) -> Elem {
+        self.q
+    }
+
+    /// Number of bits needed to represent q-1 (the rejection-sampling width).
+    pub const fn bits(&self) -> u32 {
+        32 - (self.q - 1).leading_zeros()
+    }
+
+    /// Reduce an arbitrary u64 into canonical form.
+    #[inline(always)]
+    pub fn reduce(&self, r: Wide) -> Elem {
+        let hi = ((r as u128 * self.barrett) >> 64) as u64;
+        let mut t = r - hi * self.q as u64;
+        if t >= self.q as u64 {
+            t -= self.q as u64;
+        }
+        debug_assert!(t < self.q as u64);
+        t as Elem
+    }
+
+    /// `a + b mod q` for canonical inputs.
+    #[inline(always)]
+    pub fn add(&self, a: Elem, b: Elem) -> Elem {
+        debug_assert!(a < self.q && b < self.q);
+        let s = a + b;
+        if s >= self.q {
+            s - self.q
+        } else {
+            s
+        }
+    }
+
+    /// `a - b mod q` for canonical inputs.
+    #[inline(always)]
+    pub fn sub(&self, a: Elem, b: Elem) -> Elem {
+        debug_assert!(a < self.q && b < self.q);
+        if a >= b {
+            a - b
+        } else {
+            a + self.q - b
+        }
+    }
+
+    /// `-a mod q` for canonical input.
+    #[inline(always)]
+    pub fn neg(&self, a: Elem) -> Elem {
+        debug_assert!(a < self.q);
+        if a == 0 {
+            0
+        } else {
+            self.q - a
+        }
+    }
+
+    /// `a * b mod q` for canonical inputs (Barrett).
+    #[inline(always)]
+    pub fn mul(&self, a: Elem, b: Elem) -> Elem {
+        debug_assert!(a < self.q && b < self.q);
+        self.reduce(a as Wide * b as Wide)
+    }
+
+    /// `a^2 mod q`.
+    #[inline(always)]
+    pub fn sq(&self, a: Elem) -> Elem {
+        self.mul(a, a)
+    }
+
+    /// `a^3 mod q` — HERA's Cube S-box on one element.
+    #[inline(always)]
+    pub fn cube(&self, a: Elem) -> Elem {
+        self.mul(self.sq(a), a)
+    }
+
+    /// `a^e mod q` by square-and-multiply.
+    pub fn pow(&self, mut a: Elem, mut e: u64) -> Elem {
+        let mut acc: Elem = 1 % self.q;
+        a %= self.q;
+        while e > 0 {
+            if e & 1 == 1 {
+                acc = self.mul(acc, a);
+            }
+            a = self.mul(a, a);
+            e >>= 1;
+        }
+        acc
+    }
+
+    /// Multiplicative inverse by Fermat's little theorem (q prime).
+    pub fn inv(&self, a: Elem) -> Elem {
+        assert!(a != 0, "zero has no inverse");
+        self.pow(a, self.q as u64 - 2)
+    }
+
+    /// Map a signed integer into canonical form.
+    pub fn from_i64(&self, v: i64) -> Elem {
+        let q = self.q as i64;
+        let mut r = v % q;
+        if r < 0 {
+            r += q;
+        }
+        r as Elem
+    }
+
+    /// Centered representative in `(-q/2, q/2]`.
+    pub fn to_centered(&self, a: Elem) -> i64 {
+        debug_assert!(a < self.q);
+        if a as u64 > (self.q as u64) / 2 {
+            a as i64 - self.q as i64
+        } else {
+            a as i64
+        }
+    }
+
+    /// Deterministic Miller-Rabin primality check, used by parameter
+    /// validation (exact for all u32 inputs with these witness bases).
+    pub fn is_prime(n: u64) -> bool {
+        if n < 2 {
+            return false;
+        }
+        for p in [2u64, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37] {
+            if n % p == 0 {
+                return n == p;
+            }
+        }
+        let mut d = n - 1;
+        let mut r = 0u32;
+        while d % 2 == 0 {
+            d /= 2;
+            r += 1;
+        }
+        'witness: for a in [2u64, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37] {
+            let mut x = mod_pow64(a, d, n);
+            if x == 1 || x == n - 1 {
+                continue;
+            }
+            for _ in 0..r - 1 {
+                x = mod_mul64(x, x, n);
+                if x == n - 1 {
+                    continue 'witness;
+                }
+            }
+            return false;
+        }
+        true
+    }
+}
+
+/// `a * b mod m` without overflow for u64 operands (u128 intermediate).
+pub fn mod_mul64(a: u64, b: u64, m: u64) -> u64 {
+    ((a as u128 * b as u128) % m as u128) as u64
+}
+
+/// `a^e mod m` for u64 operands.
+pub fn mod_pow64(mut a: u64, mut e: u64, m: u64) -> u64 {
+    let mut acc = 1u64 % m;
+    a %= m;
+    while e > 0 {
+        if e & 1 == 1 {
+            acc = mod_mul64(acc, a, m);
+        }
+        a = mod_mul64(a, a, m);
+        e >>= 1;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params;
+    use crate::util::rng::SplitMix64;
+
+    fn fields() -> Vec<Zq> {
+        vec![
+            Zq::new(params::HERA_Q),
+            Zq::new(params::RUBATO_Q),
+            Zq::new(65537),
+            Zq::new(3),
+            Zq::new(7681),
+        ]
+    }
+
+    #[test]
+    fn moduli_are_prime() {
+        assert!(Zq::is_prime(params::HERA_Q as u64));
+        assert!(Zq::is_prime(params::RUBATO_Q as u64));
+        assert!(!Zq::is_prime(1));
+        assert!(!Zq::is_prime(0));
+        assert!(Zq::is_prime(2));
+        assert!(!Zq::is_prime((1 << 25) + 1)); // 33554433 = 3 * ...
+    }
+
+    #[test]
+    fn bits_width() {
+        assert_eq!(Zq::new(params::HERA_Q).bits(), 26);
+        assert_eq!(Zq::new(params::RUBATO_Q).bits(), 25);
+        assert_eq!(Zq::new(3).bits(), 2);
+    }
+
+    #[test]
+    fn barrett_matches_naive_mod() {
+        let mut rng = SplitMix64::new(0xA1CE);
+        for f in fields() {
+            for _ in 0..20_000 {
+                let a = (rng.next_u64() % f.q() as u64) as Elem;
+                let b = (rng.next_u64() % f.q() as u64) as Elem;
+                let expect = ((a as u64 * b as u64) % f.q() as u64) as Elem;
+                assert_eq!(f.mul(a, b), expect, "q={} a={} b={}", f.q(), a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_handles_large_values() {
+        for f in fields() {
+            // Largest value the cipher ever feeds reduce(): sums of a few
+            // products, bounded well below 2^62.
+            for r in [
+                0u64,
+                1,
+                f.q() as u64 - 1,
+                f.q() as u64,
+                f.q() as u64 + 1,
+                (f.q() as u64) * (f.q() as u64 - 1),
+                u32::MAX as u64 * u32::MAX as u64,
+            ] {
+                assert_eq!(f.reduce(r) as u64, r % f.q() as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn add_sub_neg_roundtrip() {
+        let mut rng = SplitMix64::new(7);
+        for f in fields() {
+            for _ in 0..5_000 {
+                let a = (rng.next_u64() % f.q() as u64) as Elem;
+                let b = (rng.next_u64() % f.q() as u64) as Elem;
+                assert_eq!(f.sub(f.add(a, b), b), a);
+                assert_eq!(f.add(a, f.neg(a)), 0);
+                assert_eq!(f.sub(0, b), f.neg(b));
+            }
+        }
+    }
+
+    #[test]
+    fn pow_and_inverse() {
+        let mut rng = SplitMix64::new(99);
+        for f in fields() {
+            // Fermat: a^(q-1) = 1
+            for _ in 0..200 {
+                let a = 1 + (rng.next_u64() % (f.q() as u64 - 1)) as Elem;
+                assert_eq!(f.pow(a, f.q() as u64 - 1), 1 % f.q());
+                assert_eq!(f.mul(a, f.inv(a)), 1 % f.q());
+            }
+        }
+    }
+
+    #[test]
+    fn cube_matches_pow() {
+        let f = Zq::new(params::HERA_Q);
+        let mut rng = SplitMix64::new(3);
+        for _ in 0..2_000 {
+            let a = (rng.next_u64() % f.q() as u64) as Elem;
+            assert_eq!(f.cube(a), f.pow(a, 3));
+        }
+    }
+
+    #[test]
+    fn centered_representation() {
+        let f = Zq::new(17);
+        assert_eq!(f.to_centered(0), 0);
+        assert_eq!(f.to_centered(8), 8);
+        assert_eq!(f.to_centered(9), -8);
+        assert_eq!(f.to_centered(16), -1);
+        assert_eq!(f.from_i64(-1), 16);
+        assert_eq!(f.from_i64(-17), 0);
+        assert_eq!(f.from_i64(35), 1);
+    }
+}

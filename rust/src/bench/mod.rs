@@ -1,0 +1,163 @@
+//! Measurement harness for `cargo bench` targets (offline substitute for
+//! criterion).
+//!
+//! Follows the paper's own software-measurement protocol (§V-A): run the
+//! function under test N times, discard the first quarter as cache warmup,
+//! and report statistics over the remainder. Adds percentiles and a simple
+//! throughput helper.
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Benchmark label.
+    pub name: String,
+    /// Per-iteration latency stats (nanoseconds).
+    pub ns: SummaryView,
+    /// Iterations measured (after warmup discard).
+    pub measured_iters: usize,
+}
+
+/// Immutable view over a [`Summary`]'s key statistics.
+#[derive(Debug, Clone, Copy)]
+pub struct SummaryView {
+    /// Mean ns.
+    pub mean: f64,
+    /// Median ns.
+    pub median: f64,
+    /// p95 ns.
+    pub p95: f64,
+    /// Minimum ns.
+    pub min: f64,
+    /// Maximum ns.
+    pub max: f64,
+    /// Standard deviation ns.
+    pub stddev: f64,
+}
+
+impl BenchResult {
+    /// Mean latency in microseconds.
+    pub fn mean_us(&self) -> f64 {
+        self.ns.mean / 1000.0
+    }
+
+    /// Throughput in "units"/second given units produced per iteration.
+    pub fn throughput(&self, units_per_iter: f64) -> f64 {
+        if self.ns.mean == 0.0 {
+            return 0.0;
+        }
+        units_per_iter * 1e9 / self.ns.mean
+    }
+
+    /// One-line human-readable summary.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<42} mean {:>10.2} µs  median {:>10.2} µs  p95 {:>10.2} µs  (n={})",
+            self.name,
+            self.ns.mean / 1e3,
+            self.ns.median / 1e3,
+            self.ns.p95 / 1e3,
+            self.measured_iters
+        )
+    }
+}
+
+/// Benchmark `f` with the paper's warmup-discard protocol.
+///
+/// `total_iters` runs are timed individually; the first quarter is
+/// discarded (the paper uses 1000 runs / 250 discarded).
+pub fn bench<F: FnMut()>(name: &str, total_iters: usize, mut f: F) -> BenchResult {
+    assert!(total_iters >= 8);
+    let warmup = total_iters / 4;
+    let mut summary = Summary::new();
+    for i in 0..total_iters {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_nanos() as f64;
+        if i >= warmup {
+            summary.push(dt);
+        }
+    }
+    finish(name, summary)
+}
+
+/// Benchmark with batched timing for very fast functions: times `batch`
+/// calls per sample to amortize clock overhead.
+pub fn bench_batched<F: FnMut()>(
+    name: &str,
+    samples: usize,
+    batch: usize,
+    mut f: F,
+) -> BenchResult {
+    assert!(samples >= 8 && batch >= 1);
+    let warmup = samples / 4;
+    let mut summary = Summary::new();
+    for i in 0..samples {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let dt = t0.elapsed().as_nanos() as f64 / batch as f64;
+        if i >= warmup {
+            summary.push(dt);
+        }
+    }
+    finish(name, summary)
+}
+
+fn finish(name: &str, mut summary: Summary) -> BenchResult {
+    let view = SummaryView {
+        mean: summary.mean(),
+        median: summary.median(),
+        p95: summary.percentile(95.0),
+        min: summary.min(),
+        max: summary.max(),
+        stddev: summary.stddev(),
+    };
+    BenchResult {
+        name: name.to_string(),
+        ns: view,
+        measured_iters: summary.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn bench_measures_a_sleep() {
+        let r = bench("sleep", 16, || std::thread::sleep(Duration::from_micros(200)));
+        assert!(r.ns.mean > 150_000.0, "mean={}", r.ns.mean);
+        assert_eq!(r.measured_iters, 12);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            ns: SummaryView {
+                mean: 1000.0,
+                median: 1000.0,
+                p95: 1000.0,
+                min: 1000.0,
+                max: 1000.0,
+                stddev: 0.0,
+            },
+            measured_iters: 1,
+        };
+        // 1 unit per 1µs iteration = 1e6 units/s.
+        assert!((r.throughput(1.0) - 1e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn batched_bench_runs() {
+        let mut count = 0u64;
+        let r = bench_batched("inc", 16, 100, || count += 1);
+        assert_eq!(count, 1600);
+        assert!(r.ns.mean >= 0.0);
+    }
+}

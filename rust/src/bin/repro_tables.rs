@@ -1,0 +1,17 @@
+//! `repro-tables` — regenerates every table and figure in the paper's
+//! evaluation section (Tables I–IV, Figures 2–3 data schedules, and the
+//! §IV/§V ablations). See DESIGN.md's per-experiment index.
+//!
+//! Usage:
+//!   repro-tables                      # everything
+//!   repro-tables --table 1            # Table I (HERA performance)
+//!   repro-tables --figure 2           # Fig. 2 RF-layer data schedules
+//!   repro-tables --ablation fifo      # FIFO-depth sweep (§IV-C)
+//!   repro-tables --summary            # HW-vs-SW headline ratios
+
+use presto::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    std::process::exit(presto::hw::tables::run_cli(&args));
+}

@@ -1,0 +1,335 @@
+//! Shared round-function components (paper §III).
+//!
+//! The intermediate state is a vector `x ∈ Z_q^n` viewed as a v×v matrix in
+//! row-major order: element (r, c) lives at flat index `r*v + c`.
+//!
+//! * `ARK(x, k, rc) = x + k ⊙ rc` — randomized key schedule.
+//! * `MixColumns(X) = Mv · X`, `MixRows(X) = X · Mvᵀ`; the fused
+//!   `MRMC(X) = Mv · X · Mvᵀ` is what the hardware's MRMC unit computes.
+//! * `Cube(x) = (x_1³, …, x_n³)` — HERA's nonlinearity.
+//! * `Feistel(x) = (x_1, x_2 + x_1², …, x_n + x_{n-1}²)` — Rubato's.
+//! * `Tr` — keep the first l elements; `AGN` — add discrete Gaussian noise.
+//!
+//! The transposition-invariance the paper's data schedule exploits —
+//! `MRMC(Xᵀ) = (MRMC(X))ᵀ` — is a theorem about these definitions and is
+//! property-tested below.
+
+use crate::arith::{Elem, ShiftAddMv, Zq};
+
+/// A v×v cipher state with its field, in row-major order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct State {
+    /// Flat row-major elements, length v*v.
+    pub x: Vec<Elem>,
+    /// Matrix dimension.
+    pub v: usize,
+}
+
+impl State {
+    /// State from a flat vector (length must be a square).
+    pub fn new(x: Vec<Elem>, v: usize) -> State {
+        assert_eq!(x.len(), v * v);
+        State { x, v }
+    }
+
+    /// Element (r, c).
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> Elem {
+        self.x[r * self.v + c]
+    }
+
+    /// Transposed copy.
+    pub fn transposed(&self) -> State {
+        let v = self.v;
+        let mut t = vec![0; v * v];
+        for r in 0..v {
+            for c in 0..v {
+                t[c * v + r] = self.x[r * v + c];
+            }
+        }
+        State { x: t, v }
+    }
+}
+
+/// Add-round-key: `x[i] + k[i] * rc[i] mod q` elementwise.
+///
+/// `rc` is the slice of round constants for this ARK application; for the
+/// final (truncated) ARK of Rubato, only the first `x.len()` constants of
+/// the state are touched, matching the paper's "l round constants for the
+/// final layer".
+pub fn ark(f: &Zq, x: &mut [Elem], k: &[Elem], rc: &[Elem]) {
+    debug_assert!(x.len() <= k.len() && x.len() <= rc.len());
+    for i in 0..x.len() {
+        x[i] = f.add(x[i], f.mul(k[i], rc[i]));
+    }
+}
+
+/// MixColumns: `Y = Mv · X` (each column of X multiplied by Mv).
+pub fn mix_columns(mv: &ShiftAddMv, state: &mut State) {
+    let v = state.v;
+    let mut col = vec![0; v];
+    let mut out = vec![0; v];
+    for c in 0..v {
+        for r in 0..v {
+            col[r] = state.x[r * v + c];
+        }
+        mv.mul_vec(&col, &mut out);
+        for r in 0..v {
+            state.x[r * v + c] = out[r];
+        }
+    }
+}
+
+/// MixRows: `Y = X · Mvᵀ` (each row of X multiplied by Mv).
+pub fn mix_rows(mv: &ShiftAddMv, state: &mut State) {
+    let v = state.v;
+    let mut out = vec![0; v];
+    for r in 0..v {
+        let row = &state.x[r * v..r * v + v];
+        mv.mul_vec(row, &mut out);
+        state.x[r * v..r * v + v].copy_from_slice(&out);
+    }
+}
+
+/// Fused MRMC: `Y = Mv · X · Mvᵀ` = MixRows(MixColumns(X)).
+///
+/// This is the single-unit form the accelerator implements; it is also the
+/// form whose transposition-invariance enables the paper's bubble-free data
+/// schedule.
+pub fn mrmc(mv: &ShiftAddMv, state: &mut State) {
+    mix_columns(mv, state);
+    mix_rows(mv, state);
+}
+
+/// Cube S-box: `x_i ← x_i³`.
+pub fn cube(f: &Zq, x: &mut [Elem]) {
+    for e in x.iter_mut() {
+        *e = f.cube(*e);
+    }
+}
+
+/// Feistel layer: `y_1 = x_1`, `y_i = x_i + x_{i-1}²` (all from the *input*
+/// values — there is no serial chain, which is what lets the hardware
+/// process a whole slice per cycle).
+pub fn feistel(f: &Zq, x: &mut [Elem]) {
+    let mut prev = x[0];
+    for i in 1..x.len() {
+        let cur = x[i];
+        x[i] = f.add(cur, f.sq(prev));
+        prev = cur;
+    }
+}
+
+/// Truncation: keep the first l elements.
+pub fn truncate(x: &[Elem], l: usize) -> Vec<Elem> {
+    assert!(l <= x.len());
+    x[..l].to_vec()
+}
+
+/// AGN: add (signed) discrete Gaussian noise elementwise.
+pub fn agn(f: &Zq, x: &mut [Elem], noise: &[i64]) {
+    debug_assert_eq!(x.len(), noise.len());
+    for (xi, &e) in x.iter_mut().zip(noise) {
+        *xi = f.add(*xi, f.from_i64(e));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params;
+    use crate::util::rng::SplitMix64;
+
+    fn rand_state(rng: &mut SplitMix64, q: u32, v: usize) -> State {
+        State::new(
+            (0..v * v).map(|_| (rng.next_u64() % q as u64) as Elem).collect(),
+            v,
+        )
+    }
+
+    #[test]
+    fn mrmc_equals_composition() {
+        let mut rng = SplitMix64::new(1);
+        for &(q, v) in &[(params::HERA_Q, 4usize), (params::RUBATO_Q, 8)] {
+            let f = Zq::new(q);
+            let mv = ShiftAddMv::new(f, v);
+            for _ in 0..200 {
+                let s0 = rand_state(&mut rng, q, v);
+                let mut a = s0.clone();
+                mrmc(&mv, &mut a);
+                let mut b = s0.clone();
+                mix_columns(&mv, &mut b);
+                mix_rows(&mv, &mut b);
+                assert_eq!(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn mrmc_transposition_invariance() {
+        // The paper's Eq. (2): MRMC(Xᵀ) = (MRMC(X))ᵀ — the property that
+        // lets the hardware stream a transposed state without stalling.
+        let mut rng = SplitMix64::new(2);
+        for &(q, v) in &[
+            (params::HERA_Q, 4usize),
+            (params::RUBATO_Q, 4),
+            (params::RUBATO_Q, 6),
+            (params::RUBATO_Q, 8),
+        ] {
+            let f = Zq::new(q);
+            let mv = ShiftAddMv::new(f, v);
+            for _ in 0..300 {
+                let s = rand_state(&mut rng, q, v);
+                let mut a = s.transposed();
+                mrmc(&mv, &mut a); // MRMC(Xᵀ)
+                let mut b = s.clone();
+                mrmc(&mv, &mut b); // MRMC(X)
+                assert_eq!(a, b.transposed(), "q={q} v={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn mix_layers_match_explicit_matmul() {
+        let q = params::RUBATO_Q;
+        let v = 6;
+        let f = Zq::new(q);
+        let mv = ShiftAddMv::new(f, v);
+        let mut rng = SplitMix64::new(3);
+        let s = rand_state(&mut rng, q, v);
+
+        // Explicit Y = Mv · X.
+        let mut expect = vec![0u32; v * v];
+        for r in 0..v {
+            for c in 0..v {
+                let mut acc: u64 = 0;
+                for i in 0..v {
+                    acc += mv.entry(r, i) as u64 * s.at(i, c) as u64;
+                }
+                expect[r * v + c] = f.reduce(acc);
+            }
+        }
+        let mut got = s.clone();
+        mix_columns(&mv, &mut got);
+        assert_eq!(got.x, expect);
+
+        // Explicit Y = X · Mvᵀ, i.e. y(r,c) = Σ_i x(r,i) · Mv[c][i].
+        let mut expect = vec![0u32; v * v];
+        for r in 0..v {
+            for c in 0..v {
+                let mut acc: u64 = 0;
+                for i in 0..v {
+                    acc += s.at(r, i) as u64 * mv.entry(c, i) as u64;
+                }
+                expect[r * v + c] = f.reduce(acc);
+            }
+        }
+        let mut got = s.clone();
+        mix_rows(&mv, &mut got);
+        assert_eq!(got.x, expect);
+    }
+
+    #[test]
+    fn ark_is_invertible_given_constants() {
+        let f = Zq::new(params::HERA_Q);
+        let mut rng = SplitMix64::new(4);
+        for _ in 0..200 {
+            let n = 16;
+            let mut x: Vec<Elem> =
+                (0..n).map(|_| (rng.next_u64() % f.q() as u64) as Elem).collect();
+            let orig = x.clone();
+            let k: Vec<Elem> =
+                (0..n).map(|_| (rng.next_u64() % f.q() as u64) as Elem).collect();
+            let rc: Vec<Elem> =
+                (0..n).map(|_| (rng.next_u64() % f.q() as u64) as Elem).collect();
+            ark(&f, &mut x, &k, &rc);
+            // Undo.
+            for i in 0..n {
+                x[i] = f.sub(x[i], f.mul(k[i], rc[i]));
+            }
+            assert_eq!(x, orig);
+        }
+    }
+
+    #[test]
+    fn feistel_uses_input_values_not_chained() {
+        let f = Zq::new(17);
+        let mut x = vec![1, 2, 3, 4];
+        feistel(&f, &mut x);
+        // y = (1, 2+1², 3+2², 4+3²) mod 17 = (1, 3, 7, 13)
+        assert_eq!(x, vec![1, 3, 7, 13]);
+    }
+
+    #[test]
+    fn feistel_is_invertible() {
+        // Inverse: x_1 = y_1, then x_i = y_i - x_{i-1}² sequentially.
+        let f = Zq::new(params::RUBATO_Q);
+        let mut rng = SplitMix64::new(5);
+        for _ in 0..200 {
+            let n = 64;
+            let x0: Vec<Elem> =
+                (0..n).map(|_| (rng.next_u64() % f.q() as u64) as Elem).collect();
+            let mut y = x0.clone();
+            feistel(&f, &mut y);
+            let mut x = vec![0; n];
+            x[0] = y[0];
+            for i in 1..n {
+                x[i] = f.sub(y[i], f.sq(x[i - 1]));
+            }
+            assert_eq!(x, x0);
+        }
+    }
+
+    #[test]
+    fn cube_is_a_permutation_when_gcd3_qm1_is_1() {
+        // For HERA's q, gcd(3, q-1) must be 1 so Cube is bijective.
+        let q = params::HERA_Q as u64;
+        assert_eq!(num_gcd(3, q - 1), 1, "Cube not bijective for this q");
+        // Spot-check bijectivity on a small sample via the inverse exponent.
+        let f = Zq::new(params::HERA_Q);
+        let inv_exp = mod_inverse_exp(3, q - 1);
+        let mut rng = SplitMix64::new(6);
+        for _ in 0..200 {
+            let x = (rng.next_u64() % q) as Elem;
+            let y = f.cube(x);
+            assert_eq!(f.pow(y, inv_exp), x);
+        }
+    }
+
+    fn num_gcd(a: u64, b: u64) -> u64 {
+        if b == 0 {
+            a
+        } else {
+            num_gcd(b, a % b)
+        }
+    }
+
+    fn mod_inverse_exp(e: u64, m: u64) -> u64 {
+        // Inverse of e mod m by extended Euclid (m = q-1 here).
+        let (mut old_r, mut r) = (e as i128, m as i128);
+        let (mut old_s, mut s) = (1i128, 0i128);
+        while r != 0 {
+            let qq = old_r / r;
+            (old_r, r) = (r, old_r - qq * r);
+            (old_s, s) = (s, old_s - qq * s);
+        }
+        (((old_s % m as i128) + m as i128) % m as i128) as u64
+    }
+
+    #[test]
+    fn truncate_and_agn() {
+        let f = Zq::new(17);
+        let x = vec![1, 2, 3, 4, 5];
+        let mut t = truncate(&x, 3);
+        assert_eq!(t, vec![1, 2, 3]);
+        agn(&f, &mut t, &[-2, 0, 16]);
+        assert_eq!(t, vec![16, 2, 2]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = SplitMix64::new(7);
+        let s = rand_state(&mut rng, params::RUBATO_Q, 8);
+        assert_eq!(s.transposed().transposed(), s);
+    }
+}

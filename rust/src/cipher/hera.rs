@@ -1,0 +1,182 @@
+//! HERA stream cipher (paper §III-A).
+//!
+//! Stream-key generation:
+//! `HERA(k) = Fin ∘ RF_{r-1} ∘ … ∘ RF_1 ∘ ARK(k)` applied to the constant
+//! initial state ic = (1, 2, …, n), with
+//! `RF  = ARK ∘ Cube ∘ MixRows ∘ MixColumns` and
+//! `Fin = ARK ∘ MixRows ∘ MixColumns ∘ Cube ∘ MixRows ∘ MixColumns`.
+//!
+//! Round constants come from the XOF keyed by (nonce, counter) through the
+//! rejection sampler; one stream key consumes (r+1)·n = 96 constants for
+//! Par-128a.
+
+use super::components::{ark, cube, mrmc, State};
+use super::{KeystreamBlock, SecretKey, StreamCipher};
+use crate::arith::ShiftAddMv;
+use crate::params::{ParamSet, Scheme};
+use crate::sampler::RejectionSampler;
+use crate::xof::XofKind;
+
+/// HERA cipher instance.
+#[derive(Debug, Clone)]
+pub struct Hera {
+    params: ParamSet,
+    xof: XofKind,
+}
+
+impl Hera {
+    /// Build for a HERA parameter set.
+    pub fn new(params: ParamSet, xof: XofKind) -> Hera {
+        assert_eq!(params.scheme, Scheme::Hera, "not a HERA parameter set");
+        Hera { params, xof }
+    }
+
+    /// The constant initial state ic = (1, 2, …, n) mod q.
+    pub fn initial_state(params: &ParamSet) -> Vec<u32> {
+        (1..=params.n as u32).map(|i| i % params.q).collect()
+    }
+
+    /// Sample all round constants for one stream key as a flat vector of
+    /// (r+1)·n values — the decoupled-RNG unit of work in the coordinator.
+    pub fn sample_round_constants(
+        &self,
+        nonce: u64,
+        counter: u64,
+    ) -> (Vec<u32>, u64) {
+        let p = &self.params;
+        let mut xof = self.xof.instantiate(nonce, counter);
+        let mut sampler = RejectionSampler::new(xof.as_mut(), p.q);
+        let mut rc = vec![0u32; p.ark_count() * p.n];
+        sampler.sample_into(&mut rc);
+        (rc, sampler.bits_consumed())
+    }
+
+    /// Keystream from pre-sampled round constants (the post-decoupling
+    /// compute phase; also the exact function the JAX model implements).
+    pub fn keystream_from_rc(&self, key: &SecretKey, rc: &[u32]) -> Vec<u32> {
+        let p = &self.params;
+        assert_eq!(key.k.len(), p.n);
+        assert_eq!(rc.len(), p.ark_count() * p.n);
+        let f = p.field();
+        let mv = ShiftAddMv::new(f, p.v);
+
+        let mut state = State::new(Self::initial_state(p), p.v);
+        let mut rc_iter = rc.chunks_exact(p.n);
+
+        // Initial ARK.
+        ark(&f, &mut state.x, &key.k, rc_iter.next().unwrap());
+
+        // r-1 intermediate rounds: RF = ARK ∘ Cube ∘ MixRows ∘ MixColumns.
+        for _ in 1..p.rounds {
+            mrmc(&mv, &mut state);
+            cube(&f, &mut state.x);
+            ark(&f, &mut state.x, &key.k, rc_iter.next().unwrap());
+        }
+
+        // Fin = ARK ∘ MixRows ∘ MixColumns ∘ Cube ∘ MixRows ∘ MixColumns.
+        mrmc(&mv, &mut state);
+        cube(&f, &mut state.x);
+        mrmc(&mv, &mut state);
+        ark(&f, &mut state.x, &key.k, rc_iter.next().unwrap());
+
+        state.x
+    }
+}
+
+impl StreamCipher for Hera {
+    fn params(&self) -> &ParamSet {
+        &self.params
+    }
+
+    fn keystream(&self, key: &SecretKey, nonce: u64, counter: u64) -> KeystreamBlock {
+        let (rc, rc_bits) = self.sample_round_constants(nonce, counter);
+        let ks = self.keystream_from_rc(key, &rc);
+        KeystreamBlock {
+            ks,
+            rc_used: rc.len(),
+            rc_bits,
+            noise_bits: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::ParamSet;
+
+    fn setup() -> (Hera, SecretKey) {
+        let p = ParamSet::hera_128a();
+        (Hera::new(p, XofKind::AesCtr), SecretKey::generate(&p, 1))
+    }
+
+    #[test]
+    fn keystream_shape_and_range() {
+        let (h, k) = setup();
+        let b = h.keystream(&k, 10, 0);
+        assert_eq!(b.ks.len(), 16);
+        assert_eq!(b.rc_used, 96);
+        assert!(b.ks.iter().all(|&x| x < h.params().q));
+        assert_eq!(b.noise_bits, 0);
+    }
+
+    #[test]
+    fn keystream_is_deterministic_and_nonce_sensitive() {
+        let (h, k) = setup();
+        assert_eq!(h.keystream(&k, 1, 2).ks, h.keystream(&k, 1, 2).ks);
+        assert_ne!(h.keystream(&k, 1, 2).ks, h.keystream(&k, 1, 3).ks);
+        assert_ne!(h.keystream(&k, 1, 2).ks, h.keystream(&k, 2, 2).ks);
+        let k2 = SecretKey::generate(h.params(), 2);
+        assert_ne!(h.keystream(&k, 1, 2).ks, h.keystream(&k2, 1, 2).ks);
+    }
+
+    #[test]
+    fn encrypt_decrypt_roundtrip() {
+        let (h, k) = setup();
+        let f = h.params().field();
+        let m: Vec<u32> = (0..16).map(|i| (i * 1000 + 7) % f.q()).collect();
+        let c = h.encrypt_block(&k, 5, 9, &m);
+        assert_ne!(c, m);
+        let d = h.decrypt_block(&k, 5, 9, &c);
+        assert_eq!(d, m);
+    }
+
+    #[test]
+    fn rc_bit_budget_is_near_theory() {
+        // 96 constants × 26 bits = 2496 ideal; with rejection acceptance
+        // q/2^26 ≈ 0.527 the expectation is ≈ 4733 bits.
+        let (h, _) = setup();
+        let (rc, bits) = h.sample_round_constants(3, 1);
+        assert_eq!(rc.len(), 96);
+        let acc = h.params().q as f64 / (1u64 << 26) as f64;
+        let expect = 96.0 * 26.0 / acc;
+        assert!(
+            (bits as f64 - expect).abs() / expect < 0.25,
+            "bits={bits} expect≈{expect}"
+        );
+    }
+
+    #[test]
+    fn shake_and_aes_xofs_give_different_streams() {
+        let p = ParamSet::hera_128a();
+        let k = SecretKey::generate(&p, 1);
+        let a = Hera::new(p, XofKind::AesCtr).keystream(&k, 1, 1);
+        let s = Hera::new(p, XofKind::Shake256).keystream(&k, 1, 1);
+        assert_ne!(a.ks, s.ks);
+    }
+
+    #[test]
+    fn keystream_from_rc_matches_keystream() {
+        let (h, k) = setup();
+        let (rc, _) = h.sample_round_constants(8, 4);
+        let direct = h.keystream(&k, 8, 4).ks;
+        let via_rc = h.keystream_from_rc(&k, &rc);
+        assert_eq!(direct, via_rc);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a HERA parameter set")]
+    fn rejects_rubato_params() {
+        Hera::new(ParamSet::rubato_128l(), XofKind::AesCtr);
+    }
+}

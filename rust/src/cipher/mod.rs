@@ -1,0 +1,131 @@
+//! The CKKS-friendly HHE symmetric ciphers: HERA and Rubato.
+//!
+//! These are the paper's workloads (§III): stream ciphers over Z_q whose
+//! decryption circuits have low multiplicative depth, making them cheap to
+//! evaluate homomorphically under FV in the RtF transciphering framework.
+//!
+//! * [`components`] — the shared round-function building blocks: ARK,
+//!   MixColumns / MixRows / fused MRMC, Cube, Feistel, Tr, AGN.
+//! * [`hera`] — HERA: `Fin ∘ RF_{r-1} ∘ … ∘ RF_1 ∘ ARK(k)` with Cube.
+//! * [`rubato`] — Rubato: `AGN ∘ Fin ∘ RF_{r-1} ∘ … ∘ RF_1 ∘ ARK(k)` with
+//!   the Feistel nonlinearity, truncation and Gaussian noise.
+//!
+//! Both ciphers are generic over the XOF ([`crate::xof::XofKind`]) and are
+//! the functional reference for the JAX model (L2), the Pallas kernel (L1)
+//! and the cycle-accurate hardware simulator — all four must produce
+//! byte-identical keystreams (enforced in `rust/tests/`).
+
+pub mod components;
+pub mod hera;
+pub mod rubato;
+
+use crate::arith::Elem;
+use crate::params::{ParamSet, Scheme};
+use crate::xof::XofKind;
+
+pub use hera::Hera;
+pub use rubato::Rubato;
+
+/// A secret key: n elements of Z_q.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SecretKey {
+    /// Key elements, canonical Z_q form.
+    pub k: Vec<Elem>,
+}
+
+impl SecretKey {
+    /// Sample a fresh key from the given XOF seed (key generation is not on
+    /// the accelerated path; any uniform source works).
+    pub fn generate(params: &ParamSet, seed: u64) -> SecretKey {
+        use crate::sampler::RejectionSampler;
+        let mut xof = XofKind::AesCtr.instantiate(seed, u64::MAX);
+        let mut s = RejectionSampler::new(xof.as_mut(), params.q);
+        let mut k = vec![0; params.n];
+        s.sample_into(&mut k);
+        SecretKey { k }
+    }
+}
+
+/// One stream-key block plus its RNG accounting, returned by keystream
+/// generation. The accounting feeds the simulator and EXPERIMENTS.md.
+#[derive(Debug, Clone)]
+pub struct KeystreamBlock {
+    /// l keystream elements.
+    pub ks: Vec<Elem>,
+    /// Round constants consumed (rounds*n + l values).
+    pub rc_used: usize,
+    /// Random bits drawn for round constants (incl. rejections).
+    pub rc_bits: u64,
+    /// Random bits drawn for AGN noise (0 for HERA).
+    pub noise_bits: u64,
+}
+
+/// Common interface of both stream ciphers.
+pub trait StreamCipher {
+    /// The parameter set this instance was built with.
+    fn params(&self) -> &ParamSet;
+
+    /// Generate the stream key for (nonce, counter).
+    fn keystream(&self, key: &SecretKey, nonce: u64, counter: u64) -> KeystreamBlock;
+
+    /// Encrypt a block of Z_q plaintext (length ≤ l): `c = m + z mod q`.
+    fn encrypt_block(
+        &self,
+        key: &SecretKey,
+        nonce: u64,
+        counter: u64,
+        m: &[Elem],
+    ) -> Vec<Elem> {
+        let f = self.params().field();
+        let z = self.keystream(key, nonce, counter);
+        assert!(m.len() <= z.ks.len(), "plaintext longer than keystream");
+        m.iter().zip(&z.ks).map(|(&mi, &zi)| f.add(mi, zi)).collect()
+    }
+
+    /// Decrypt a block: `m = c - z mod q`.
+    fn decrypt_block(
+        &self,
+        key: &SecretKey,
+        nonce: u64,
+        counter: u64,
+        c: &[Elem],
+    ) -> Vec<Elem> {
+        let f = self.params().field();
+        let z = self.keystream(key, nonce, counter);
+        assert!(c.len() <= z.ks.len(), "ciphertext longer than keystream");
+        c.iter().zip(&z.ks).map(|(&ci, &zi)| f.sub(ci, zi)).collect()
+    }
+}
+
+/// Construct the cipher named by the parameter set.
+pub fn build_cipher(params: ParamSet, xof: XofKind) -> Box<dyn StreamCipher + Send + Sync> {
+    match params.scheme {
+        Scheme::Hera => Box::new(Hera::new(params, xof)),
+        Scheme::Rubato => Box::new(Rubato::new(params, xof)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_cipher_dispatches() {
+        let h = build_cipher(ParamSet::hera_128a(), XofKind::AesCtr);
+        assert_eq!(h.params().scheme, Scheme::Hera);
+        let r = build_cipher(ParamSet::rubato_128l(), XofKind::AesCtr);
+        assert_eq!(r.params().scheme, Scheme::Rubato);
+    }
+
+    #[test]
+    fn secret_key_shape_and_determinism() {
+        let p = ParamSet::rubato_128l();
+        let a = SecretKey::generate(&p, 42);
+        let b = SecretKey::generate(&p, 42);
+        let c = SecretKey::generate(&p, 43);
+        assert_eq!(a.k.len(), 64);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert!(a.k.iter().all(|&x| x < p.q));
+    }
+}

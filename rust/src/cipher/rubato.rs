@@ -1,0 +1,209 @@
+//! Rubato stream cipher (paper §III-B).
+//!
+//! Stream-key generation:
+//! `Rubato(k) = AGN ∘ Fin ∘ RF_{r-1} ∘ … ∘ RF_1 ∘ ARK(k)` with
+//! `RF  = ARK ∘ Feistel ∘ MixRows ∘ MixColumns` and
+//! `Fin = Tr ∘ ARK ∘ MixRows ∘ MixColumns ∘ Feistel ∘ MixRows ∘ MixColumns`.
+//!
+//! Differences from HERA: the Feistel nonlinearity (lower multiplicative
+//! depth), a parametric state size n ∈ {16, 36, 64}, truncation to l
+//! elements, and additive discrete Gaussian noise. The final ARK operates
+//! on the truncated state and therefore consumes only l constants, matching
+//! the paper's count of 188 for Par-128L (64 + 64 + 60).
+
+use super::components::{agn, ark, feistel, mrmc, truncate, State};
+use super::{KeystreamBlock, SecretKey, StreamCipher};
+use crate::arith::ShiftAddMv;
+use crate::params::{ParamSet, Scheme, RUBATO_SIGMA};
+use crate::sampler::{DiscreteGaussian, RejectionSampler};
+use crate::xof::XofKind;
+
+/// Rubato cipher instance.
+#[derive(Debug, Clone)]
+pub struct Rubato {
+    params: ParamSet,
+    xof: XofKind,
+}
+
+impl Rubato {
+    /// Build for a Rubato parameter set.
+    pub fn new(params: ParamSet, xof: XofKind) -> Rubato {
+        assert_eq!(params.scheme, Scheme::Rubato, "not a Rubato parameter set");
+        Rubato { params, xof }
+    }
+
+    /// The constant initial state ic = (1, 2, …, n) mod q.
+    pub fn initial_state(params: &ParamSet) -> Vec<u32> {
+        (1..=params.n as u32).map(|i| i % params.q).collect()
+    }
+
+    /// Sample all round constants for one stream key: r·n + l values
+    /// (the final, truncated ARK needs only l). Returns (constants, bits).
+    pub fn sample_round_constants(&self, nonce: u64, counter: u64) -> (Vec<u32>, u64) {
+        let p = &self.params;
+        let mut xof = self.xof.instantiate(nonce, counter);
+        let mut sampler = RejectionSampler::new(xof.as_mut(), p.q);
+        let mut rc = vec![0u32; p.rc_count()];
+        sampler.sample_into(&mut rc);
+        (rc, sampler.bits_consumed())
+    }
+
+    /// Sample the AGN noise vector (l values). Uses a domain-separated XOF
+    /// stream (counter XOR tag) so noise and round constants are
+    /// independent — in hardware these are two consumers of the same AES
+    /// unit, modeled separately by the simulator. Returns (noise, bits).
+    pub fn sample_noise(&self, nonce: u64, counter: u64) -> (Vec<i64>, u64) {
+        let p = &self.params;
+        let mut xof = self
+            .xof
+            .instantiate(nonce ^ 0x4147_4E00, counter ^ 0x4E4F_4953_4500); // "AGN", "NOISE"
+        let mut dgd = DiscreteGaussian::new(RUBATO_SIGMA);
+        let mut noise = vec![0i64; p.l];
+        dgd.sample_into(xof.as_mut(), &mut noise);
+        (noise, dgd.bits_consumed())
+    }
+
+    /// Keystream from pre-sampled round constants and noise (the
+    /// post-decoupling compute phase; the JAX model computes exactly this).
+    pub fn keystream_from_rc(&self, key: &SecretKey, rc: &[u32], noise: &[i64]) -> Vec<u32> {
+        let p = &self.params;
+        assert_eq!(key.k.len(), p.n);
+        assert_eq!(rc.len(), p.rc_count());
+        assert_eq!(noise.len(), p.l);
+        let f = p.field();
+        let mv = ShiftAddMv::new(f, p.v);
+
+        let mut state = State::new(Self::initial_state(p), p.v);
+        let mut off = 0;
+
+        // Initial ARK (n constants).
+        ark(&f, &mut state.x, &key.k, &rc[off..off + p.n]);
+        off += p.n;
+
+        // r-1 intermediate rounds: RF = ARK ∘ Feistel ∘ MixRows ∘ MixColumns.
+        for _ in 1..p.rounds {
+            mrmc(&mv, &mut state);
+            feistel(&f, &mut state.x);
+            ark(&f, &mut state.x, &key.k, &rc[off..off + p.n]);
+            off += p.n;
+        }
+
+        // Fin = Tr ∘ ARK ∘ MixRows ∘ MixColumns ∘ Feistel ∘ MixRows ∘ MixColumns.
+        mrmc(&mv, &mut state);
+        feistel(&f, &mut state.x);
+        mrmc(&mv, &mut state);
+        let mut ks = truncate(&state.x, p.l);
+        ark(&f, &mut ks, &key.k, &rc[off..off + p.l]);
+
+        // AGN.
+        agn(&f, &mut ks, noise);
+        ks
+    }
+}
+
+impl StreamCipher for Rubato {
+    fn params(&self) -> &ParamSet {
+        &self.params
+    }
+
+    fn keystream(&self, key: &SecretKey, nonce: u64, counter: u64) -> KeystreamBlock {
+        let (rc, rc_bits) = self.sample_round_constants(nonce, counter);
+        let (noise, noise_bits) = self.sample_noise(nonce, counter);
+        let ks = self.keystream_from_rc(key, &rc, &noise);
+        KeystreamBlock {
+            ks,
+            rc_used: rc.len(),
+            rc_bits,
+            noise_bits,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::ParamSet;
+
+    fn setup(p: ParamSet) -> (Rubato, SecretKey) {
+        (Rubato::new(p, XofKind::AesCtr), SecretKey::generate(&p, 1))
+    }
+
+    #[test]
+    fn keystream_shapes_for_all_sets() {
+        for p in [
+            ParamSet::rubato_128s(),
+            ParamSet::rubato_128m(),
+            ParamSet::rubato_128l(),
+        ] {
+            let (r, k) = setup(p);
+            let b = r.keystream(&k, 1, 0);
+            assert_eq!(b.ks.len(), p.l, "{}", p.name);
+            assert_eq!(b.rc_used, p.rc_count(), "{}", p.name);
+            assert!(b.ks.iter().all(|&x| x < p.q));
+            assert!(b.noise_bits > 0);
+        }
+    }
+
+    #[test]
+    fn rc_count_is_188_for_128l() {
+        let (r, _) = setup(ParamSet::rubato_128l());
+        let (rc, _) = r.sample_round_constants(7, 7);
+        assert_eq!(rc.len(), 188);
+    }
+
+    #[test]
+    fn encrypt_decrypt_roundtrip() {
+        let p = ParamSet::rubato_128l();
+        let (r, k) = setup(p);
+        let f = p.field();
+        let m: Vec<u32> = (0..p.l as u32).map(|i| (i * 31 + 5) % f.q()).collect();
+        let c = r.encrypt_block(&k, 3, 11, &m);
+        let d = r.decrypt_block(&k, 3, 11, &c);
+        assert_eq!(d, m);
+    }
+
+    #[test]
+    fn keystream_deterministic_and_seed_sensitive() {
+        let (r, k) = setup(ParamSet::rubato_128l());
+        assert_eq!(r.keystream(&k, 4, 4).ks, r.keystream(&k, 4, 4).ks);
+        assert_ne!(r.keystream(&k, 4, 4).ks, r.keystream(&k, 4, 5).ks);
+        assert_ne!(r.keystream(&k, 4, 4).ks, r.keystream(&k, 5, 4).ks);
+    }
+
+    #[test]
+    fn noise_changes_keystream() {
+        // Same rc, zero vs sampled noise must differ (w.h.p. — σ=1.6 over
+        // 60 elements: P(all zeros) ≈ (0.25)^60, negligible).
+        let p = ParamSet::rubato_128l();
+        let (r, k) = setup(p);
+        let (rc, _) = r.sample_round_constants(9, 9);
+        let (noise, _) = r.sample_noise(9, 9);
+        let zero = vec![0i64; p.l];
+        let with_noise = r.keystream_from_rc(&k, &rc, &noise);
+        let without = r.keystream_from_rc(&k, &rc, &zero);
+        assert_ne!(with_noise, without);
+        // And the difference must be exactly the noise.
+        let f = p.field();
+        for i in 0..p.l {
+            assert_eq!(
+                f.sub(with_noise[i], without[i]),
+                f.from_i64(noise[i]),
+                "i={i}"
+            );
+        }
+    }
+
+    #[test]
+    fn from_rc_matches_direct() {
+        let (r, k) = setup(ParamSet::rubato_128m());
+        let (rc, _) = r.sample_round_constants(2, 6);
+        let (noise, _) = r.sample_noise(2, 6);
+        assert_eq!(r.keystream(&k, 2, 6).ks, r.keystream_from_rc(&k, &rc, &noise));
+    }
+
+    #[test]
+    #[should_panic(expected = "not a Rubato parameter set")]
+    fn rejects_hera_params() {
+        Rubato::new(ParamSet::hera_128a(), XofKind::AesCtr);
+    }
+}

@@ -1,0 +1,161 @@
+//! CLI subcommand implementations for the `presto` binary.
+
+use presto::cipher::{build_cipher, SecretKey};
+use presto::params::ParamSet;
+use presto::rtf::RtfCodec;
+use presto::util::cli::Args;
+use presto::xof::XofKind;
+
+/// Usage text.
+pub const USAGE: &str = "\
+presto — Presto HHE cipher acceleration reproduction
+
+USAGE:
+    presto <command> [options]
+
+COMMANDS:
+    keygen     --params <set> [--seed N]
+                 Generate a secret key (prints JSON).
+    keystream  --params <set> [--seed N] [--nonce N] [--counter N] [--blocks N] [--xof aes|shake]
+                 Generate stream-key blocks with the software cipher.
+    encrypt    --params <set> [--seed N] [--nonce N] [--counter N] --values a,b,c
+                 RtF-encode and encrypt a real-valued vector.
+    serve      --params <set> [--batch B] [--rate R] [--requests N] [--artifact PATH]
+                 Run the client-side encryption service (L3 coordinator).
+    simulate   --params <set> [--design d1|d2|d3] [--blocks N] [--trace]
+                 Run the cycle-accurate accelerator simulator.
+    tables     [--table 1|2|3|4] [--figure 2|3] [--ablation fifo|xof|mechanisms]
+                 Regenerate the paper's tables and figures (see also repro-tables).
+
+PARAMETER SETS:
+    hera-128a, rubato-128s, rubato-128m, rubato-128l
+";
+
+fn params_from(args: &Args) -> Result<ParamSet, String> {
+    let name = args.get_or("params", "rubato-128l");
+    ParamSet::by_name(name).ok_or_else(|| format!("unknown parameter set {name:?}"))
+}
+
+fn xof_from(args: &Args) -> Result<XofKind, String> {
+    match args.get_or("xof", "aes") {
+        "aes" => Ok(XofKind::AesCtr),
+        "shake" => Ok(XofKind::Shake256),
+        other => Err(format!("unknown xof {other:?} (aes|shake)")),
+    }
+}
+
+fn fail(e: impl std::fmt::Display) -> i32 {
+    eprintln!("error: {e}");
+    1
+}
+
+/// `presto keygen`
+pub fn keygen(args: &Args) -> i32 {
+    let p = match params_from(args) {
+        Ok(p) => p,
+        Err(e) => return fail(e),
+    };
+    let seed = args.parsed_or("seed", 1u64).unwrap_or(1);
+    let key = SecretKey::generate(&p, seed);
+    let ks: Vec<String> = key.k.iter().map(|k| k.to_string()).collect();
+    println!(
+        "{{\"params\":\"{}\",\"seed\":{},\"key\":[{}]}}",
+        p.name,
+        seed,
+        ks.join(",")
+    );
+    0
+}
+
+/// `presto keystream`
+pub fn keystream(args: &Args) -> i32 {
+    let p = match params_from(args) {
+        Ok(p) => p,
+        Err(e) => return fail(e),
+    };
+    let xof = match xof_from(args) {
+        Ok(x) => x,
+        Err(e) => return fail(e),
+    };
+    let seed = args.parsed_or("seed", 1u64).unwrap_or(1);
+    let nonce = args.parsed_or("nonce", 0u64).unwrap_or(0);
+    let counter = args.parsed_or("counter", 0u64).unwrap_or(0);
+    let blocks = args.parsed_or("blocks", 1u64).unwrap_or(1);
+    let cipher = build_cipher(p, xof);
+    let key = SecretKey::generate(&p, seed);
+    for b in 0..blocks {
+        let blk = cipher.keystream(&key, nonce, counter + b);
+        let ks: Vec<String> = blk.ks.iter().map(|k| k.to_string()).collect();
+        println!(
+            "{{\"counter\":{},\"rc_bits\":{},\"noise_bits\":{},\"ks\":[{}]}}",
+            counter + b,
+            blk.rc_bits,
+            blk.noise_bits,
+            ks.join(",")
+        );
+    }
+    0
+}
+
+/// `presto encrypt`
+pub fn encrypt(args: &Args) -> i32 {
+    let p = match params_from(args) {
+        Ok(p) => p,
+        Err(e) => return fail(e),
+    };
+    let xof = match xof_from(args) {
+        Ok(x) => x,
+        Err(e) => return fail(e),
+    };
+    let seed = args.parsed_or("seed", 1u64).unwrap_or(1);
+    let nonce = args.parsed_or("nonce", 0u64).unwrap_or(0);
+    let counter = args.parsed_or("counter", 0u64).unwrap_or(0);
+    let values: Vec<f64> = match args.get("values") {
+        None => return fail("encrypt requires --values a,b,c"),
+        Some(s) => match s.split(',').map(|t| t.trim().parse::<f64>()).collect() {
+            Ok(v) => v,
+            Err(e) => return fail(format!("--values: {e}")),
+        },
+    };
+    if values.len() > p.l {
+        return fail(format!(
+            "{} values exceed keystream length l={} for {}",
+            values.len(),
+            p.l,
+            p.name
+        ));
+    }
+    let codec = RtfCodec::for_params(&p);
+    let cipher = build_cipher(p, xof);
+    let key = SecretKey::generate(&p, seed);
+    let m = codec.encode_vec(&values);
+    let c = cipher.encrypt_block(&key, nonce, counter, &m);
+    let d = codec.decode_vec(&cipher.decrypt_block(&key, nonce, counter, &c));
+    let cs: Vec<String> = c.iter().map(|x| x.to_string()).collect();
+    let ds: Vec<String> = d.iter().map(|x| format!("{x:.6}")).collect();
+    println!(
+        "{{\"params\":\"{}\",\"ciphertext\":[{}],\"decrypt_check\":[{}]}}",
+        p.name,
+        cs.join(","),
+        ds.join(",")
+    );
+    0
+}
+
+/// `presto serve` — wired to the coordinator once built (see serve_impl).
+pub fn serve(args: &Args) -> i32 {
+    serve_impl(args)
+}
+
+/// `presto simulate`
+pub fn simulate(args: &Args) -> i32 {
+    simulate_impl(args)
+}
+
+/// `presto tables`
+pub fn tables(args: &Args) -> i32 {
+    tables_impl(args)
+}
+
+mod wired;
+pub use wired::{serve_impl, simulate_impl, tables_impl};

@@ -1,0 +1,124 @@
+//! Subcommands that drive the coordinator, the simulator and the table
+//! harness (split out of `commands.rs` for readability).
+
+use presto::coordinator::{BatchPolicy, EncryptServer, ServerConfig};
+use presto::hw::config::{DesignPoint, HwConfig};
+use presto::hw::engine::Simulator;
+use presto::cipher::SecretKey;
+use presto::params::ParamSet;
+use presto::util::cli::Args;
+use presto::workload::WorkloadGen;
+use presto::xof::XofKind;
+use std::time::{Duration, Instant};
+
+fn fail(e: impl std::fmt::Display) -> i32 {
+    eprintln!("error: {e}");
+    1
+}
+
+fn params_from(args: &Args) -> Result<ParamSet, String> {
+    let name = args.get_or("params", "rubato-128l");
+    ParamSet::by_name(name).ok_or_else(|| format!("unknown parameter set {name:?}"))
+}
+
+/// `presto serve` — run the encryption service against a synthetic Poisson
+/// workload and report latency/throughput.
+pub fn serve_impl(args: &Args) -> i32 {
+    let p = match params_from(args) {
+        Ok(p) => p,
+        Err(e) => return fail(e),
+    };
+    let batch = args.parsed_or("batch", 8usize).unwrap_or(8);
+    let rate = args.parsed_or("rate", 2000.0f64).unwrap_or(2000.0);
+    let requests = args.parsed_or("requests", 2000usize).unwrap_or(2000);
+    let sessions = args.parsed_or("sessions", 4u64).unwrap_or(4);
+    let artifact_dir = if args.flag("software") {
+        None
+    } else {
+        Some(args.get_or("artifact", "artifacts").to_string())
+    };
+    let cfg = ServerConfig {
+        params: p,
+        xof: XofKind::AesCtr,
+        policy: BatchPolicy {
+            batch_size: batch,
+            max_wait: Duration::from_millis(2),
+        },
+        rng_depth: args.parsed_or("rng-depth", 16usize).unwrap_or(16),
+        rng_workers: args.parsed_or("rng-workers", 2usize).unwrap_or(2),
+        sessions,
+        artifact_dir,
+    };
+    let server = match EncryptServer::start(cfg) {
+        Ok(s) => s,
+        Err(e) => return fail(e),
+    };
+    println!("serving {} ({} sessions, batch {batch})", p.name, sessions);
+
+    let mut wl = WorkloadGen::new(&p, rate, sessions, 1);
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(requests);
+    for _ in 0..requests {
+        rxs.push(server.submit(wl.next_request()));
+    }
+    for rx in rxs {
+        let _ = rx.recv();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("{}", server.metrics().snapshot().report(wall));
+    server.shutdown();
+    0
+}
+
+/// `presto simulate` — run the cycle-accurate simulator for one design.
+pub fn simulate_impl(args: &Args) -> i32 {
+    let p = match params_from(args) {
+        Ok(p) => p,
+        Err(e) => return fail(e),
+    };
+    let design = match args.get_or("design", "d3") {
+        "d1" => DesignPoint::D1Baseline,
+        "d2" => DesignPoint::D2Decoupled,
+        "d3" => DesignPoint::D3Full,
+        other => return fail(format!("unknown design {other:?} (d1|d2|d3)")),
+    };
+    let blocks = args.parsed_or("blocks", 6usize).unwrap_or(6);
+    let mut cfg = HwConfig::design(p, design);
+    if 8 % p.v != 0 && matches!(design, DesignPoint::D3Full) {
+        cfg.lanes = 1; // v=6 doesn't divide the 8-elem/cycle budget
+    }
+    if let Ok(Some(depth)) = args.get_parsed::<usize>("fifo-depth") {
+        cfg.fifo_depth = depth;
+    }
+    let sim = match Simulator::new(cfg.clone(), 500) {
+        Ok(s) => s,
+        Err(e) => return fail(e),
+    };
+    let key = SecretKey::generate(&p, 3);
+    let rep = sim.run(&key.k, blocks);
+    let freq = presto::hw::model::FreqModel::for_scheme(p.scheme).freq_mhz(&cfg);
+    let power = presto::hw::model::PowerModel::for_scheme(p.scheme).power_w(&cfg);
+    println!(
+        "{} {} — latency {} cycles ({:.3} µs @ {:.1} MHz), interval {:.1} cycles,\n\
+         throughput {:.1} Msps, power {:.2} W, fifo occupancy {}, rng demand {:.1} b/cycle",
+        p.name,
+        design.label(),
+        rep.latency_cycles,
+        rep.latency_cycles as f64 / freq,
+        freq,
+        rep.interval_cycles,
+        rep.elems_per_cycle * freq,
+        power,
+        rep.max_fifo_occupancy,
+        rep.rng_demand_bits_per_cycle,
+    );
+    if args.flag("trace") {
+        print!("{}", rep.trace.render(blocks.saturating_sub(1)));
+    }
+    0
+}
+
+/// `presto tables` — delegate to the shared table harness.
+pub fn tables_impl(args: &Args) -> i32 {
+    presto::hw::tables::run_cli(args)
+}

@@ -1,0 +1,201 @@
+//! Dynamic batcher: groups encryption requests into executor-sized lanes.
+//!
+//! The compiled keystream artifact processes a fixed batch of B lanes (the
+//! paper's 8), so the serving layer accumulates requests until either the
+//! batch is full or the oldest request has waited `max_wait` — the standard
+//! dynamic-batching policy of serving systems, applied to the client-side
+//! encryption engine.
+
+use crate::workload::Request;
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Target batch size (the executor's compiled lane count).
+    pub batch_size: usize,
+    /// Maximum time the oldest request may wait before a partial batch is
+    /// released.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            batch_size: 8,
+            max_wait: Duration::from_millis(1),
+        }
+    }
+}
+
+struct Inner {
+    queue: VecDeque<(Request, Instant)>,
+    closed: bool,
+}
+
+/// Thread-safe request accumulator.
+pub struct Batcher {
+    policy: BatchPolicy,
+    inner: Mutex<Inner>,
+    cv: Condvar,
+}
+
+impl Batcher {
+    /// New batcher with the given policy.
+    pub fn new(policy: BatchPolicy) -> Batcher {
+        assert!(policy.batch_size >= 1);
+        Batcher {
+            policy,
+            inner: Mutex::new(Inner {
+                queue: VecDeque::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// The policy in force.
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    /// Enqueue one request (never blocks; the queue is unbounded and
+    /// backpressure is applied upstream by the workload driver).
+    pub fn submit(&self, req: Request) {
+        let mut inner = self.inner.lock().unwrap();
+        assert!(!inner.closed, "submit after close");
+        inner.queue.push_back((req, Instant::now()));
+        self.cv.notify_one();
+    }
+
+    /// Signal that no more requests will arrive; pending ones still drain.
+    pub fn close(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Collect the next batch: blocks until `batch_size` requests are
+    /// queued, the oldest has waited `max_wait`, or the batcher is closed.
+    /// Returns `None` when closed and drained. Order is FIFO; requests are
+    /// never dropped or duplicated.
+    pub fn next_batch(&self) -> Option<Vec<Request>> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if inner.queue.len() >= self.policy.batch_size {
+                return Some(self.drain(&mut inner));
+            }
+            if !inner.queue.is_empty() {
+                let oldest = inner.queue.front().unwrap().1;
+                let waited = oldest.elapsed();
+                if waited >= self.policy.max_wait || inner.closed {
+                    return Some(self.drain(&mut inner));
+                }
+                let remaining = self.policy.max_wait - waited;
+                let (guard, _) = self.cv.wait_timeout(inner, remaining).unwrap();
+                inner = guard;
+            } else if inner.closed {
+                return None;
+            } else {
+                inner = self.cv.wait(inner).unwrap();
+            }
+        }
+    }
+
+    fn drain(&self, inner: &mut Inner) -> Vec<Request> {
+        let take = inner.queue.len().min(self.policy.batch_size);
+        inner.queue.drain(..take).map(|(r, _)| r).collect()
+    }
+
+    /// Current queue depth (for metrics).
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn req(id: u64) -> Request {
+        Request {
+            id,
+            session: 0,
+            arrival_s: 0.0,
+            message: vec![0.0],
+        }
+    }
+
+    #[test]
+    fn full_batch_released_immediately() {
+        let b = Batcher::new(BatchPolicy {
+            batch_size: 4,
+            max_wait: Duration::from_secs(10),
+        });
+        for i in 0..4 {
+            b.submit(req(i));
+        }
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), [0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn partial_batch_released_on_deadline() {
+        let b = Batcher::new(BatchPolicy {
+            batch_size: 8,
+            max_wait: Duration::from_millis(20),
+        });
+        b.submit(req(1));
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+    }
+
+    #[test]
+    fn close_drains_and_terminates() {
+        let b = Batcher::new(BatchPolicy {
+            batch_size: 4,
+            max_wait: Duration::from_secs(10),
+        });
+        b.submit(req(1));
+        b.submit(req(2));
+        b.close();
+        assert_eq!(b.next_batch().unwrap().len(), 2);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn no_loss_no_duplication_under_concurrency() {
+        let b = Arc::new(Batcher::new(BatchPolicy {
+            batch_size: 8,
+            max_wait: Duration::from_millis(1),
+        }));
+        let n: u64 = 2000;
+        let producer = {
+            let b = Arc::clone(&b);
+            std::thread::spawn(move || {
+                for i in 0..n {
+                    b.submit(req(i));
+                }
+                b.close();
+            })
+        };
+        let mut seen = Vec::new();
+        while let Some(batch) = b.next_batch() {
+            assert!(batch.len() <= 8);
+            seen.extend(batch.iter().map(|r| r.id));
+        }
+        producer.join().unwrap();
+        // FIFO within the stream, no loss, no duplicates.
+        assert_eq!(seen.len() as u64, n);
+        let mut sorted = seen.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len() as u64, n);
+        assert!(seen.windows(2).all(|w| w[0] < w[1]), "FIFO violated");
+    }
+}

@@ -1,0 +1,142 @@
+//! Serving metrics: counters + latency histograms, merged across threads.
+
+use crate::util::stats::LatencyHistogram;
+use std::sync::Mutex;
+
+/// Shared metrics registry.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    requests: u64,
+    batches: u64,
+    partial_batches: u64,
+    keystream_elems: u64,
+    e2e_latency: Option<LatencyHistogram>,
+    exec_latency: Option<LatencyHistogram>,
+}
+
+/// A point-in-time snapshot of the registry.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    /// Requests completed.
+    pub requests: u64,
+    /// Batches executed.
+    pub batches: u64,
+    /// Batches released before reaching full size.
+    pub partial_batches: u64,
+    /// Keystream elements produced.
+    pub keystream_elems: u64,
+    /// End-to-end request latency, mean ns.
+    pub e2e_mean_ns: f64,
+    /// End-to-end p50 upper bound, ns.
+    pub e2e_p50_ns: u64,
+    /// End-to-end p99 upper bound, ns.
+    pub e2e_p99_ns: u64,
+    /// Executor (keystream+encrypt) latency, mean ns.
+    pub exec_mean_ns: f64,
+}
+
+impl Metrics {
+    /// Fresh registry.
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// Record one executed batch.
+    pub fn record_batch(&self, size: usize, full_size: usize, elems: u64, exec_ns: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.batches += 1;
+        if size < full_size {
+            m.partial_batches += 1;
+        }
+        m.keystream_elems += elems;
+        m.exec_latency
+            .get_or_insert_with(LatencyHistogram::new)
+            .record(exec_ns);
+    }
+
+    /// Record one completed request with its end-to-end latency.
+    pub fn record_request(&self, e2e_ns: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.requests += 1;
+        m.e2e_latency
+            .get_or_insert_with(LatencyHistogram::new)
+            .record(e2e_ns);
+    }
+
+    /// Snapshot for reporting.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let m = self.inner.lock().unwrap();
+        let e2e = m.e2e_latency.clone().unwrap_or_default();
+        let exec = m.exec_latency.clone().unwrap_or_default();
+        MetricsSnapshot {
+            requests: m.requests,
+            batches: m.batches,
+            partial_batches: m.partial_batches,
+            keystream_elems: m.keystream_elems,
+            e2e_mean_ns: e2e.mean_ns(),
+            e2e_p50_ns: e2e.percentile_ns(50.0),
+            e2e_p99_ns: e2e.percentile_ns(99.0),
+            exec_mean_ns: exec.mean_ns(),
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    /// Human-readable report.
+    pub fn report(&self, wall_s: f64) -> String {
+        format!(
+            "requests        {}\n\
+             batches         {} ({} partial)\n\
+             ks elements     {}\n\
+             throughput      {:.1} req/s, {:.2} Melem/s\n\
+             e2e latency     mean {:.1} µs, p50 ≤ {:.1} µs, p99 ≤ {:.1} µs\n\
+             exec latency    mean {:.1} µs/batch",
+            self.requests,
+            self.batches,
+            self.partial_batches,
+            self.keystream_elems,
+            self.requests as f64 / wall_s.max(1e-9),
+            self.keystream_elems as f64 / wall_s.max(1e-9) / 1e6,
+            self.e2e_mean_ns / 1e3,
+            self.e2e_p50_ns as f64 / 1e3,
+            self.e2e_p99_ns as f64 / 1e3,
+            self.exec_mean_ns / 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.record_batch(8, 8, 480, 1000);
+        m.record_batch(3, 8, 180, 2000);
+        for _ in 0..11 {
+            m.record_request(5000);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.requests, 11);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.partial_batches, 1);
+        assert_eq!(s.keystream_elems, 660);
+        assert!(s.e2e_mean_ns > 0.0 && s.exec_mean_ns > 0.0);
+        assert!(s.e2e_p99_ns >= s.e2e_p50_ns);
+    }
+
+    #[test]
+    fn report_formats() {
+        let m = Metrics::new();
+        m.record_request(1500);
+        let r = m.snapshot().report(1.0);
+        assert!(r.contains("requests"));
+        assert!(r.contains("throughput"));
+    }
+}

@@ -1,0 +1,27 @@
+//! Layer-3 coordinator: the client-side encryption service.
+//!
+//! The paper's deployment scenario is an edge client encrypting
+//! real-valued data under HERA/Rubato before shipping it to an HE server.
+//! This module is that client's serving stack, structured exactly like the
+//! accelerator (and never touching Python at runtime):
+//!
+//! * [`rngpool`] — the decoupled RNG pool: worker threads running the
+//!   AES-XOF + rejection/DGD samplers, filling a bounded round-constant
+//!   queue ahead of demand — the software twin of §IV-C's RNG decoupling
+//!   (producer-consumer with a small FIFO instead of sample-then-compute).
+//! * [`batcher`] — dynamic batcher grouping encryption requests into
+//!   XLA-batch-sized lanes (the paper's 8 lanes) with a latency deadline.
+//! * [`server`] — the service: session/key registry, RtF encoding,
+//!   keystream execution (PJRT artifact or software cipher), encryptor,
+//!   and response routing.
+//! * [`metrics`] — counters and latency histograms.
+
+pub mod batcher;
+pub mod metrics;
+pub mod rngpool;
+pub mod server;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use metrics::Metrics;
+pub use rngpool::{RandomnessBundle, RngPool};
+pub use server::{EncryptServer, Engine, Response, ServerConfig};

@@ -1,0 +1,441 @@
+//! The encryption service: sessions, batching, keystream execution,
+//! encryption, response routing.
+//!
+//! Threads (all std, no async runtime available offline):
+//! * N RNG-pool producers (one pool per session) — the decoupled RNG.
+//! * One executor thread: pops batches from the [`Batcher`], pulls
+//!   randomness bundles, runs the keystream engine (PJRT artifact or the
+//!   software cipher), encrypts, and routes responses.
+//! * Callers submit requests and receive [`Response`]s over per-request
+//!   channels.
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::metrics::Metrics;
+use super::rngpool::RngPool;
+use crate::arith::Elem;
+use crate::cipher::{build_cipher, SecretKey, StreamCipher};
+use crate::params::ParamSet;
+use crate::rtf::RtfCodec;
+use crate::runtime::{KeystreamExecutable, Runtime};
+use crate::workload::Request;
+use crate::xof::XofKind;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Which engine produces keystreams.
+pub enum Engine {
+    /// Compiled JAX/Pallas artifact through PJRT (the accelerated path).
+    Xla(KeystreamExecutable),
+    /// Reference software cipher (the "SW" baseline, and the fallback when
+    /// artifacts are absent).
+    Software(Box<dyn StreamCipher + Send + Sync>),
+}
+
+impl Engine {
+    fn name(&self) -> &'static str {
+        match self {
+            Engine::Xla(_) => "xla",
+            Engine::Software(_) => "software",
+        }
+    }
+}
+
+/// Service configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Cipher parameter set.
+    pub params: ParamSet,
+    /// XOF for the RNG pool.
+    pub xof: XofKind,
+    /// Batching policy (batch_size must equal the artifact's batch).
+    pub policy: BatchPolicy,
+    /// RNG-pool prefetch depth per session (the paper's small FIFO).
+    pub rng_depth: usize,
+    /// RNG-pool worker threads per session.
+    pub rng_workers: usize,
+    /// Number of sessions (distinct client keys).
+    pub sessions: u64,
+    /// Artifact directory (None ⇒ software engine).
+    pub artifact_dir: Option<String>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            params: ParamSet::rubato_128l(),
+            xof: XofKind::AesCtr,
+            policy: BatchPolicy::default(),
+            rng_depth: 16,
+            rng_workers: 2,
+            sessions: 4,
+            artifact_dir: Some("artifacts".into()),
+        }
+    }
+}
+
+/// A completed encryption.
+#[derive(Debug, Clone)]
+pub struct Response {
+    /// Request id.
+    pub id: u64,
+    /// Session the request used.
+    pub session: u64,
+    /// (nonce, counter) identifying the keystream block — the server-side
+    /// transciphering needs these to re-derive the stream key.
+    pub nonce: u64,
+    /// Stream counter.
+    pub counter: u64,
+    /// Ciphertext elements (RtF-encoded message + keystream mod q).
+    pub ciphertext: Vec<Elem>,
+    /// End-to-end latency in nanoseconds.
+    pub latency_ns: u64,
+}
+
+struct Session {
+    key: SecretKey,
+    nonce: u64,
+    pool: RngPool,
+}
+
+/// The encryption server.
+pub struct EncryptServer {
+    cfg: ServerConfig,
+    batcher: Arc<Batcher>,
+    metrics: Arc<Metrics>,
+    codec: RtfCodec,
+    executor: Option<std::thread::JoinHandle<()>>,
+    pending: Arc<Mutex<HashMap<u64, Sender<Response>>>>,
+}
+
+impl EncryptServer {
+    /// Build the engine from configuration (XLA if an artifact directory is
+    /// configured). PJRT handles are not `Send`, so this is called *inside*
+    /// the executor thread; the engine never crosses threads.
+    fn build_engine(cfg: &ServerConfig) -> Result<Engine> {
+        if let Some(dir) = &cfg.artifact_dir {
+            let rt = Runtime::cpu()?;
+            let exe = rt
+                .load_keystream(Path::new(dir), cfg.params, cfg.policy.batch_size)
+                .with_context(|| format!("loading artifact from {dir}"))?;
+            if exe.batch() != cfg.policy.batch_size {
+                bail!(
+                    "artifact batch {} != batcher size {}",
+                    exe.batch(),
+                    cfg.policy.batch_size
+                );
+            }
+            Ok(Engine::Xla(exe))
+        } else {
+            Ok(Engine::Software(build_cipher(cfg.params, cfg.xof)))
+        }
+    }
+
+    /// Start the service (spawns RNG pools + the executor thread; the
+    /// keystream engine is constructed on the executor thread and its
+    /// startup result is awaited before returning).
+    pub fn start(cfg: ServerConfig) -> Result<EncryptServer> {
+        if cfg.sessions == 0 {
+            bail!("need at least one session");
+        }
+        let codec = RtfCodec::for_params(&cfg.params);
+        let batcher = Arc::new(Batcher::new(cfg.policy));
+        let metrics = Arc::new(Metrics::new());
+        let pending: Arc<Mutex<HashMap<u64, Sender<Response>>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+
+        // Sessions: key + decoupled RNG pool each. Session s uses nonce
+        // 1000 + s (the cross-layer convention).
+        let mut sessions: HashMap<u64, Session> = HashMap::new();
+        for s in 0..cfg.sessions {
+            let nonce = 1000 + s;
+            sessions.insert(
+                s,
+                Session {
+                    key: SecretKey::generate(&cfg.params, s + 1),
+                    nonce,
+                    pool: RngPool::start(
+                        cfg.params,
+                        cfg.xof,
+                        nonce,
+                        0,
+                        cfg.rng_depth,
+                        cfg.rng_workers,
+                    ),
+                },
+            );
+        }
+
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let executor = {
+            let batcher = Arc::clone(&batcher);
+            let metrics = Arc::clone(&metrics);
+            let pending = Arc::clone(&pending);
+            let cfg2 = cfg.clone();
+            let codec2 = codec;
+            std::thread::spawn(move || {
+                let engine = match Self::build_engine(&cfg2) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                executor_loop(cfg2, engine, sessions, batcher, metrics, pending, codec2);
+            })
+        };
+        ready_rx
+            .recv()
+            .context("executor thread died during startup")??;
+
+        Ok(EncryptServer {
+            cfg,
+            batcher,
+            metrics,
+            codec,
+            executor: Some(executor),
+            pending,
+        })
+    }
+
+    /// Submit a request; returns a receiver for its response.
+    pub fn submit(&self, req: Request) -> std::sync::mpsc::Receiver<Response> {
+        let (tx, rx) = channel();
+        self.pending.lock().unwrap().insert(req.id, tx);
+        self.batcher.submit(req);
+        rx
+    }
+
+    /// Encrypt synchronously (submit + wait).
+    pub fn encrypt(&self, req: Request) -> Response {
+        let rx = self.submit(req);
+        rx.recv().expect("server dropped response channel")
+    }
+
+    /// Metrics handle.
+    pub fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// The RtF codec in force (for decrypt checks in tests/examples).
+    pub fn codec(&self) -> RtfCodec {
+        self.codec
+    }
+
+    /// Configuration.
+    pub fn config(&self) -> &ServerConfig {
+        &self.cfg
+    }
+
+    /// Stop accepting requests, drain, and join the executor.
+    pub fn shutdown(mut self) {
+        self.batcher.close();
+        if let Some(h) = self.executor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for EncryptServer {
+    fn drop(&mut self) {
+        self.batcher.close();
+        if let Some(h) = self.executor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn executor_loop(
+    cfg: ServerConfig,
+    engine: Engine,
+    mut sessions: HashMap<u64, Session>,
+    batcher: Arc<Batcher>,
+    metrics: Arc<Metrics>,
+    pending: Arc<Mutex<HashMap<u64, Sender<Response>>>>,
+    codec: RtfCodec,
+) {
+    let p = cfg.params;
+    let f = p.field();
+    let full = cfg.policy.batch_size;
+    let _ = engine.name();
+    while let Some(batch) = batcher.next_batch() {
+        let t0 = Instant::now();
+        let arrival: Vec<Instant> = batch.iter().map(|_| t0).collect();
+
+        // Pull randomness + keys per request lane.
+        let mut keys: Vec<Vec<Elem>> = Vec::with_capacity(full);
+        let mut rcs: Vec<Vec<Elem>> = Vec::with_capacity(full);
+        let mut noises: Vec<Vec<i64>> = Vec::with_capacity(full);
+        let mut lane_meta: Vec<(u64, u64, u64)> = Vec::with_capacity(full); // (id, nonce, counter)
+        for req in &batch {
+            let sess = sessions
+                .get_mut(&req.session)
+                .expect("unknown session (workload sessions must match config)");
+            let bundle = sess.pool.next();
+            keys.push(sess.key.k.clone());
+            rcs.push(bundle.rc);
+            noises.push(bundle.noise);
+            lane_meta.push((req.id, sess.nonce, bundle.counter));
+        }
+        // Pad partial batches to the executor width by repeating lane 0
+        // (padding lanes are discarded after execution).
+        let real = batch.len();
+        while keys.len() < full {
+            keys.push(keys[0].clone());
+            rcs.push(rcs[0].clone());
+            noises.push(noises[0].clone());
+        }
+
+        let keystreams: Vec<Vec<Elem>> = match &engine {
+            Engine::Xla(exe) => {
+                let noise_arg = if p.has_noise() { &noises[..] } else { &[] };
+                exe.run(&keys, &rcs, noise_arg)
+                    .expect("keystream execution failed")
+            }
+            Engine::Software(cipher) => lane_meta
+                .iter()
+                .enumerate()
+                .map(|(i, &(_, nonce, counter))| {
+                    let key = SecretKey { k: keys[i].clone() };
+                    cipher.keystream(&key, nonce, counter).ks
+                })
+                .collect(),
+        };
+        let exec_ns = t0.elapsed().as_nanos() as u64;
+
+        // Encrypt + respond.
+        let mut elems = 0u64;
+        for (i, req) in batch.iter().enumerate() {
+            let ks = &keystreams[i];
+            let m = codec.encode_vec(&req.message);
+            assert!(m.len() <= ks.len(), "message longer than keystream");
+            let ciphertext: Vec<Elem> = m
+                .iter()
+                .zip(ks)
+                .map(|(&mi, &zi)| f.add(mi, zi))
+                .collect();
+            elems += ciphertext.len() as u64;
+            let (id, nonce, counter) = lane_meta[i];
+            let latency_ns = arrival[i].elapsed().as_nanos() as u64;
+            metrics.record_request(latency_ns);
+            let tx = pending.lock().unwrap().remove(&id);
+            if let Some(tx) = tx {
+                let _ = tx.send(Response {
+                    id,
+                    session: req.session,
+                    nonce,
+                    counter,
+                    ciphertext,
+                    latency_ns,
+                });
+            }
+        }
+        metrics.record_batch(real, full, elems, exec_ns);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::ParamSet;
+
+    fn software_server(sessions: u64) -> EncryptServer {
+        let cfg = ServerConfig {
+            params: ParamSet::rubato_128s(),
+            sessions,
+            artifact_dir: None,
+            policy: BatchPolicy {
+                batch_size: 4,
+                max_wait: std::time::Duration::from_millis(1),
+            },
+            ..ServerConfig::default()
+        };
+        EncryptServer::start(cfg).unwrap()
+    }
+
+    #[test]
+    fn bad_artifact_dir_fails_at_startup() {
+        let cfg = ServerConfig {
+            artifact_dir: Some("/nonexistent-artifacts".into()),
+            ..ServerConfig::default()
+        };
+        let err = match EncryptServer::start(cfg) {
+            Err(e) => e,
+            Ok(_) => panic!("startup should fail on a missing artifact dir"),
+        };
+        assert!(err.to_string().contains("artifact"), "{err}");
+    }
+
+    #[test]
+    fn encrypt_roundtrips_through_software_engine() {
+        let server = software_server(2);
+        let p = server.config().clone();
+        let codec = server.codec();
+        let msg = vec![1.5, -2.25, 0.0, 3.75];
+        let resp = server.encrypt(Request {
+            id: 1,
+            session: 0,
+            arrival_s: 0.0,
+            message: msg.clone(),
+        });
+        // Decrypt with the session key (nonce/counter from the response).
+        let cipher = build_cipher(p.params, p.xof);
+        let key = SecretKey::generate(&p.params, 1); // session 0 ⇒ seed 1
+        let ks = cipher.keystream(&key, resp.nonce, resp.counter).ks;
+        let f = p.params.field();
+        let decoded: Vec<f64> = resp
+            .ciphertext
+            .iter()
+            .zip(&ks)
+            .map(|(&c, &z)| codec.decode(f.sub(c, z)))
+            .collect();
+        for (a, b) in msg.iter().zip(&decoded) {
+            assert!((a - b).abs() <= codec.quantization_bound() + 1e-9, "{a} vs {b}");
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn counters_are_unique_per_session_stream() {
+        let server = software_server(1);
+        let mut counters = Vec::new();
+        for i in 0..12 {
+            let r = server.encrypt(Request {
+                id: i,
+                session: 0,
+                arrival_s: 0.0,
+                message: vec![0.5],
+            });
+            counters.push(r.counter);
+        }
+        let mut sorted = counters.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), counters.len(), "keystream reuse! {counters:?}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let server = software_server(2);
+        for i in 0..9 {
+            server.encrypt(Request {
+                id: i,
+                session: i % 2,
+                arrival_s: 0.0,
+                message: vec![0.1, 0.2],
+            });
+        }
+        let snap = server.metrics().snapshot();
+        assert_eq!(snap.requests, 9);
+        assert!(snap.batches >= 3);
+        server.shutdown();
+    }
+}

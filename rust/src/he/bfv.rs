@@ -1,0 +1,375 @@
+//! Textbook FV/BFV over a single u64 NTT modulus.
+//!
+//! Plaintext space R_t, ciphertext space R_q², Δ = floor(q/t).
+//! Implements RLWE key generation, (secret-key) encryption, decryption,
+//! homomorphic addition, plaintext multiplication, and ciphertext
+//! multiplication with base-2^w relinearization — everything the
+//! transciphering demo needs, with explicit noise-budget tracking.
+
+use super::ntt::NttContext;
+use super::poly::Poly;
+use crate::sampler::DiscreteGaussian;
+use crate::util::rng::SplitMix64;
+use crate::xof::XofKind;
+use std::sync::Arc;
+
+/// BFV parameter set.
+#[derive(Debug, Clone)]
+pub struct BfvParams {
+    /// Ring degree N (power of two).
+    pub n: usize,
+    /// Ciphertext modulus q (NTT prime, q ≡ 1 mod 2N).
+    pub q: u64,
+    /// Plaintext modulus t ≪ q.
+    pub t: u64,
+    /// Error standard deviation.
+    pub sigma: f64,
+    /// Relinearization digit width (bits).
+    pub relin_w: u32,
+}
+
+impl BfvParams {
+    /// Demo parameters: N = 2048, 59-bit q — comfortable for depth-1
+    /// circuits with small t, which is what the reduced-round
+    /// transciphering demo uses.
+    pub fn demo() -> BfvParams {
+        BfvParams {
+            n: 2048,
+            q: 576_460_752_303_439_873, // 59-bit, ≡ 1 mod 2^13
+            t: 257,
+            sigma: 3.2,
+            relin_w: 16,
+        }
+    }
+
+    /// Small test parameters (fast; N = 256).
+    pub fn test_small() -> BfvParams {
+        BfvParams {
+            n: 256,
+            q: 576_460_752_303_439_873,
+            t: 257,
+            sigma: 3.2,
+            relin_w: 16,
+        }
+    }
+
+    /// Δ = floor(q/t).
+    pub fn delta(&self) -> u64 {
+        self.q / self.t
+    }
+}
+
+/// Secret key (ternary s) with its NTT context.
+pub struct SecretKeyHe {
+    params: BfvParams,
+    ctx: Arc<NttContext>,
+    s: Poly,
+    rlk: Vec<(Poly, Poly)>,
+}
+
+/// Public handle for encryption/evaluation (here: same object; the demo
+/// uses symmetric-key RLWE encryption, which suffices for RtF where the
+/// client shares k with the server under HE).
+pub struct KeyPair {
+    /// The secret key (held by the key owner).
+    pub sk: SecretKeyHe,
+}
+
+/// A BFV ciphertext (c0, c1): decrypts as round(t/q · (c0 + c1·s)).
+#[derive(Debug, Clone)]
+pub struct Ciphertext {
+    /// Constant term.
+    pub c0: Poly,
+    /// s-coefficient term.
+    pub c1: Poly,
+}
+
+impl SecretKeyHe {
+    /// Generate a key (deterministic from seed) plus relinearization keys.
+    pub fn generate(params: BfvParams, seed: u64) -> SecretKeyHe {
+        let ctx = Arc::new(NttContext::new(params.q, params.n));
+        let mut rng = SplitMix64::new(seed);
+        let s = Poly::ternary(&ctx, &mut rng);
+        // Relinearization keys: rlk[i] = (-(a_i·s + e_i) + 2^(w·i)·s², a_i).
+        let mut dgd = DiscreteGaussian::new(params.sigma);
+        let mut xof = XofKind::AesCtr.instantiate(seed ^ 0x524C4B, 0);
+        let s2 = s.mul(&s);
+        let levels = (64 - params.q.leading_zeros()).div_ceil(params.relin_w) as usize;
+        let mut rlk = Vec::with_capacity(levels);
+        for i in 0..levels {
+            let a = Poly::uniform(&ctx, &mut rng);
+            let e = Poly::gaussian(&ctx, &mut dgd, xof.as_mut());
+            let factor =
+                crate::arith::zq::mod_pow64(2, params.relin_w as u64 * i as u64, params.q);
+            let b = a.mul(&s).add(&e).neg().add(&s2.mul_scalar(factor));
+            rlk.push((b, a));
+        }
+        SecretKeyHe {
+            params,
+            ctx,
+            s,
+            rlk,
+        }
+    }
+
+    /// Parameters.
+    pub fn params(&self) -> &BfvParams {
+        &self.params
+    }
+
+    /// NTT context (shared by all polynomials of this key).
+    pub fn ctx(&self) -> &Arc<NttContext> {
+        &self.ctx
+    }
+
+    /// Encrypt a plaintext polynomial in R_t (coefficients < t).
+    pub fn encrypt(&self, m: &[u64], rng: &mut SplitMix64) -> Ciphertext {
+        assert_eq!(m.len(), self.params.n);
+        assert!(m.iter().all(|&x| x < self.params.t));
+        let delta = self.params.delta();
+        let mut dgd = DiscreteGaussian::new(self.params.sigma);
+        let mut xof = XofKind::AesCtr.instantiate(rng.next_u64(), 1);
+        let a = Poly::uniform(&self.ctx, rng);
+        let e = Poly::gaussian(&self.ctx, &mut dgd, xof.as_mut());
+        // c0 = -(a·s) + e + Δ·m ; c1 = a.
+        let dm = Poly::from_coeffs(
+            &self.ctx,
+            &m.iter()
+                .map(|&x| ((x as u128 * delta as u128) % self.params.q as u128) as u64)
+                .collect::<Vec<_>>(),
+        );
+        let c0 = a.mul(&self.s).neg().add(&e).add(&dm);
+        Ciphertext { c0, c1: a }
+    }
+
+    /// Encrypt a scalar (constant polynomial).
+    pub fn encrypt_scalar(&self, v: u64, rng: &mut SplitMix64) -> Ciphertext {
+        let mut m = vec![0u64; self.params.n];
+        m[0] = v % self.params.t;
+        self.encrypt(&m, rng)
+    }
+
+    /// Decrypt to a plaintext polynomial in R_t.
+    pub fn decrypt(&self, ct: &Ciphertext) -> Vec<u64> {
+        let phase = ct.c0.add(&ct.c1.mul(&self.s));
+        let (q, t) = (self.params.q, self.params.t);
+        (0..self.params.n)
+            .map(|i| {
+                // round(t·phase/q) mod t on the centered representative.
+                let c = phase.centered(i);
+                let scaled = (c as i128 * t as i128 + (q / 2) as i128).div_euclid(q as i128);
+                scaled.rem_euclid(t as i128) as u64
+            })
+            .collect()
+    }
+
+    /// Decrypt coefficient 0 (scalar convention).
+    pub fn decrypt_scalar(&self, ct: &Ciphertext) -> u64 {
+        self.decrypt(ct)[0]
+    }
+
+    /// Remaining noise budget in bits: log2(q / (2t)) − log2(‖noise‖∞).
+    /// Non-positive means decryption is no longer guaranteed.
+    pub fn noise_budget_bits(&self, ct: &Ciphertext) -> f64 {
+        let phase = ct.c0.add(&ct.c1.mul(&self.s));
+        let (q, t) = (self.params.q, self.params.t);
+        let delta = self.params.delta();
+        // Noise = phase − Δ·m for the decrypted m.
+        let m = self.decrypt(ct);
+        let mut max_noise = 0i128;
+        for i in 0..self.params.n {
+            let expect = (m[i] as i128 * delta as i128).rem_euclid(q as i128);
+            let mut diff = (phase.c[i] as i128 - expect).rem_euclid(q as i128);
+            if diff > (q / 2) as i128 {
+                diff -= q as i128;
+            }
+            max_noise = max_noise.max(diff.abs());
+        }
+        let budget = (q as f64 / (2.0 * t as f64)).log2();
+        budget - (max_noise.max(1) as f64).log2()
+    }
+
+    /// Homomorphic addition.
+    pub fn add(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
+        Ciphertext {
+            c0: a.c0.add(&b.c0),
+            c1: a.c1.add(&b.c1),
+        }
+    }
+
+    /// Homomorphic subtraction.
+    pub fn sub(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
+        Ciphertext {
+            c0: a.c0.sub(&b.c0),
+            c1: a.c1.sub(&b.c1),
+        }
+    }
+
+    /// Add a plaintext scalar: ct + Δ·v.
+    pub fn add_plain_scalar(&self, a: &Ciphertext, v: u64) -> Ciphertext {
+        let delta = self.params.delta();
+        let dv = ((v % self.params.t) as u128 * delta as u128 % self.params.q as u128) as u64;
+        let mut c0 = a.c0.clone();
+        c0.c[0] = {
+            let s = c0.c[0] as u128 + dv as u128;
+            (s % self.params.q as u128) as u64
+        };
+        Ciphertext { c0, c1: a.c1.clone() }
+    }
+
+    /// Multiply by a plaintext scalar (noise grows by ~|v|).
+    pub fn mul_plain_scalar(&self, a: &Ciphertext, v: u64) -> Ciphertext {
+        let v = v % self.params.t;
+        Ciphertext {
+            c0: a.c0.mul_scalar(v),
+            c1: a.c1.mul_scalar(v),
+        }
+    }
+
+    /// Ciphertext multiplication: FV tensor (exact integer products scaled
+    /// by t/q) followed by relinearization back to two components.
+    pub fn mul(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
+        let (q, t) = (self.params.q, self.params.t);
+        let scale = |exact: Vec<i128>| -> Poly {
+            let c: Vec<u64> = exact
+                .into_iter()
+                .map(|x| {
+                    // round(t·x/q) mod q — x is an exact integer product;
+                    // t·x can exceed i128 for large t·N·q², but with
+                    // t ≤ 2^17, N ≤ 4096, q < 2^60: |x| < N·q²/4 < 2^130…
+                    // guard by splitting the multiplication.
+                    let num = x as f64 * t as f64 / q as f64;
+                    debug_assert!(num.abs() < 1.7e38);
+                    let rounded = round_t_over_q(x, t, q);
+                    let _ = num;
+                    rounded.rem_euclid(q as i128) as u64
+                })
+                .collect();
+            Poly::from_coeffs(&self.ctx, &c)
+        };
+        let e0 = scale(a.c0.mul_exact_centered(&b.c0));
+        let e1a = a.c0.mul_exact_centered(&b.c1);
+        let e1b = a.c1.mul_exact_centered(&b.c0);
+        let e1 = scale(e1a.into_iter().zip(e1b).map(|(x, y)| x + y).collect());
+        let e2 = scale(a.c1.mul_exact_centered(&b.c1));
+
+        // Relinearize e2 via the base-2^w keys.
+        let digits = e2.decompose(self.params.relin_w);
+        let mut c0 = e0;
+        let mut c1 = e1;
+        for (d, (rb, ra)) in digits.iter().zip(&self.rlk) {
+            c0 = c0.add(&rb.mul(d));
+            c1 = c1.add(&ra.mul(d));
+        }
+        Ciphertext { c0, c1 }
+    }
+}
+
+/// round(t·x/q) for i128 x with t, q < 2^60 — uses i128 splitting to avoid
+/// overflow: x = hi·q + lo with |lo| < q, so t·x/q = t·hi + t·lo/q.
+fn round_t_over_q(x: i128, t: u64, q: u64) -> i128 {
+    let qi = q as i128;
+    let ti = t as i128;
+    let hi = x.div_euclid(qi);
+    let lo = x.rem_euclid(qi); // 0 <= lo < q
+    let tail = (ti * lo + qi / 2).div_euclid(qi); // t·lo < 2^77, fits
+    ti * hi + tail
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (SecretKeyHe, SplitMix64) {
+        (
+            SecretKeyHe::generate(BfvParams::test_small(), 42),
+            SplitMix64::new(7),
+        )
+    }
+
+    #[test]
+    fn encrypt_decrypt_roundtrip() {
+        let (sk, mut rng) = setup();
+        let n = sk.params().n;
+        let t = sk.params().t;
+        let m: Vec<u64> = (0..n as u64).map(|i| (i * 31 + 5) % t).collect();
+        let ct = sk.encrypt(&m, &mut rng);
+        assert_eq!(sk.decrypt(&ct), m);
+        assert!(sk.noise_budget_bits(&ct) > 20.0);
+    }
+
+    #[test]
+    fn homomorphic_addition() {
+        let (sk, mut rng) = setup();
+        let t = sk.params().t;
+        let a = sk.encrypt_scalar(100, &mut rng);
+        let b = sk.encrypt_scalar(200, &mut rng);
+        assert_eq!(sk.decrypt_scalar(&sk.add(&a, &b)), 300 % t);
+        assert_eq!(sk.decrypt_scalar(&sk.sub(&b, &a)), 100);
+    }
+
+    #[test]
+    fn plaintext_operations() {
+        let (sk, mut rng) = setup();
+        let t = sk.params().t;
+        let a = sk.encrypt_scalar(7, &mut rng);
+        assert_eq!(sk.decrypt_scalar(&sk.add_plain_scalar(&a, 50)), 57);
+        assert_eq!(sk.decrypt_scalar(&sk.mul_plain_scalar(&a, 11)), 77 % t);
+    }
+
+    #[test]
+    fn ciphertext_multiplication_with_relin() {
+        let (sk, mut rng) = setup();
+        let t = sk.params().t;
+        for (x, y) in [(3u64, 4u64), (16, 16), (255, 2), (0, 99)] {
+            let a = sk.encrypt_scalar(x, &mut rng);
+            let b = sk.encrypt_scalar(y, &mut rng);
+            let c = sk.mul(&a, &b);
+            assert_eq!(sk.decrypt_scalar(&c), (x * y) % t, "{x}·{y}");
+            assert!(
+                sk.noise_budget_bits(&c) > 0.0,
+                "budget exhausted after one mul"
+            );
+        }
+    }
+
+    #[test]
+    fn polynomial_slots_multiply_as_negacyclic_convolution() {
+        // (1 + X) · (1 + X) = 1 + 2X + X² in R_t.
+        let (sk, mut rng) = setup();
+        let n = sk.params().n;
+        let mut m = vec![0u64; n];
+        m[0] = 1;
+        m[1] = 1;
+        let ct = sk.encrypt(&m, &mut rng);
+        let sq = sk.mul(&ct, &ct);
+        let got = sk.decrypt(&sq);
+        assert_eq!(&got[..4], &[1, 2, 1, 0]);
+    }
+
+    #[test]
+    fn noise_budget_decreases_monotonically() {
+        let (sk, mut rng) = setup();
+        let a = sk.encrypt_scalar(5, &mut rng);
+        let fresh = sk.noise_budget_bits(&a);
+        let after_add = sk.noise_budget_bits(&sk.add(&a, &a));
+        let after_mul = sk.noise_budget_bits(&sk.mul(&a, &a));
+        assert!(fresh >= after_add);
+        assert!(after_add > after_mul);
+    }
+
+    #[test]
+    fn round_t_over_q_exactness() {
+        // Against a few hand-computed cases.
+        assert_eq!(round_t_over_q(0, 257, 1001), 0);
+        assert_eq!(round_t_over_q(1001, 257, 1001), 257);
+        assert_eq!(round_t_over_q(500, 2, 1000), 1);
+        assert_eq!(round_t_over_q(-500, 2, 1000), -1);
+        // Large values: split path vs direct f64 sanity.
+        let x = 123_456_789_012_345_678_901_234_567i128;
+        let (t, q) = (257u64, 576_460_752_303_439_873u64);
+        let approx = x as f64 * t as f64 / q as f64;
+        let exact = round_t_over_q(x, t, q);
+        assert!((exact as f64 - approx).abs() / approx.abs() < 1e-9);
+    }
+}

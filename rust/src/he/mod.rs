@@ -1,0 +1,33 @@
+//! Homomorphic-encryption substrate: the server side of the RtF framework.
+//!
+//! The paper's §II background: the RtF server homomorphically evaluates the
+//! symmetric cipher's decryption under FV/BFV, then hands the result to
+//! CKKS via HalfBoot. The paper itself evaluates only the *client-side*
+//! accelerators, but a credible system needs the server path to exist, so
+//! this module implements a real (scaled-down) BFV stack:
+//!
+//! * [`ntt`] — negacyclic number-theoretic transform over u64 NTT primes.
+//! * [`poly`] — the ring R_q = Z_q[X]/(X^N + 1): NTT-based multiplication,
+//!   centered/exact tensor products for the FV scaling step, samplers.
+//! * [`bfv`] — textbook FV/BFV: RLWE keygen, encrypt/decrypt, add,
+//!   plaintext ops, ciphertext multiplication with base-2^w
+//!   relinearization, and noise-budget tracking.
+//! * [`transcipher`] — the RtF dataflow demo: a client encrypts under a
+//!   reduced-parameter stream cipher (same ARK/Mix/Feistel round structure
+//!   over Z_t), the server — holding only a BFV encryption of the
+//!   symmetric key — homomorphically derives the keystream and converts
+//!   the symmetric ciphertext into a BFV ciphertext of the message.
+//!
+//! Scale note (DESIGN.md substitution table): full-parameter HERA/Rubato
+//! transciphering needs an RNS-BFV with log Q ≳ 600 bits; this substrate
+//! uses a single ≤ 60-bit modulus, which supports the full dataflow at
+//! reduced cipher parameters (documented per demo). The algorithms are the
+//! real ones — only the moduli are small.
+
+pub mod bfv;
+pub mod ntt;
+pub mod poly;
+pub mod transcipher;
+
+pub use bfv::{BfvParams, Ciphertext, KeyPair, SecretKeyHe};
+pub use transcipher::{ToyCipher, ToyParams, TranscipherServer};

@@ -1,0 +1,250 @@
+//! Negacyclic number-theoretic transform over u64 NTT-friendly primes.
+//!
+//! For the ring R_q = Z_q[X]/(X^N + 1) with q ≡ 1 (mod 2N), multiplication
+//! is pointwise in the ψ-twisted NTT domain, where ψ is a primitive 2N-th
+//! root of unity. The transform is the standard iterative
+//! Cooley-Tukey / Gentleman-Sande pair with precomputed bit-reversed twiddles.
+
+use crate::arith::zq::{mod_mul64, mod_pow64};
+
+/// Precomputed NTT context for (q, N).
+#[derive(Debug, Clone)]
+pub struct NttContext {
+    /// Modulus (prime, q ≡ 1 mod 2N).
+    pub q: u64,
+    /// Ring degree (power of two).
+    pub n: usize,
+    /// Powers of ψ in bit-reversed order (forward twiddles).
+    psi_rev: Vec<u64>,
+    /// Powers of ψ⁻¹ in bit-reversed order (inverse twiddles).
+    psi_inv_rev: Vec<u64>,
+    /// N⁻¹ mod q.
+    n_inv: u64,
+}
+
+impl NttContext {
+    /// Build a context; finds a primitive 2N-th root of unity by random
+    /// search (deterministic seed sweep).
+    pub fn new(q: u64, n: usize) -> NttContext {
+        assert!(n.is_power_of_two(), "N must be a power of two");
+        assert_eq!((q - 1) % (2 * n as u64), 0, "q must be ≡ 1 mod 2N");
+        let psi = find_primitive_2n_root(q, n as u64);
+        let psi_inv = mod_pow64(psi, q - 2, q);
+        let bits = n.trailing_zeros();
+        let mut psi_rev = vec![0u64; n];
+        let mut psi_inv_rev = vec![0u64; n];
+        let mut p = 1u64;
+        let mut pi = 1u64;
+        let mut powers = vec![0u64; n];
+        let mut powers_inv = vec![0u64; n];
+        for i in 0..n {
+            powers[i] = p;
+            powers_inv[i] = pi;
+            p = mod_mul64(p, psi, q);
+            pi = mod_mul64(pi, psi_inv, q);
+        }
+        for i in 0..n {
+            let r = (i as u64).reverse_bits() >> (64 - bits) as u64;
+            psi_rev[i] = powers[r as usize];
+            psi_inv_rev[i] = powers_inv[r as usize];
+        }
+        let n_inv = mod_pow64(n as u64, q - 2, q);
+        NttContext {
+            q,
+            n,
+            psi_rev,
+            psi_inv_rev,
+            n_inv,
+        }
+    }
+
+    /// In-place forward negacyclic NTT (Cooley-Tukey, DIT on ψ-twisted
+    /// values; standard-order input, bit-reversed-friendly internals).
+    pub fn forward(&self, a: &mut [u64]) {
+        debug_assert_eq!(a.len(), self.n);
+        let q = self.q;
+        let mut t = self.n;
+        let mut m = 1;
+        while m < self.n {
+            t /= 2;
+            for i in 0..m {
+                let j1 = 2 * i * t;
+                let j2 = j1 + t;
+                let s = self.psi_rev[m + i];
+                for j in j1..j2 {
+                    let u = a[j];
+                    let v = mod_mul64(a[j + t], s, q);
+                    a[j] = add_mod(u, v, q);
+                    a[j + t] = sub_mod(u, v, q);
+                }
+            }
+            m *= 2;
+        }
+    }
+
+    /// In-place inverse negacyclic NTT (Gentleman-Sande).
+    pub fn inverse(&self, a: &mut [u64]) {
+        debug_assert_eq!(a.len(), self.n);
+        let q = self.q;
+        let mut t = 1;
+        let mut m = self.n;
+        while m > 1 {
+            let h = m / 2;
+            let mut j1 = 0;
+            for i in 0..h {
+                let j2 = j1 + t;
+                let s = self.psi_inv_rev[h + i];
+                for j in j1..j2 {
+                    let u = a[j];
+                    let v = a[j + t];
+                    a[j] = add_mod(u, v, q);
+                    a[j + t] = mod_mul64(sub_mod(u, v, q), s, q);
+                }
+                j1 += 2 * t;
+            }
+            t *= 2;
+            m = h;
+        }
+        for x in a.iter_mut() {
+            *x = mod_mul64(*x, self.n_inv, q);
+        }
+    }
+
+    /// Negacyclic convolution via NTT: `c = a * b mod (X^N + 1, q)`.
+    pub fn multiply(&self, a: &[u64], b: &[u64]) -> Vec<u64> {
+        let mut fa = a.to_vec();
+        let mut fb = b.to_vec();
+        self.forward(&mut fa);
+        self.forward(&mut fb);
+        for i in 0..self.n {
+            fa[i] = mod_mul64(fa[i], fb[i], self.q);
+        }
+        self.inverse(&mut fa);
+        fa
+    }
+}
+
+#[inline(always)]
+fn add_mod(a: u64, b: u64, q: u64) -> u64 {
+    let s = a + b;
+    if s >= q {
+        s - q
+    } else {
+        s
+    }
+}
+
+#[inline(always)]
+fn sub_mod(a: u64, b: u64, q: u64) -> u64 {
+    if a >= b {
+        a - b
+    } else {
+        a + q - b
+    }
+}
+
+/// Find an element of multiplicative order exactly 2N: candidate =
+/// x^((q-1)/2N) has order dividing 2N; order is exactly 2N iff
+/// candidate^N = -1.
+fn find_primitive_2n_root(q: u64, n: u64) -> u64 {
+    let exp = (q - 1) / (2 * n);
+    for x in 2u64.. {
+        let cand = mod_pow64(x, exp, q);
+        if cand != 0 && mod_pow64(cand, n, q) == q - 1 {
+            return cand;
+        }
+        assert!(x < 10_000, "no primitive 2N-th root found (q not prime?)");
+    }
+    unreachable!()
+}
+
+/// Schoolbook negacyclic convolution — O(N²) oracle for the NTT.
+pub fn negacyclic_schoolbook(a: &[u64], b: &[u64], q: u64) -> Vec<u64> {
+    let n = a.len();
+    assert_eq!(b.len(), n);
+    let mut out = vec![0u64; n];
+    for i in 0..n {
+        if a[i] == 0 {
+            continue;
+        }
+        for j in 0..n {
+            let prod = mod_mul64(a[i], b[j], q);
+            let k = i + j;
+            if k < n {
+                out[k] = add_mod(out[k], prod, q);
+            } else {
+                out[k - n] = sub_mod(out[k - n], prod, q);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    /// 59-bit NTT prime: q ≡ 1 mod 2^13 (supports N ≤ 4096).
+    pub const Q59: u64 = 576_460_752_303_439_873;
+
+    #[test]
+    fn forward_inverse_roundtrip() {
+        for n in [8usize, 64, 256, 2048] {
+            let ctx = NttContext::new(Q59, n);
+            let mut rng = SplitMix64::new(n as u64);
+            let orig: Vec<u64> = (0..n).map(|_| rng.next_u64() % Q59).collect();
+            let mut a = orig.clone();
+            ctx.forward(&mut a);
+            assert_ne!(a, orig, "forward must not be identity");
+            ctx.inverse(&mut a);
+            assert_eq!(a, orig);
+        }
+    }
+
+    #[test]
+    fn ntt_multiply_matches_schoolbook() {
+        let n = 64;
+        let ctx = NttContext::new(Q59, n);
+        let mut rng = SplitMix64::new(5);
+        for _ in 0..20 {
+            let a: Vec<u64> = (0..n).map(|_| rng.next_u64() % Q59).collect();
+            let b: Vec<u64> = (0..n).map(|_| rng.next_u64() % Q59).collect();
+            assert_eq!(ctx.multiply(&a, &b), negacyclic_schoolbook(&a, &b, Q59));
+        }
+    }
+
+    #[test]
+    fn negacyclic_wraparound_sign() {
+        // (X^(N-1)) * X = X^N = -1 mod X^N + 1.
+        let n = 8;
+        let ctx = NttContext::new(Q59, n);
+        let mut a = vec![0u64; n];
+        a[n - 1] = 1;
+        let mut b = vec![0u64; n];
+        b[1] = 1;
+        let c = ctx.multiply(&a, &b);
+        let mut expect = vec![0u64; n];
+        expect[0] = Q59 - 1; // -1
+        assert_eq!(c, expect);
+    }
+
+    #[test]
+    fn multiply_by_one_is_identity() {
+        let n = 32;
+        let ctx = NttContext::new(Q59, n);
+        let mut one = vec![0u64; n];
+        one[0] = 1;
+        let mut rng = SplitMix64::new(9);
+        let a: Vec<u64> = (0..n).map(|_| rng.next_u64() % Q59).collect();
+        assert_eq!(ctx.multiply(&a, &one), a);
+    }
+
+    #[test]
+    fn root_has_exact_order() {
+        let n = 1024u64;
+        let psi = find_primitive_2n_root(Q59, n);
+        assert_eq!(mod_pow64(psi, 2 * n, Q59), 1);
+        assert_eq!(mod_pow64(psi, n, Q59), Q59 - 1);
+    }
+}

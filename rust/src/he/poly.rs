@@ -1,0 +1,291 @@
+//! The polynomial ring R_q = Z_q[X]/(X^N + 1) with samplers and the exact
+//! (non-modular) products the FV scaling step needs.
+
+use super::ntt::NttContext;
+use crate::arith::zq::mod_mul64;
+use crate::sampler::DiscreteGaussian;
+use crate::util::rng::SplitMix64;
+use crate::xof::Xof;
+use std::sync::Arc;
+
+/// A polynomial with coefficients in canonical [0, q).
+#[derive(Debug, Clone)]
+pub struct Poly {
+    /// Coefficients, length N.
+    pub c: Vec<u64>,
+    /// Shared NTT context (carries q and N).
+    pub ctx: Arc<NttContext>,
+}
+
+impl PartialEq for Poly {
+    fn eq(&self, other: &Self) -> bool {
+        self.ctx.q == other.ctx.q && self.c == other.c
+    }
+}
+
+impl Eq for Poly {}
+
+impl Poly {
+    /// Zero polynomial.
+    pub fn zero(ctx: &Arc<NttContext>) -> Poly {
+        Poly {
+            c: vec![0; ctx.n],
+            ctx: Arc::clone(ctx),
+        }
+    }
+
+    /// Constant polynomial.
+    pub fn constant(ctx: &Arc<NttContext>, v: u64) -> Poly {
+        let mut p = Poly::zero(ctx);
+        p.c[0] = v % ctx.q;
+        p
+    }
+
+    /// From explicit coefficients (reduced mod q).
+    pub fn from_coeffs(ctx: &Arc<NttContext>, coeffs: &[u64]) -> Poly {
+        assert_eq!(coeffs.len(), ctx.n);
+        Poly {
+            c: coeffs.iter().map(|&x| x % ctx.q).collect(),
+            ctx: Arc::clone(ctx),
+        }
+    }
+
+    /// Uniformly random polynomial from a seeded PRNG.
+    pub fn uniform(ctx: &Arc<NttContext>, rng: &mut SplitMix64) -> Poly {
+        Poly {
+            c: (0..ctx.n).map(|_| rng.below(ctx.q)).collect(),
+            ctx: Arc::clone(ctx),
+        }
+    }
+
+    /// Ternary polynomial with coefficients in {-1, 0, 1} (secret keys).
+    pub fn ternary(ctx: &Arc<NttContext>, rng: &mut SplitMix64) -> Poly {
+        let q = ctx.q;
+        Poly {
+            c: (0..ctx.n)
+                .map(|_| match rng.below(3) {
+                    0 => 0,
+                    1 => 1,
+                    _ => q - 1,
+                })
+                .collect(),
+            ctx: Arc::clone(ctx),
+        }
+    }
+
+    /// Discrete-Gaussian error polynomial drawn from a XOF.
+    pub fn gaussian(ctx: &Arc<NttContext>, dgd: &mut DiscreteGaussian, xof: &mut dyn Xof) -> Poly {
+        let q = ctx.q as i64;
+        Poly {
+            c: (0..ctx.n)
+                .map(|_| {
+                    let e = dgd.sample(xof);
+                    e.rem_euclid(q) as u64
+                })
+                .collect(),
+            ctx: Arc::clone(ctx),
+        }
+    }
+
+    /// `self + other mod q`.
+    pub fn add(&self, other: &Poly) -> Poly {
+        let q = self.ctx.q;
+        Poly {
+            c: self
+                .c
+                .iter()
+                .zip(&other.c)
+                .map(|(&a, &b)| {
+                    let s = a + b;
+                    if s >= q {
+                        s - q
+                    } else {
+                        s
+                    }
+                })
+                .collect(),
+            ctx: Arc::clone(&self.ctx),
+        }
+    }
+
+    /// `self - other mod q`.
+    pub fn sub(&self, other: &Poly) -> Poly {
+        let q = self.ctx.q;
+        Poly {
+            c: self
+                .c
+                .iter()
+                .zip(&other.c)
+                .map(|(&a, &b)| if a >= b { a - b } else { a + q - b })
+                .collect(),
+            ctx: Arc::clone(&self.ctx),
+        }
+    }
+
+    /// `-self mod q`.
+    pub fn neg(&self) -> Poly {
+        let q = self.ctx.q;
+        Poly {
+            c: self.c.iter().map(|&a| if a == 0 { 0 } else { q - a }).collect(),
+            ctx: Arc::clone(&self.ctx),
+        }
+    }
+
+    /// NTT product in R_q.
+    pub fn mul(&self, other: &Poly) -> Poly {
+        Poly {
+            c: self.ctx.multiply(&self.c, &other.c),
+            ctx: Arc::clone(&self.ctx),
+        }
+    }
+
+    /// Scalar product mod q.
+    pub fn mul_scalar(&self, s: u64) -> Poly {
+        let q = self.ctx.q;
+        let s = s % q;
+        Poly {
+            c: self.c.iter().map(|&a| mod_mul64(a, s, q)).collect(),
+            ctx: Arc::clone(&self.ctx),
+        }
+    }
+
+    /// Centered representative of coefficient i in (-q/2, q/2].
+    pub fn centered(&self, i: usize) -> i64 {
+        let q = self.ctx.q;
+        let c = self.c[i];
+        if c > q / 2 {
+            c as i64 - q as i64
+        } else {
+            c as i64
+        }
+    }
+
+    /// ℓ∞ norm of the centered representation.
+    pub fn inf_norm(&self) -> u64 {
+        (0..self.ctx.n)
+            .map(|i| self.centered(i).unsigned_abs())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Exact negacyclic product over the *integers* of the centered
+    /// representations — the FV tensor step needs this before scaling by
+    /// t/q. Coefficient magnitudes are bounded by N·(q/2)² < 2^126 for
+    /// q < 2^60, N ≤ 4096, so i128 accumulation is exact.
+    pub fn mul_exact_centered(&self, other: &Poly) -> Vec<i128> {
+        let n = self.ctx.n;
+        let mut out = vec![0i128; n];
+        for i in 0..n {
+            let a = self.centered(i) as i128;
+            if a == 0 {
+                continue;
+            }
+            for j in 0..n {
+                let b = other.centered(j) as i128;
+                let k = i + j;
+                if k < n {
+                    out[k] += a * b;
+                } else {
+                    out[k - n] -= a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Decompose into base-2^w digit polynomials (for relinearization):
+    /// `self = Σ_i digits[i] · 2^(w·i)` with digit coefficients < 2^w.
+    pub fn decompose(&self, w: u32) -> Vec<Poly> {
+        let q = self.ctx.q;
+        let levels = (64 - q.leading_zeros()).div_ceil(w) as usize;
+        let mask = (1u64 << w) - 1;
+        (0..levels)
+            .map(|l| Poly {
+                c: self.c.iter().map(|&x| (x >> (w * l as u32)) & mask).collect(),
+                ctx: Arc::clone(&self.ctx),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::he::ntt::negacyclic_schoolbook;
+
+    const Q59: u64 = 576_460_752_303_439_873;
+
+    fn ctx(n: usize) -> Arc<NttContext> {
+        Arc::new(NttContext::new(Q59, n))
+    }
+
+    #[test]
+    fn ring_axioms_spot_checks() {
+        let ctx = ctx(64);
+        let mut rng = SplitMix64::new(1);
+        let a = Poly::uniform(&ctx, &mut rng);
+        let b = Poly::uniform(&ctx, &mut rng);
+        let c = Poly::uniform(&ctx, &mut rng);
+        // Commutativity and distributivity.
+        assert_eq!(a.mul(&b), b.mul(&a));
+        assert_eq!(a.mul(&b.add(&c)), a.mul(&b).add(&a.mul(&c)));
+        // Additive inverse.
+        assert_eq!(a.add(&a.neg()), Poly::zero(&ctx));
+    }
+
+    #[test]
+    fn mul_matches_schoolbook() {
+        let ctx = ctx(32);
+        let mut rng = SplitMix64::new(2);
+        let a = Poly::uniform(&ctx, &mut rng);
+        let b = Poly::uniform(&ctx, &mut rng);
+        assert_eq!(a.mul(&b).c, negacyclic_schoolbook(&a.c, &b.c, Q59));
+    }
+
+    #[test]
+    fn exact_centered_product_reduces_to_modular() {
+        let ctx = ctx(16);
+        let mut rng = SplitMix64::new(3);
+        let a = Poly::uniform(&ctx, &mut rng);
+        let b = Poly::uniform(&ctx, &mut rng);
+        let exact = a.mul_exact_centered(&b);
+        let modular = a.mul(&b);
+        for i in 0..16 {
+            let red = exact[i].rem_euclid(Q59 as i128) as u64;
+            assert_eq!(red, modular.c[i], "coeff {i}");
+        }
+    }
+
+    #[test]
+    fn decompose_recomposes() {
+        let ctx = ctx(16);
+        let mut rng = SplitMix64::new(4);
+        let a = Poly::uniform(&ctx, &mut rng);
+        let w = 16;
+        let digits = a.decompose(w);
+        let mut acc = Poly::zero(&ctx);
+        for (l, d) in digits.iter().enumerate() {
+            // 2^(w·l) mod q
+            let factor = crate::arith::zq::mod_pow64(2, (w as u64) * l as u64, Q59);
+            acc = acc.add(&d.mul_scalar(factor));
+        }
+        assert_eq!(acc, a);
+        // Digits are small.
+        for d in &digits {
+            assert!(d.c.iter().all(|&x| x < (1 << w)));
+        }
+    }
+
+    #[test]
+    fn samplers_have_expected_shapes() {
+        let ctx = ctx(256);
+        let mut rng = SplitMix64::new(5);
+        let t = Poly::ternary(&ctx, &mut rng);
+        assert!(t.c.iter().all(|&x| x == 0 || x == 1 || x == Q59 - 1));
+        assert!(t.inf_norm() <= 1);
+        let mut dgd = DiscreteGaussian::new(3.2);
+        let mut xof = crate::xof::XofKind::AesCtr.instantiate(1, 1);
+        let e = Poly::gaussian(&ctx, &mut dgd, xof.as_mut());
+        assert!(e.inf_norm() < 64, "gaussian norm {}", e.inf_norm());
+    }
+}

@@ -1,0 +1,314 @@
+//! RtF transciphering demo: symmetric ciphertext → BFV ciphertext.
+//!
+//! Dataflow (paper §II): the client symmetric-encrypts its data with an
+//! HE-friendly stream cipher and ships the small ciphertext; the server —
+//! holding only a *BFV encryption of the symmetric key* — homomorphically
+//! evaluates the keystream and subtracts it, obtaining a BFV encryption of
+//! the message without ever seeing key or plaintext.
+//!
+//! Scale: the toy cipher runs over Z_t with the same round structure as
+//! Rubato (ARK with XOF round constants, circulant MixColumns/MixRows,
+//! Feistel) but reduced parameters (n = 4, r = 1) so the homomorphic
+//! evaluation fits a single-modulus BFV at depth 1. Full Par-128
+//! transciphering needs log Q ≳ 600 (RNS) — see DESIGN.md.
+
+use super::bfv::{Ciphertext, SecretKeyHe};
+use crate::sampler::RejectionSampler;
+use crate::util::rng::SplitMix64;
+use crate::xof::XofKind;
+
+/// Toy cipher parameters (state n = v², r rounds, over the BFV plaintext
+/// modulus t).
+#[derive(Debug, Clone, Copy)]
+pub struct ToyParams {
+    /// State size (v²).
+    pub n: usize,
+    /// Matrix dimension.
+    pub v: usize,
+    /// Rounds (1 ⇒ depth-1 homomorphic evaluation: one Feistel layer).
+    pub rounds: usize,
+    /// Field modulus = BFV plaintext modulus t.
+    pub t: u64,
+}
+
+impl ToyParams {
+    /// Default demo: n = 4 (2×2 state), r = 1, t = 257.
+    pub fn demo() -> ToyParams {
+        ToyParams {
+            n: 4,
+            v: 2,
+            rounds: 1,
+            t: 257,
+        }
+    }
+}
+
+/// The toy stream cipher (client side, plaintext arithmetic over Z_t).
+///
+/// Keystream = Feistel(MixRows(MixColumns(ARK(ic, k, rc)))) + ARK final —
+/// i.e. `ARK_out ∘ Feistel ∘ MR ∘ MC ∘ ARK_in` per block, with round
+/// constants from the AES XOF (nonce, counter) exactly like the full
+/// ciphers.
+#[derive(Debug, Clone)]
+pub struct ToyCipher {
+    /// Parameters.
+    pub params: ToyParams,
+}
+
+impl ToyCipher {
+    /// New cipher instance.
+    pub fn new(params: ToyParams) -> ToyCipher {
+        assert_eq!(params.v * params.v, params.n);
+        assert!(params.rounds == 1, "demo supports r = 1 (depth-1 HE)");
+        ToyCipher { params }
+    }
+
+    /// Round constants for one block: 2·n values (input + output ARK).
+    pub fn round_constants(&self, nonce: u64, counter: u64) -> Vec<u64> {
+        let mut xof = XofKind::AesCtr.instantiate(nonce, counter);
+        let mut sampler = RejectionSampler::new(xof.as_mut(), self.params.t as u32);
+        let mut rc = vec![0u32; 2 * self.params.n];
+        sampler.sample_into(&mut rc);
+        rc.into_iter().map(|x| x as u64).collect()
+    }
+
+    /// The circulant Mv entry (first row 2,3,1,…,1) for this v.
+    fn mv_entry(&self, r: usize, c: usize) -> u64 {
+        match (c + self.params.v - r) % self.params.v {
+            0 => 2,
+            1 => 3,
+            _ => 1,
+        }
+    }
+
+    /// Plaintext keystream (the reference the HE evaluation must match).
+    pub fn keystream(&self, key: &[u64], nonce: u64, counter: u64) -> Vec<u64> {
+        let p = &self.params;
+        let t = p.t;
+        assert_eq!(key.len(), p.n);
+        let rc = self.round_constants(nonce, counter);
+        // ic = (1..n), ARK_in.
+        let mut x: Vec<u64> = (0..p.n)
+            .map(|i| ((i as u64 + 1) + key[i] * rc[i]) % t)
+            .collect();
+        // MixColumns then MixRows.
+        x = self.mix(&x, true);
+        x = self.mix(&x, false);
+        // Feistel.
+        let mut y = x.clone();
+        for i in 1..p.n {
+            y[i] = (x[i] + x[i - 1] * x[i - 1]) % t;
+        }
+        // ARK_out.
+        (0..p.n)
+            .map(|i| (y[i] + key[i] * rc[p.n + i]) % t)
+            .collect()
+    }
+
+    fn mix(&self, x: &[u64], columns: bool) -> Vec<u64> {
+        let (v, t) = (self.params.v, self.params.t);
+        let mut out = vec![0u64; self.params.n];
+        for r in 0..v {
+            for c in 0..v {
+                let mut acc = 0u64;
+                for i in 0..v {
+                    let (coeff, val) = if columns {
+                        (self.mv_entry(r, i), x[i * v + c])
+                    } else {
+                        (self.mv_entry(c, i), x[r * v + i])
+                    };
+                    acc = (acc + coeff * val) % t;
+                }
+                out[r * v + c] = acc;
+            }
+        }
+        out
+    }
+
+    /// Encrypt a message block (elements of Z_t).
+    pub fn encrypt(&self, key: &[u64], nonce: u64, counter: u64, m: &[u64]) -> Vec<u64> {
+        let z = self.keystream(key, nonce, counter);
+        m.iter().zip(&z).map(|(&mi, &zi)| (mi + zi) % self.params.t).collect()
+    }
+}
+
+/// The RtF server: holds BFV encryptions of the symmetric key elements and
+/// transciphers incoming symmetric ciphertexts into BFV ciphertexts.
+pub struct TranscipherServer<'a> {
+    cipher: ToyCipher,
+    he: &'a SecretKeyHe,
+    /// BFV encryptions of the symmetric key elements k_1..k_n.
+    enc_key: Vec<Ciphertext>,
+}
+
+impl<'a> TranscipherServer<'a> {
+    /// Set up: the client BFV-encrypts its symmetric key once (the "key
+    /// upload" of the RtF protocol).
+    pub fn setup(
+        cipher: ToyCipher,
+        he: &'a SecretKeyHe,
+        sym_key: &[u64],
+        rng: &mut SplitMix64,
+    ) -> TranscipherServer<'a> {
+        assert_eq!(he.params().t, cipher.params.t, "t mismatch");
+        let enc_key = sym_key
+            .iter()
+            .map(|&k| he.encrypt_scalar(k, rng))
+            .collect();
+        TranscipherServer {
+            cipher,
+            he,
+            enc_key,
+        }
+    }
+
+    /// Homomorphically evaluate the keystream for (nonce, counter):
+    /// every step of [`ToyCipher::keystream`] on encrypted key material.
+    /// Multiplicative depth: 1 (the Feistel square of a linear function of
+    /// the encrypted key).
+    pub fn homomorphic_keystream(&self, nonce: u64, counter: u64) -> Vec<Ciphertext> {
+        let p = &self.cipher.params;
+        let he = self.he;
+        let rc = self.cipher.round_constants(nonce, counter);
+
+        // ARK_in: Enc(ic_i + k_i·rc_i) — plaintext ops on Enc(k_i).
+        let mut x: Vec<Ciphertext> = (0..p.n)
+            .map(|i| {
+                let kr = he.mul_plain_scalar(&self.enc_key[i], rc[i]);
+                he.add_plain_scalar(&kr, i as u64 + 1)
+            })
+            .collect();
+
+        // MixColumns, MixRows: linear with small plaintext coefficients.
+        x = self.hom_mix(&x, true);
+        x = self.hom_mix(&x, false);
+
+        // Feistel: y_i = x_i + x_{i-1}² — the one ciphertext multiply.
+        let mut y = Vec::with_capacity(p.n);
+        y.push(x[0].clone());
+        for i in 1..p.n {
+            let sq = he.mul(&x[i - 1], &x[i - 1]);
+            y.push(he.add(&x[i], &sq));
+        }
+
+        // ARK_out.
+        (0..p.n)
+            .map(|i| {
+                let kr = he.mul_plain_scalar(&self.enc_key[i], rc[p.n + i]);
+                he.add(&y[i], &kr)
+            })
+            .collect()
+    }
+
+    /// Transcipher: symmetric ciphertext → BFV ciphertext of the message
+    /// (`Enc(m) = Enc(c − z) = c − Enc(z)` with plaintext c).
+    pub fn transcipher(
+        &self,
+        sym_ct: &[u64],
+        nonce: u64,
+        counter: u64,
+    ) -> Vec<Ciphertext> {
+        let z = self.homomorphic_keystream(nonce, counter);
+        sym_ct
+            .iter()
+            .zip(&z)
+            .map(|(&c, zi)| {
+                // Enc(c) − Enc(z): add plaintext c to −Enc(z).
+                let neg_z = Ciphertext {
+                    c0: zi.c0.neg(),
+                    c1: zi.c1.neg(),
+                };
+                self.he.add_plain_scalar(&neg_z, c)
+            })
+            .collect()
+    }
+
+    fn hom_mix(&self, x: &[Ciphertext], columns: bool) -> Vec<Ciphertext> {
+        let p = &self.cipher.params;
+        let he = self.he;
+        let v = p.v;
+        let mut out = Vec::with_capacity(p.n);
+        for r in 0..v {
+            for c in 0..v {
+                let mut acc: Option<Ciphertext> = None;
+                for i in 0..v {
+                    let (coeff, val) = if columns {
+                        (self.cipher.mv_entry(r, i), &x[i * v + c])
+                    } else {
+                        (self.cipher.mv_entry(c, i), &x[r * v + i])
+                    };
+                    let term = he.mul_plain_scalar(val, coeff);
+                    acc = Some(match acc {
+                        None => term,
+                        Some(a) => he.add(&a, &term),
+                    });
+                }
+                out.push(acc.unwrap());
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::he::bfv::BfvParams;
+
+    fn setup() -> (ToyCipher, SecretKeyHe, Vec<u64>, SplitMix64) {
+        let cipher = ToyCipher::new(ToyParams::demo());
+        let he = SecretKeyHe::generate(BfvParams::test_small(), 5);
+        let mut rng = SplitMix64::new(9);
+        let key: Vec<u64> = (0..cipher.params.n as u64)
+            .map(|_| rng.below(cipher.params.t))
+            .collect();
+        (cipher, he, key, rng)
+    }
+
+    #[test]
+    fn toy_cipher_roundtrip() {
+        let (cipher, _, key, _) = setup();
+        let t = cipher.params.t;
+        let m = vec![10u64, 200, 0, 137];
+        let c = cipher.encrypt(&key, 3, 7, &m);
+        let z = cipher.keystream(&key, 3, 7);
+        let d: Vec<u64> = c.iter().zip(&z).map(|(&ci, &zi)| (ci + t - zi) % t).collect();
+        assert_eq!(d, m);
+    }
+
+    #[test]
+    fn homomorphic_keystream_matches_plaintext() {
+        let (cipher, he, key, mut rng) = setup();
+        let server = TranscipherServer::setup(cipher.clone(), &he, &key, &mut rng);
+        let expect = cipher.keystream(&key, 11, 4);
+        let got: Vec<u64> = server
+            .homomorphic_keystream(11, 4)
+            .iter()
+            .map(|ct| he.decrypt_scalar(ct))
+            .collect();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn transcipher_end_to_end() {
+        let (cipher, he, key, mut rng) = setup();
+        let server = TranscipherServer::setup(cipher.clone(), &he, &key, &mut rng);
+        let m = vec![42u64, 17, 255, 100];
+        let sym_ct = cipher.encrypt(&key, 2, 9, &m);
+        // Server never sees key or m; output decrypts (with the HE secret
+        // key, held by the data owner) to m.
+        let he_cts = server.transcipher(&sym_ct, 2, 9);
+        let got: Vec<u64> = he_cts.iter().map(|ct| he.decrypt_scalar(ct)).collect();
+        assert_eq!(got, m);
+        // Noise budget must survive the depth-1 evaluation.
+        for ct in &he_cts {
+            assert!(he.noise_budget_bits(ct) > 0.0, "budget exhausted");
+        }
+    }
+
+    #[test]
+    fn different_counters_give_independent_blocks() {
+        let (cipher, _, key, _) = setup();
+        assert_ne!(cipher.keystream(&key, 1, 0), cipher.keystream(&key, 1, 1));
+    }
+}

@@ -1,0 +1,235 @@
+//! Hardware configuration and the paper's design points.
+
+use crate::params::ParamSet;
+use crate::xof::XofKind;
+
+/// Datapath width of the functional units.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Width {
+    /// One state element per module per cycle (the paper's baseline,
+    /// Fig. 2a).
+    Scalar,
+    /// v elements (one state-matrix row/column) per module per cycle.
+    Vector,
+}
+
+/// The paper's named design points (Tables I–IV rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DesignPoint {
+    /// D1: scalar, 8 identical lanes, constants fully pre-sampled.
+    D1Baseline,
+    /// D2: D1 + RNG decoupling.
+    D2Decoupled,
+    /// D3: D2 + vectorization + function overlapping + MRMC optimization
+    /// (Rubato: 1 lane × v=8; HERA: 2 lanes × v=4 — throughput-matched).
+    D3Full,
+}
+
+impl DesignPoint {
+    /// Display label as used in the paper's tables.
+    pub fn label(&self) -> &'static str {
+        match self {
+            DesignPoint::D1Baseline => "D1: Baseline",
+            DesignPoint::D2Decoupled => "D2: + Decoupling",
+            DesignPoint::D3Full => "D3: + V/FO/MRMC",
+        }
+    }
+}
+
+/// Full micro-architectural configuration of one accelerator instance.
+#[derive(Debug, Clone)]
+pub struct HwConfig {
+    /// Cipher parameters.
+    pub params: ParamSet,
+    /// Datapath width.
+    pub width: Width,
+    /// Number of independent lanes (each lane owns one set of functional
+    /// units and processes its own block stream).
+    pub lanes: usize,
+    /// Function overlapping: units start on first available input slice.
+    pub overlap: bool,
+    /// MRMC transposition-invariance optimization (orientation alternation).
+    pub mrmc_opt: bool,
+    /// RNG decoupling: XOF + samplers run concurrently with key generation.
+    pub decouple: bool,
+    /// XOF feeding the rejection/DGD samplers.
+    pub xof: XofKind,
+    /// Round-constant FIFO depth *per lane* (elements). With decoupling a
+    /// small FIFO suffices; without it the FIFO must hold every constant of
+    /// a stream key. Drives the frequency and resource models.
+    pub fifo_depth: usize,
+    /// Pipeline latency (cycles input→output) of the ARK unit
+    /// (modmul + add).
+    pub lat_ark: u64,
+    /// Pipeline latency of the MRMC matrix-vector pipeline.
+    pub lat_mrmc: u64,
+    /// Pipeline latency of the nonlinear unit (Cube: 2 modmuls; Feistel:
+    /// square + add).
+    pub lat_nl: u64,
+    /// Pipeline latency of the AGN adder.
+    pub lat_agn: u64,
+    /// Latency of the rejection sampler stage after the XOF (cycles).
+    pub lat_sampler: u64,
+}
+
+impl HwConfig {
+    /// Elements produced per cycle by each unit.
+    pub fn w(&self) -> usize {
+        match self.width {
+            Width::Scalar => 1,
+            Width::Vector => self.params.v,
+        }
+    }
+
+    /// Slices per full state (n / w).
+    pub fn slices(&self) -> usize {
+        self.params.n / self.w()
+    }
+
+    /// Total state elements processed per cycle across lanes (the paper's
+    /// throughput-matching quantity: 8 for every evaluated design).
+    pub fn elems_per_cycle(&self) -> usize {
+        self.w() * self.lanes
+    }
+
+    /// The paper's design point for a scheme, with the lane counts of §V-A
+    /// (all designs process 8 elements/cycle).
+    pub fn design(params: ParamSet, point: DesignPoint) -> HwConfig {
+        let base = HwConfig {
+            params,
+            width: Width::Scalar,
+            lanes: 8,
+            overlap: false,
+            mrmc_opt: false,
+            decouple: false,
+            xof: XofKind::AesCtr,
+            // Non-decoupled: FIFO must hold all constants of one stream key
+            // per lane (96 for HERA, 188 for Rubato-128L).
+            fifo_depth: params.rc_count(),
+            lat_ark: 2,
+            lat_mrmc: 4,
+            lat_nl: 3,
+            lat_agn: 2,
+            lat_sampler: 1,
+        };
+        match point {
+            DesignPoint::D1Baseline => base,
+            DesignPoint::D2Decoupled => HwConfig {
+                decouple: true,
+                fifo_depth: 16,
+                ..base
+            },
+            DesignPoint::D3Full => HwConfig {
+                width: Width::Vector,
+                // Throughput-matched lanes: v*lanes = 8 elements/cycle.
+                lanes: 8 / params.v.min(8),
+                overlap: true,
+                mrmc_opt: true,
+                decouple: true,
+                fifo_depth: 16,
+                ..base
+            },
+        }
+    }
+
+    /// Ablation variant: vectorized only (no overlap, no MRMC opt) — the
+    /// paper's "V" mechanism in the §V-A decomposition.
+    pub fn vectorized_only(params: ParamSet) -> HwConfig {
+        HwConfig {
+            overlap: false,
+            mrmc_opt: false,
+            ..Self::design(params, DesignPoint::D3Full)
+        }
+    }
+
+    /// Ablation variant: vectorized + function overlapping, naive MRMC
+    /// schedule (the bubble of Figs. 2b/3a) — the paper's "V + FO".
+    pub fn vectorized_overlapped(params: ParamSet) -> HwConfig {
+        HwConfig {
+            mrmc_opt: false,
+            ..Self::design(params, DesignPoint::D3Full)
+        }
+    }
+
+    /// Sanity checks (lane/width consistency).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.lanes == 0 {
+            return Err("lanes must be >= 1".into());
+        }
+        if self.params.n % self.w() != 0 {
+            return Err(format!(
+                "width {} does not divide state size {}",
+                self.w(),
+                self.params.n
+            ));
+        }
+        if self.mrmc_opt && !self.overlap {
+            return Err("MRMC optimization requires function overlapping".into());
+        }
+        if self.fifo_depth == 0 {
+            return Err("fifo_depth must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::ParamSet;
+
+    #[test]
+    fn design_points_match_paper_lane_math() {
+        // §V-A: all designs process 8 state elements per cycle.
+        for p in [ParamSet::hera_128a(), ParamSet::rubato_128l()] {
+            for d in [
+                DesignPoint::D1Baseline,
+                DesignPoint::D2Decoupled,
+                DesignPoint::D3Full,
+            ] {
+                let c = HwConfig::design(p, d);
+                c.validate().unwrap();
+                assert_eq!(c.elems_per_cycle(), 8, "{:?} {:?}", p.name, d);
+            }
+        }
+        // HERA D3: 2 lanes × v=4; Rubato-128L D3: 1 lane × v=8.
+        assert_eq!(
+            HwConfig::design(ParamSet::hera_128a(), DesignPoint::D3Full).lanes,
+            2
+        );
+        assert_eq!(
+            HwConfig::design(ParamSet::rubato_128l(), DesignPoint::D3Full).lanes,
+            1
+        );
+    }
+
+    #[test]
+    fn baseline_fifo_holds_all_constants() {
+        // §IV-C: baseline FIFO depth is 188 per lane for Rubato-128L
+        // (1504 across 8 lanes), small with decoupling.
+        let d1 = HwConfig::design(ParamSet::rubato_128l(), DesignPoint::D1Baseline);
+        assert_eq!(d1.fifo_depth, 188);
+        assert_eq!(d1.fifo_depth * d1.lanes, 1504);
+        let d2 = HwConfig::design(ParamSet::rubato_128l(), DesignPoint::D2Decoupled);
+        assert!(d2.fifo_depth <= 32);
+    }
+
+    #[test]
+    fn invalid_configs_are_rejected() {
+        let mut c = HwConfig::design(ParamSet::hera_128a(), DesignPoint::D3Full);
+        c.lanes = 0;
+        assert!(c.validate().is_err());
+        let mut c = HwConfig::design(ParamSet::hera_128a(), DesignPoint::D3Full);
+        c.overlap = false;
+        assert!(c.validate().is_err()); // mrmc_opt without overlap
+    }
+
+    #[test]
+    fn ablation_variants_toggle_features() {
+        let p = ParamSet::rubato_128l();
+        let v = HwConfig::vectorized_only(p);
+        assert!(matches!(v.width, Width::Vector) && !v.overlap && !v.mrmc_opt);
+        let vf = HwConfig::vectorized_overlapped(p);
+        assert!(vf.overlap && !vf.mrmc_opt);
+    }
+}

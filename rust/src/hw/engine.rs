@@ -1,0 +1,932 @@
+//! Slice-level timing simulator.
+//!
+//! Each lane owns four physical units — ARK, MRMC, NL (Cube/Feistel) and
+//! AGN — and processes blocks through the scheme's stage pipeline. The
+//! state streams through units as *slices* of `w` elements; each unit emits
+//! at most one slice per cycle (initiation interval 1) after its pipeline
+//! latency. The engine computes exact emission timestamps under:
+//!
+//! * data dependencies (which input slices an output slice needs, including
+//!   Feistel's cross-slice dependency and MRMC's accumulate-then-drain
+//!   structure),
+//! * unit occupancy (consecutive stages and consecutive blocks share the
+//!   same physical unit),
+//! * round-constant / noise availability from the [`Producer`] model: one
+//!   shared XOF core fair-shared across lanes feeds the rejection/DGD
+//!   samplers; a decoupled producer runs continuously with FIFO-bounded
+//!   prefetch, a non-decoupled one is strictly serialized with compute
+//!   (sample-all → compute → sample-all, §IV-C),
+//! * the configuration's feature toggles (overlap, MRMC optimization,
+//!   decoupling).
+//!
+//! The *functional* state transformation is computed with the reference
+//! cipher components, so the simulated accelerator's keystream is
+//! definitionally checked against software (tests assert equality for every
+//! design point).
+//!
+//! Reported metrics follow the paper's conventions: "Cycles" is the
+//! latency of one stream-key generation measured from its RNG/pipeline
+//! start (block-0 / cold numbers match the serialized designs; steady-state
+//! intervals give throughput).
+
+use super::config::HwConfig;
+use super::rng::{sample_randomness, LaneRandomness};
+use super::schedule::{ScheduleTrace, TraceEvent, UnitId};
+use crate::arith::{Elem, ShiftAddMv};
+use crate::cipher::components::{agn, ark, cube, feistel, mrmc, truncate, State};
+use crate::cipher::{hera::Hera, rubato::Rubato};
+use crate::params::Scheme;
+
+/// Orientation of the streamed state: which way slices cut the v×v matrix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Orient {
+    /// Slice j = row j (elements j*v .. j*v+v-1).
+    Row,
+    /// Slice j = column j (elements j, j+v, j+2v, …).
+    Col,
+}
+
+impl Orient {
+    fn flip(self) -> Orient {
+        match self {
+            Orient::Row => Orient::Col,
+            Orient::Col => Orient::Row,
+        }
+    }
+}
+
+/// Pipeline stages of the stream-key function.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// ARK over the full state; payload = rc offset (in elements).
+    Ark {
+        /// Offset into the block's round-constant vector.
+        rc_offset: usize,
+    },
+    /// Fused MixColumns/MixRows.
+    Mrmc,
+    /// Cube (HERA).
+    Cube,
+    /// Feistel (Rubato).
+    Feistel,
+    /// Truncated final ARK over l elements (Rubato Fin).
+    ArkTrunc {
+        /// Offset into the block's round-constant vector.
+        rc_offset: usize,
+    },
+    /// AGN noise addition over l elements (Rubato).
+    Agn,
+}
+
+impl Stage {
+    fn unit(&self) -> UnitId {
+        match self {
+            Stage::Ark { .. } | Stage::ArkTrunc { .. } => UnitId::Ark,
+            Stage::Mrmc => UnitId::Mrmc,
+            Stage::Cube | Stage::Feistel => UnitId::Nl,
+            Stage::Agn => UnitId::Agn,
+        }
+    }
+}
+
+/// Build the stage pipeline for a scheme.
+pub fn stage_pipeline(cfg: &HwConfig) -> Vec<Stage> {
+    let p = &cfg.params;
+    let mut stages = Vec::new();
+    let mut rc_offset = 0;
+    stages.push(Stage::Ark { rc_offset });
+    rc_offset += p.n;
+    match p.scheme {
+        Scheme::Hera => {
+            for _ in 1..p.rounds {
+                stages.push(Stage::Mrmc);
+                stages.push(Stage::Cube);
+                stages.push(Stage::Ark { rc_offset });
+                rc_offset += p.n;
+            }
+            stages.push(Stage::Mrmc);
+            stages.push(Stage::Cube);
+            stages.push(Stage::Mrmc);
+            stages.push(Stage::Ark { rc_offset });
+        }
+        Scheme::Rubato => {
+            for _ in 1..p.rounds {
+                stages.push(Stage::Mrmc);
+                stages.push(Stage::Feistel);
+                stages.push(Stage::Ark { rc_offset });
+                rc_offset += p.n;
+            }
+            stages.push(Stage::Mrmc);
+            stages.push(Stage::Feistel);
+            stages.push(Stage::Mrmc);
+            stages.push(Stage::ArkTrunc { rc_offset });
+            stages.push(Stage::Agn);
+        }
+    }
+    stages
+}
+
+/// The shared-XOF producer serving one lane (fair share of the core).
+///
+/// Produces the block's value sequence (constants then noise) at
+/// `rate = core_bits_per_cycle / lanes`. With decoupling it runs
+/// continuously, prefetching at most `fifo_depth` values past the previous
+/// block's end; without it, it starts only at the block's logical start and
+/// the whole block's compute waits for the final value (the baseline's
+/// "store all constants before processing").
+struct Producer {
+    rate: f64,
+    sampler_lat: u64,
+}
+
+impl Producer {
+    /// Availability times for one block's values.
+    ///
+    /// `anchor` is the cycle production begins. Returns (rc_avail,
+    /// noise_avail, end_time).
+    fn produce(
+        &self,
+        rnd: &LaneRandomness,
+        anchor: f64,
+    ) -> (Vec<u64>, Vec<u64>, f64) {
+        let mut clock = anchor.max(0.0);
+        let mut rc_avail = Vec::with_capacity(rnd.rc.len());
+        let mut noise_avail = Vec::with_capacity(rnd.noise.len());
+        for i in 0..rnd.value_count() {
+            clock += rnd.cost(i) as f64 / self.rate;
+            let t = clock.ceil() as u64 + self.sampler_lat;
+            if i < rnd.rc.len() {
+                rc_avail.push(t);
+            } else {
+                noise_avail.push(t);
+            }
+        }
+        (rc_avail, noise_avail, clock)
+    }
+
+    /// Cycles needed to produce the first `k` values of a block (used to
+    /// back-date the decoupled producer so that at most `fifo_depth` values
+    /// are prefetched by the block's start).
+    fn lead_time(&self, rnd: &LaneRandomness, k: usize) -> f64 {
+        let bits: u64 = (0..k.min(rnd.value_count())).map(|i| rnd.cost(i)).sum();
+        bits as f64 / self.rate
+    }
+}
+
+/// Timing + functional result of one simulated block on one lane.
+#[derive(Debug, Clone)]
+pub struct BlockResult {
+    /// Cycle the block logically started (RNG start for serialized
+    /// designs; pipeline entry for decoupled ones).
+    pub start: u64,
+    /// Cycle the last keystream slice was emitted.
+    pub finish: u64,
+    /// Functional keystream (l elements).
+    pub ks: Vec<Elem>,
+}
+
+/// Aggregated simulation report.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Latency of one stream-key generation in cycles — the paper's
+    /// "Cycles" column (block 0, measured from cycle 0: includes the RNG
+    /// phase the design cannot hide).
+    pub latency_cycles: u64,
+    /// Steady-state latency (last block, finish − start).
+    pub steady_latency_cycles: u64,
+    /// Steady-state inter-block completion interval per lane, in cycles.
+    pub interval_cycles: f64,
+    /// Keystream elements produced per cycle across all lanes at steady
+    /// state (× frequency = samples/second).
+    pub elems_per_cycle: f64,
+    /// Maximum FIFO occupancy a decoupled design actually needs (values
+    /// prefetched ahead of consumption), per lane.
+    pub max_fifo_occupancy: usize,
+    /// Steady-state random-bit demand (bits/cycle) on the shared XOF core.
+    pub rng_demand_bits_per_cycle: f64,
+    /// Per-lane per-block functional + timing results.
+    pub blocks: Vec<Vec<BlockResult>>,
+    /// Schedule trace of lane 0 (for figure rendering).
+    pub trace: ScheduleTrace,
+    /// Per-unit busy-cycle counts (activity factors).
+    pub unit_busy: UnitActivity,
+}
+
+/// Busy-cycle counters per unit type, summed over lanes.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct UnitActivity {
+    /// ARK emissions.
+    pub ark: u64,
+    /// MRMC operations (phase A consumes + phase B emissions).
+    pub mrmc: u64,
+    /// Nonlinear-unit emissions.
+    pub nl: u64,
+    /// AGN emissions.
+    pub agn: u64,
+    /// XOF core active cycles.
+    pub xof: u64,
+    /// Total simulated cycles.
+    pub total: u64,
+}
+
+/// The simulator.
+pub struct Simulator {
+    cfg: HwConfig,
+    base_nonce: u64,
+}
+
+/// Per-stage stream descriptor used during timing propagation.
+#[derive(Debug, Clone)]
+struct StreamState {
+    /// avail[j] = cycle slice j becomes available to the next stage.
+    avail: Vec<u64>,
+    /// Emission order: order[k] = slice index emitted k-th.
+    order: Vec<usize>,
+    orient: Orient,
+}
+
+impl Simulator {
+    /// New simulator for a configuration (validated).
+    pub fn new(cfg: HwConfig, base_nonce: u64) -> Result<Simulator, String> {
+        cfg.validate()?;
+        Ok(Simulator { cfg, base_nonce })
+    }
+
+    /// The configuration under simulation.
+    pub fn config(&self) -> &HwConfig {
+        &self.cfg
+    }
+
+    /// Run `blocks` consecutive blocks on every lane and aggregate.
+    pub fn run(&self, key: &[Elem], blocks: usize) -> SimReport {
+        assert!(blocks >= 1);
+        let cfg = &self.cfg;
+        let p = &cfg.params;
+        assert_eq!(key.len(), p.n);
+        let stages = stage_pipeline(cfg);
+        let randomness =
+            sample_randomness(p, cfg.xof, cfg.lanes, blocks, self.base_nonce);
+        let producer = Producer {
+            rate: cfg.xof.bits_per_cycle() / cfg.lanes as f64,
+            sampler_lat: cfg.lat_sampler,
+        };
+
+        let mut all_blocks: Vec<Vec<BlockResult>> = vec![Vec::new(); cfg.lanes];
+        let mut trace = ScheduleTrace::new(cfg.w());
+        let mut activity = UnitActivity::default();
+        let mut max_fifo = 0usize;
+        let mut total_bits = 0u64;
+
+        for lane in 0..cfg.lanes {
+            let mut unit_free = [0u64; 4];
+            let mut prev_finish = 0u64;
+            let mut producer_clock = 0.0f64;
+            for b in 0..blocks {
+                let rnd = &randomness[b][lane];
+                total_bits += rnd.total_bits();
+                // Producer anchoring (see Producer docs).
+                let (anchor, block_gate, logical_start) = if cfg.decouple {
+                    // Continuous production, but prefetch by the block's
+                    // expected start is bounded by the FIFO depth.
+                    let lead = producer.lead_time(rnd, cfg.fifo_depth);
+                    let anchor = producer_clock.max(prev_finish as f64 - lead);
+                    (anchor, prev_finish, prev_finish)
+                } else {
+                    // Serialized: sample-all, then compute; the block's
+                    // latency is counted from the RNG start.
+                    (prev_finish as f64, 0, prev_finish)
+                };
+                let (rc_avail, noise_avail, p_end) = producer.produce(rnd, anchor);
+                producer_clock = p_end;
+                let compute_gate = if cfg.decouple {
+                    block_gate
+                } else {
+                    // All values stored before processing begins.
+                    *rc_avail
+                        .iter()
+                        .chain(noise_avail.iter())
+                        .max()
+                        .unwrap_or(&0)
+                };
+                // Scalar / non-overlapped designs hold a single state
+                // buffer: the next block is admitted only after the
+                // previous one completes.
+                let admission = if cfg.overlap {
+                    0
+                } else {
+                    prev_finish
+                };
+                let res = self.run_block(
+                    &stages,
+                    key,
+                    rnd,
+                    &rc_avail,
+                    &noise_avail,
+                    &mut unit_free,
+                    b,
+                    if lane == 0 { Some(&mut trace) } else { None },
+                    &mut activity,
+                    &mut max_fifo,
+                    compute_gate.max(admission),
+                    logical_start,
+                );
+                prev_finish = res.finish;
+                all_blocks[lane].push(res);
+            }
+        }
+
+        let last = blocks - 1;
+        let latency = all_blocks[0][0].finish - all_blocks[0][0].start;
+        let steady = all_blocks[0][last].finish - all_blocks[0][last].start;
+        let interval = if blocks >= 2 {
+            (all_blocks[0][last].finish - all_blocks[0][0].finish) as f64 / last as f64
+        } else {
+            latency as f64
+        };
+        let elems_per_cycle = p.l as f64 * cfg.lanes as f64 / interval.max(1.0);
+        let demand = total_bits as f64 / (blocks as f64) / interval.max(1.0);
+        let total_cycles = all_blocks
+            .iter()
+            .flat_map(|l| l.iter().map(|b| b.finish))
+            .max()
+            .unwrap_or(0);
+        activity.total = total_cycles;
+        activity.xof = (total_bits as f64 / cfg.xof.bits_per_cycle()).ceil() as u64;
+
+        SimReport {
+            latency_cycles: latency,
+            steady_latency_cycles: steady,
+            interval_cycles: interval,
+            elems_per_cycle,
+            max_fifo_occupancy: max_fifo,
+            rng_demand_bits_per_cycle: demand,
+            blocks: all_blocks,
+            trace,
+            unit_busy: activity,
+        }
+    }
+
+    /// Simulate one block through the stage pipeline on one lane.
+    #[allow(clippy::too_many_arguments)]
+    fn run_block(
+        &self,
+        stages: &[Stage],
+        key: &[Elem],
+        rnd: &LaneRandomness,
+        rc_avail: &[u64],
+        noise_avail: &[u64],
+        unit_free: &mut [u64; 4],
+        block_idx: usize,
+        mut trace: Option<&mut ScheduleTrace>,
+        activity: &mut UnitActivity,
+        max_fifo: &mut usize,
+        start_gate: u64,
+        logical_start: u64,
+    ) -> BlockResult {
+        let cfg = &self.cfg;
+        let p = &cfg.params;
+        let w = cfg.w();
+        let s_full = p.n / w;
+        let f = p.field();
+        let mv = ShiftAddMv::new(f, p.v);
+
+        // Functional state (reference components; independent of timing).
+        let ic: Vec<Elem> = match p.scheme {
+            Scheme::Hera => Hera::initial_state(p),
+            Scheme::Rubato => Rubato::initial_state(p),
+        };
+        let mut fstate = State::new(ic, p.v);
+        let mut fks: Vec<Elem> = Vec::new();
+
+        // The constant ic streams into the pipeline one slice per cycle.
+        let t0 = start_gate.max(unit_free[UnitId::Ark as usize]);
+        let mut stream = StreamState {
+            avail: (0..s_full).map(|j| t0 + j as u64).collect(),
+            order: (0..s_full).collect(),
+            orient: Orient::Row,
+        };
+
+        // (consumption cycle, rc index) for FIFO-occupancy accounting.
+        let mut rc_consumed: Vec<(u64, usize)> = Vec::new();
+
+        for stage in stages {
+            let unit = stage.unit();
+            let uslot = unit as usize;
+            let lat = match stage {
+                Stage::Ark { .. } | Stage::ArkTrunc { .. } => cfg.lat_ark,
+                Stage::Mrmc => cfg.lat_mrmc,
+                Stage::Cube | Stage::Feistel => cfg.lat_nl,
+                Stage::Agn => cfg.lat_agn,
+            };
+            let full_input_gate = if cfg.overlap {
+                0
+            } else {
+                *stream.avail.iter().max().unwrap()
+            };
+            let s_cnt = stream.avail.len();
+
+            let next = match stage {
+                Stage::Ark { rc_offset } | Stage::ArkTrunc { rc_offset } => {
+                    let truncated = matches!(stage, Stage::ArkTrunc { .. });
+                    let limit = if truncated { p.l } else { p.n };
+                    let mut avail = vec![0u64; s_cnt];
+                    let mut emit_prev = 0u64;
+                    for k in 0..s_cnt {
+                        let slice = stream.order[k];
+                        let max_rc = max_flat_index(slice, stream.orient, p.v, w, limit);
+                        let rc_gate = match max_rc {
+                            Some(idx) => rc_avail[rc_offset + idx],
+                            None => 0,
+                        };
+                        let ready = stream.avail[slice]
+                            .max(full_input_gate)
+                            .max(rc_gate)
+                            .max(unit_free[uslot]);
+                        let emit = (ready + lat).max(emit_prev + 1);
+                        emit_prev = emit;
+                        unit_free[uslot] = unit_free[uslot].max(emit - lat + 1);
+                        avail[slice] = emit;
+                        activity.ark += 1;
+                        if let Some(idx) = max_rc {
+                            rc_consumed.push((emit, rc_offset + idx));
+                        }
+                        if let Some(tr) = trace.as_deref_mut() {
+                            tr.push(TraceEvent {
+                                block: block_idx,
+                                unit,
+                                cycle: emit,
+                                label: slice_label("x", slice, stream.orient, p.v, w),
+                            });
+                        }
+                    }
+                    StreamState {
+                        avail,
+                        order: stream.order.clone(),
+                        orient: stream.orient,
+                    }
+                }
+                Stage::Cube => {
+                    // Scalar baseline: x³ = x²·x is two *dependent* modular
+                    // multiplies through one unpipelined multiplier, so the
+                    // initiation interval is 2 cycles/element; vectorized
+                    // units are pipelined (II = 1).
+                    let ii = if w == 1 { 2 } else { 1 };
+                    let mut avail = vec![0u64; s_cnt];
+                    let mut emit_prev = 0u64;
+                    for k in 0..s_cnt {
+                        let slice = stream.order[k];
+                        let ready = stream.avail[slice]
+                            .max(full_input_gate)
+                            .max(unit_free[uslot]);
+                        let emit = (ready + lat).max(emit_prev + ii);
+                        emit_prev = emit;
+                        unit_free[uslot] = unit_free[uslot].max(emit - lat + 1);
+                        avail[slice] = emit;
+                        activity.nl += 1;
+                        if let Some(tr) = trace.as_deref_mut() {
+                            tr.push(TraceEvent {
+                                block: block_idx,
+                                unit,
+                                cycle: emit,
+                                label: slice_label("c", slice, stream.orient, p.v, w),
+                            });
+                        }
+                    }
+                    StreamState {
+                        avail,
+                        order: stream.order.clone(),
+                        orient: stream.orient,
+                    }
+                }
+                Stage::Feistel => {
+                    // f_i = x_i + x_{i-1}²: slice j needs the last element
+                    // of the previous flat-index slice. Row orientation:
+                    // that is slice j-1 (already arrived). Column
+                    // orientation: column j needs column j-1, and column 0
+                    // needs column v-1 — the paper's "Feistel stalls"
+                    // (Fig. 2c): column 0 is emitted last.
+                    let mut avail = vec![0u64; s_cnt];
+                    let mut order: Vec<usize> = stream.order.clone();
+                    if stream.orient == Orient::Col && w > 1 {
+                        order.retain(|&j| j != 0);
+                        order.push(0);
+                    }
+                    let mut emit_prev = 0u64;
+                    for &slice in &order {
+                        let dep = match stream.orient {
+                            Orient::Row => slice.checked_sub(1),
+                            Orient::Col => Some(if slice == 0 { s_cnt - 1 } else { slice - 1 }),
+                        };
+                        let dep_gate = match (w, dep) {
+                            (1, _) => 0,
+                            (_, Some(d)) if d < s_cnt && d != slice => stream.avail[d],
+                            _ => 0,
+                        };
+                        let ready = stream.avail[slice]
+                            .max(dep_gate)
+                            .max(full_input_gate)
+                            .max(unit_free[uslot]);
+                        let emit = (ready + lat).max(emit_prev + 1);
+                        emit_prev = emit;
+                        unit_free[uslot] = unit_free[uslot].max(emit - lat + 1);
+                        avail[slice] = emit;
+                        activity.nl += 1;
+                        if let Some(tr) = trace.as_deref_mut() {
+                            tr.push(TraceEvent {
+                                block: block_idx,
+                                unit,
+                                cycle: emit,
+                                label: slice_label("f", slice, stream.orient, p.v, w),
+                            });
+                        }
+                    }
+                    StreamState {
+                        avail,
+                        order,
+                        orient: stream.orient,
+                    }
+                }
+                Stage::Mrmc => self.mrmc_timing(
+                    &stream,
+                    unit_free,
+                    lat,
+                    full_input_gate,
+                    s_full,
+                    block_idx,
+                    trace.as_deref_mut(),
+                    activity,
+                ),
+                Stage::Agn => {
+                    let mut avail = vec![0u64; s_cnt];
+                    let mut emit_prev = 0u64;
+                    for k in 0..s_cnt {
+                        let slice = stream.order[k];
+                        let max_noise = max_flat_index(slice, stream.orient, p.v, w, p.l);
+                        let noise_gate = match max_noise {
+                            Some(idx) => noise_avail[idx],
+                            None => 0,
+                        };
+                        let ready = stream.avail[slice]
+                            .max(full_input_gate)
+                            .max(noise_gate)
+                            .max(unit_free[uslot]);
+                        let emit = (ready + lat).max(emit_prev + 1);
+                        emit_prev = emit;
+                        unit_free[uslot] = unit_free[uslot].max(emit - lat + 1);
+                        avail[slice] = emit;
+                        activity.agn += 1;
+                        if let Some(tr) = trace.as_deref_mut() {
+                            tr.push(TraceEvent {
+                                block: block_idx,
+                                unit,
+                                cycle: emit,
+                                label: slice_label("z", slice, stream.orient, p.v, w),
+                            });
+                        }
+                    }
+                    StreamState {
+                        avail,
+                        order: stream.order.clone(),
+                        orient: stream.orient,
+                    }
+                }
+            };
+
+            // Functional transformation (orientation-independent).
+            match stage {
+                Stage::Ark { rc_offset } => {
+                    ark(&f, &mut fstate.x, key, &rnd.rc[*rc_offset..rc_offset + p.n]);
+                }
+                Stage::ArkTrunc { rc_offset } => {
+                    let mut ks = truncate(&fstate.x, p.l);
+                    ark(&f, &mut ks, key, &rnd.rc[*rc_offset..rc_offset + p.l]);
+                    fks = ks;
+                }
+                Stage::Mrmc => mrmc(&mv, &mut fstate),
+                Stage::Cube => cube(&f, &mut fstate.x),
+                Stage::Feistel => feistel(&f, &mut fstate.x),
+                Stage::Agn => agn(&f, &mut fks, &rnd.noise),
+            }
+
+            stream = next;
+        }
+
+        // FIFO occupancy sweep: +1 at production, −1 at consumption.
+        rc_consumed.sort_unstable();
+        let mut events: Vec<(u64, i64)> = Vec::with_capacity(rnd.rc.len() * 2);
+        for &t in rc_avail {
+            events.push((t, 1));
+        }
+        for &(t, _) in &rc_consumed {
+            events.push((t, -1));
+        }
+        events.sort_unstable();
+        let mut occ = 0i64;
+        let mut peak = 0i64;
+        for (_, d) in events {
+            occ += d;
+            peak = peak.max(occ);
+        }
+        let observed = if cfg.decouple {
+            (peak.max(0) as usize).min(cfg.fifo_depth)
+        } else {
+            peak.max(0) as usize
+        };
+        *max_fifo = (*max_fifo).max(observed);
+
+        let finish = *stream.avail.iter().max().unwrap();
+        let ks = match p.scheme {
+            Scheme::Hera => fstate.x.clone(),
+            Scheme::Rubato => fks,
+        };
+        BlockResult {
+            start: logical_start,
+            finish,
+            ks,
+        }
+    }
+
+    /// MRMC timing: accumulate (phase A, one matrix-vector op per arriving
+    /// slice) then drain (phase B, one output slice per cycle).
+    #[allow(clippy::too_many_arguments)]
+    fn mrmc_timing(
+        &self,
+        stream: &StreamState,
+        unit_free: &mut [u64; 4],
+        lat: u64,
+        full_input_gate: u64,
+        s_full: usize,
+        block_idx: usize,
+        mut trace: Option<&mut ScheduleTrace>,
+        activity: &mut UnitActivity,
+    ) -> StreamState {
+        let cfg = &self.cfg;
+        let w = cfg.w();
+        let uslot = UnitId::Mrmc as usize;
+        let s_cnt = stream.avail.len();
+
+        // Phase A. With the MRMC optimization the unit treats whatever
+        // order arrives as matrix columns (transposition invariance) and
+        // consumes on arrival; without it, a column is only complete once
+        // the whole state has arrived — the bubble of Figs. 2b/3a.
+        let mut consume_done;
+        if cfg.mrmc_opt && w > 1 {
+            let mut busy_from = unit_free[uslot];
+            consume_done = 0;
+            for k in 0..s_cnt {
+                let slice = stream.order[k];
+                let t = stream.avail[slice].max(full_input_gate).max(busy_from) + 1;
+                busy_from = t;
+                consume_done = consume_done.max(t);
+                activity.mrmc += 1;
+            }
+            unit_free[uslot] = unit_free[uslot].max(consume_done);
+        } else {
+            let all_in = stream
+                .avail
+                .iter()
+                .max()
+                .copied()
+                .unwrap_or(0)
+                .max(full_input_gate);
+            // Scalar: one element MAC per cycle (2n total, Fig. 2a);
+            // vectorized-naive: one column MVM per cycle after the full
+            // state arrives.
+            let phase_a_ops = if w == 1 { s_cnt } else { s_full };
+            let start = all_in.max(unit_free[uslot]);
+            consume_done = start + phase_a_ops as u64;
+            unit_free[uslot] = unit_free[uslot].max(consume_done);
+            activity.mrmc += phase_a_ops as u64;
+        }
+
+        // Phase B: drain one output slice per cycle (the second multiply
+        // needs every phase-A term).
+        let mut avail = vec![0u64; s_cnt];
+        let mut emit_prev = consume_done + lat - 1;
+        for a in avail.iter_mut() {
+            let emit = emit_prev + 1;
+            emit_prev = emit;
+            *a = emit;
+            activity.mrmc += 1;
+        }
+        unit_free[uslot] = unit_free[uslot].max(emit_prev.saturating_sub(lat) + 1);
+
+        let orient = if cfg.mrmc_opt && w > 1 {
+            stream.orient.flip()
+        } else {
+            Orient::Row
+        };
+        let out = StreamState {
+            avail,
+            order: (0..s_cnt).collect(),
+            orient,
+        };
+        if let Some(tr) = trace.as_deref_mut() {
+            for j in 0..s_cnt {
+                tr.push(TraceEvent {
+                    block: block_idx,
+                    unit: UnitId::Mrmc,
+                    cycle: out.avail[j],
+                    label: slice_label("y", j, orient, self.cfg.params.v, w),
+                });
+            }
+        }
+        out
+    }
+}
+
+/// Highest flat element index (0-based) within a slice, restricted to
+/// elements `< limit`; `None` if the slice holds no element below `limit`.
+fn max_flat_index(
+    slice: usize,
+    orient: Orient,
+    v: usize,
+    w: usize,
+    limit: usize,
+) -> Option<usize> {
+    if w == 1 {
+        return if slice < limit { Some(slice) } else { None };
+    }
+    let idxs: Vec<usize> = match orient {
+        Orient::Row => (0..v).map(|c| slice * v + c).collect(),
+        Orient::Col => (0..v).map(|r| r * v + slice).collect(),
+    };
+    idxs.into_iter().filter(|&i| i < limit).max()
+}
+
+/// Human-readable slice label for trace rendering, e.g. `x9` or `f3`.
+fn slice_label(prefix: &str, slice: usize, orient: Orient, v: usize, w: usize) -> String {
+    if w == 1 {
+        return format!("{prefix}{}", slice + 1);
+    }
+    let first = match orient {
+        Orient::Row => slice * v,
+        Orient::Col => slice,
+    };
+    format!("{prefix}{}", first + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cipher::{build_cipher, SecretKey};
+    use crate::hw::config::{DesignPoint, HwConfig};
+    use crate::params::ParamSet;
+    use crate::xof::XofKind;
+
+    fn run(p: ParamSet, d: DesignPoint, blocks: usize) -> SimReport {
+        let cfg = HwConfig::design(p, d);
+        let sim = Simulator::new(cfg, 500).unwrap();
+        let key = SecretKey::generate(&p, 3);
+        sim.run(&key.k, blocks)
+    }
+
+    #[test]
+    fn all_design_points_compute_reference_keystream() {
+        for p in [ParamSet::hera_128a(), ParamSet::rubato_128l()] {
+            let cipher = build_cipher(p, XofKind::AesCtr);
+            let key = SecretKey::generate(&p, 3);
+            for d in [
+                DesignPoint::D1Baseline,
+                DesignPoint::D2Decoupled,
+                DesignPoint::D3Full,
+            ] {
+                let report = run(p, d, 2);
+                let cfg = HwConfig::design(p, d);
+                for lane in 0..cfg.lanes {
+                    for b in 0..2 {
+                        let expect =
+                            cipher.keystream(&key, 500 + lane as u64, b as u64).ks;
+                        assert_eq!(
+                            report.blocks[lane][b].ks, expect,
+                            "{} {:?} lane {lane} block {b}",
+                            p.name, d
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decoupling_reduces_latency_and_raises_throughput() {
+        for p in [ParamSet::hera_128a(), ParamSet::rubato_128l()] {
+            let d1 = run(p, DesignPoint::D1Baseline, 4);
+            let d2 = run(p, DesignPoint::D2Decoupled, 4);
+            assert!(
+                d2.latency_cycles < d1.latency_cycles,
+                "{}: D2 {} !< D1 {}",
+                p.name,
+                d2.latency_cycles,
+                d1.latency_cycles
+            );
+            assert!(d2.interval_cycles < d1.interval_cycles);
+        }
+    }
+
+    #[test]
+    fn full_design_is_dramatically_faster() {
+        for p in [ParamSet::hera_128a(), ParamSet::rubato_128l()] {
+            let d2 = run(p, DesignPoint::D2Decoupled, 4);
+            let d3 = run(p, DesignPoint::D3Full, 4);
+            assert!(
+                (d3.latency_cycles as f64) < 0.3 * d2.latency_cycles as f64,
+                "{}: D3 {} vs D2 {}",
+                p.name,
+                d3.latency_cycles,
+                d2.latency_cycles
+            );
+        }
+    }
+
+    #[test]
+    fn rubato_d3_beats_hera_d3_in_latency() {
+        // §V-A: "in a fully optimized design (D3), Rubato's latency is
+        // lower than that of HERA".
+        let h = run(ParamSet::hera_128a(), DesignPoint::D3Full, 4);
+        let r = run(ParamSet::rubato_128l(), DesignPoint::D3Full, 4);
+        assert!(
+            r.latency_cycles < h.latency_cycles,
+            "rubato {} !< hera {}",
+            r.latency_cycles,
+            h.latency_cycles
+        );
+    }
+
+    #[test]
+    fn hera_beats_rubato_before_full_optimization() {
+        // §V-A: before vectorization, HERA has lower latency (fewer total
+        // elements to process despite more rounds).
+        let h = run(ParamSet::hera_128a(), DesignPoint::D2Decoupled, 3);
+        let r = run(ParamSet::rubato_128l(), DesignPoint::D2Decoupled, 3);
+        assert!(h.latency_cycles < r.latency_cycles);
+    }
+
+    #[test]
+    fn mrmc_opt_removes_bubble() {
+        let p = ParamSet::rubato_128l();
+        let with = run(p, DesignPoint::D3Full, 3);
+        let cfg = HwConfig::vectorized_overlapped(p);
+        let sim = Simulator::new(cfg, 500).unwrap();
+        let key = SecretKey::generate(&p, 3);
+        let without = sim.run(&key.k, 3);
+        assert!(
+            with.latency_cycles < without.latency_cycles,
+            "opt {} !< naive {}",
+            with.latency_cycles,
+            without.latency_cycles
+        );
+        // The bubble is visible on the MRMC unit of the naive design.
+        let naive_gap = without.trace.max_gap(1, UnitId::Mrmc);
+        let opt_gap = with.trace.max_gap(1, UnitId::Mrmc);
+        assert!(
+            naive_gap > opt_gap,
+            "naive gap {naive_gap} !> opt gap {opt_gap}"
+        );
+    }
+
+    #[test]
+    fn fifo_occupancy_small_when_decoupled() {
+        let p = ParamSet::rubato_128l();
+        let d2 = run(p, DesignPoint::D2Decoupled, 3);
+        let d1 = run(p, DesignPoint::D1Baseline, 3);
+        assert!(d2.max_fifo_occupancy <= 16);
+        assert!(d1.max_fifo_occupancy >= p.rc_count() / 2);
+    }
+
+    #[test]
+    fn steady_state_interval_is_stable() {
+        let p = ParamSet::rubato_128l();
+        let r = run(p, DesignPoint::D3Full, 6);
+        let b = &r.blocks[0];
+        let gaps: Vec<u64> = b.windows(2).map(|w| w[1].finish - w[0].finish).collect();
+        let last_gaps = &gaps[2..];
+        let min = last_gaps.iter().min().unwrap();
+        let max = last_gaps.iter().max().unwrap();
+        assert!(max - min <= 4, "gaps={gaps:?}");
+    }
+
+    #[test]
+    fn latency_lands_near_paper_cycle_counts() {
+        // Shape check against Tables I/II (±35%): HERA 729/512/90,
+        // Rubato 1478/800/66.
+        let points = [
+            (ParamSet::hera_128a(), DesignPoint::D1Baseline, 729.0),
+            (ParamSet::hera_128a(), DesignPoint::D2Decoupled, 512.0),
+            (ParamSet::hera_128a(), DesignPoint::D3Full, 90.0),
+            (ParamSet::rubato_128l(), DesignPoint::D1Baseline, 1478.0),
+            (ParamSet::rubato_128l(), DesignPoint::D2Decoupled, 800.0),
+            (ParamSet::rubato_128l(), DesignPoint::D3Full, 66.0),
+        ];
+        for (p, d, paper) in points {
+            let got = run(p, d, 3).latency_cycles as f64;
+            let ratio = got / paper;
+            assert!(
+                (0.65..=1.35).contains(&ratio),
+                "{} {:?}: got {got} vs paper {paper} (ratio {ratio:.2})",
+                p.name,
+                d
+            );
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! Cycle-accurate model of the Presto accelerator microarchitecture.
+//!
+//! This is the hardware-substitution substrate (see DESIGN.md): the paper's
+//! FPGA RTL is replaced by a slice-level, dependency- and occupancy-exact
+//! timing model whose *functional* output is byte-identical to the
+//! reference ciphers (enforced by tests), and whose *timing* reproduces the
+//! paper's mechanisms:
+//!
+//! * vectorization — every functional unit produces `w` state elements per
+//!   cycle (`w = 1` scalar baseline, `w = v` vectorized);
+//! * function overlapping — units begin as soon as their input slices are
+//!   buffered instead of waiting for full-state completion;
+//! * the MRMC transposition-invariance schedule — the fused
+//!   MixColumns/MixRows unit treats a row-major input stream as a
+//!   transposed matrix and processes slices on arrival, flipping the state
+//!   orientation each pass and eliminating the wait-for-a-full-column
+//!   bubble (paper Figs. 2–3);
+//! * RNG decoupling — the AES/SHAKE XOF + rejection sampler run
+//!   concurrently with stream-key generation, filling a small FIFO, instead
+//!   of pre-sampling every constant.
+//!
+//! Module map:
+//! * [`config`] — [`config::HwConfig`]: scheme, lanes, width, feature
+//!   toggles, XOF rate; design presets D1/D2/D3 plus ablation variants.
+//! * [`rng`] — the RNG timeline: functional constants/noise with
+//!   per-value availability cycles derived from the real rejection trace.
+//! * [`engine`] — the slice-level timing simulator.
+//! * [`schedule`] — trace events + the ASCII data-schedule renderer that
+//!   regenerates the paper's Figures 2a–2d and 3a–3b.
+//! * [`model`] — analytic frequency / power / resource models calibrated
+//!   to the paper's Tables I–IV (Vivado substitutes).
+//! * [`tables`] — the harness that regenerates every table and figure.
+
+pub mod config;
+pub mod engine;
+pub mod model;
+pub mod rng;
+pub mod schedule;
+pub mod tables;
+
+pub use config::{DesignPoint, HwConfig, Width};
+pub use engine::{SimReport, Simulator};

@@ -1,0 +1,120 @@
+//! Critical-path / clock-frequency model.
+//!
+//! Mechanism (paper §IV-C and §V-A): the path from the round-constant FIFO
+//! read pointer to the FIFO data register sits on the critical path, and
+//! its delay grows with FIFO depth (pointer fan-out across the storage
+//! array). Vectorized datapaths add mux/fan-out on the wide state buses.
+//!
+//! Model:  `T_clk = t_base + t_vec·[vectorized] + k_fifo · depth_total`
+//! with per-scheme constants fitted to the paper's three (design, freq)
+//! synthesis points. `depth_total = fifo_depth × lanes` in elements.
+
+use crate::hw::config::{HwConfig, Width};
+use crate::params::Scheme;
+
+/// Fitted critical-path model.
+#[derive(Debug, Clone, Copy)]
+pub struct FreqModel {
+    /// Base combinational delay (ns).
+    t_base: f64,
+    /// Additional mux/fan-out delay for vector datapaths (ns).
+    t_vec: f64,
+    /// FIFO pointer fan-out delay per stored element (ns/element).
+    k_fifo: f64,
+}
+
+impl FreqModel {
+    /// Calibrated model for a scheme.
+    ///
+    /// Fit points (paper Tables I/II): HERA 52.6 / 222 / 167 MHz at FIFO
+    /// depths 768 / 128 / 32; Rubato 37 / 182 / 175 MHz at 1504 / 128 / 16.
+    /// Two scalar points fix (t_base, k_fifo); the D3 point fixes t_vec.
+    pub fn for_scheme(scheme: Scheme) -> FreqModel {
+        let (f1, d1, f2, d2, f3, d3) = match scheme {
+            Scheme::Hera => (52.6, 768.0, 222.0, 128.0, 167.0, 32.0),
+            Scheme::Rubato => (37.0, 1504.0, 182.0, 128.0, 175.0, 16.0),
+        };
+        let t1: f64 = 1000.0 / f1; // ns
+        let t2 = 1000.0 / f2;
+        let t3 = 1000.0 / f3;
+        let k_fifo = (t1 - t2) / (d1 - d2);
+        let t_base = t2 - k_fifo * d2;
+        let t_vec = (t3 - k_fifo * d3 - t_base).max(0.0);
+        FreqModel {
+            t_base,
+            t_vec,
+            k_fifo,
+        }
+    }
+
+    /// Critical path (ns) for a configuration.
+    pub fn critical_path_ns(&self, cfg: &HwConfig) -> f64 {
+        let depth_total = (cfg.fifo_depth * cfg.lanes) as f64;
+        let vec_term = match cfg.width {
+            Width::Scalar => 0.0,
+            Width::Vector => self.t_vec,
+        };
+        self.t_base + vec_term + self.k_fifo * depth_total
+    }
+
+    /// Achievable clock frequency (MHz).
+    pub fn freq_mhz(&self, cfg: &HwConfig) -> f64 {
+        1000.0 / self.critical_path_ns(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::config::{DesignPoint, HwConfig};
+    use crate::params::ParamSet;
+
+    #[test]
+    fn reproduces_paper_frequency_points() {
+        // Calibration must round-trip through the fitted points.
+        for (p, freqs) in [
+            (ParamSet::hera_128a(), [52.6, 222.0, 167.0]),
+            (ParamSet::rubato_128l(), [37.0, 182.0, 175.0]),
+        ] {
+            let m = FreqModel::for_scheme(p.scheme);
+            for (d, expect) in [
+                DesignPoint::D1Baseline,
+                DesignPoint::D2Decoupled,
+                DesignPoint::D3Full,
+            ]
+            .into_iter()
+            .zip(freqs)
+            {
+                let cfg = HwConfig::design(p, d);
+                let got = m.freq_mhz(&cfg);
+                assert!(
+                    (got - expect).abs() / expect < 0.01,
+                    "{} {:?}: got {got:.1} expect {expect}",
+                    p.name,
+                    d
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn deeper_fifo_lowers_frequency() {
+        let p = ParamSet::rubato_128l();
+        let m = FreqModel::for_scheme(p.scheme);
+        let mut shallow = HwConfig::design(p, DesignPoint::D2Decoupled);
+        shallow.fifo_depth = 8;
+        let mut deep = shallow.clone();
+        deep.fifo_depth = 512;
+        assert!(m.freq_mhz(&shallow) > m.freq_mhz(&deep));
+    }
+
+    #[test]
+    fn vector_penalty_is_nonnegative() {
+        for s in [Scheme::Hera, Scheme::Rubato] {
+            let m = FreqModel::for_scheme(s);
+            assert!(m.t_vec >= 0.0);
+            assert!(m.k_fifo > 0.0);
+            assert!(m.t_base > 0.0);
+        }
+    }
+}

@@ -1,0 +1,206 @@
+//! FPGA resource-utilization model (LUT / FF / DSP / BRAM).
+//!
+//! Structural cost functions per subsystem, with per-scheme coefficients
+//! calibrated to the paper's Tables III/IV:
+//!
+//! * **FIFO** — LUT/FF proportional to `depth_total × element_width` (the
+//!   dominant D1→D2 saving: "LUT and FF usage for FIFO decreases by ≈3×
+//!   (HERA) / 6× (Rubato)" §V-B).
+//! * **DSP** — multiplier inventory: each modular multiplier costs 2 DSPs
+//!   (26×26 → two DSP48E2). Scalar lanes time-multiplex one multiplier
+//!   pair per lane plus the Feistel/ARK pair for Rubato; vector lanes
+//!   instantiate per-element multipliers (ARK, and 5 DSPs per Cube element
+//!   for HERA's x³ = x²·x chain). MRMC uses none (shift-add — §IV-B).
+//! * **BRAM** — XOF core tables + key/state storage per scheme, plus the
+//!   ping-pong reorder buffers the MRMC-optimized Rubato design needs for
+//!   its row/column-major alternation (the D3 BRAM growth in Table IV).
+
+use crate::hw::config::{HwConfig, Width};
+use crate::params::Scheme;
+
+/// Estimated utilization.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResourceEstimate {
+    /// Look-up tables.
+    pub lut: f64,
+    /// Flip-flops.
+    pub ff: f64,
+    /// DSP slices.
+    pub dsp: f64,
+    /// Block RAMs (36 Kb equivalents; halves allowed).
+    pub bram: f64,
+}
+
+/// Calibrated resource model for one scheme.
+#[derive(Debug, Clone, Copy)]
+pub struct ResourceModel {
+    scheme: Scheme,
+    /// LUTs per FIFO bit.
+    lut_per_fifo_bit: f64,
+    /// FFs per FIFO bit.
+    ff_per_fifo_bit: f64,
+    /// Base LUTs of the scalar 8-lane datapath (excl. FIFO).
+    lut_base_scalar: f64,
+    /// Base FFs of the scalar 8-lane datapath.
+    ff_base_scalar: f64,
+    /// LUT multiplier for the vectorized datapath relative to scalar.
+    lut_vec_factor: f64,
+    /// FF multiplier for the vectorized datapath.
+    ff_vec_factor: f64,
+    /// BRAM of XOF + samplers + key/state storage (design-independent).
+    bram_base: f64,
+    /// Extra BRAM for the MRMC-opt reorder (ping-pong) buffers.
+    bram_reorder: f64,
+}
+
+impl ResourceModel {
+    /// Calibrated model for a scheme (fit notes in EXPERIMENTS.md §Models).
+    pub fn for_scheme(scheme: Scheme) -> ResourceModel {
+        match scheme {
+            // Fit to Table III: D1 (107479, 25920, 16, 86),
+            // D2 (37672, 12401, 16, 86), D3 (48001, 14846, 56, 86).
+            Scheme::Hera => {
+                // FIFO bits: D1 768×26 = 19968, D2/D3 128×26 / 32×26.
+                let lut_per_bit = (107_479.0 - 37_672.0) / (19_968.0 - 3_328.0);
+                let ff_per_bit = (25_920.0 - 12_401.0) / (19_968.0 - 3_328.0);
+                let lut_base = 37_672.0 - lut_per_bit * 3_328.0;
+                let ff_base = 12_401.0 - ff_per_bit * 3_328.0;
+                let d3_fifo_bits = 832.0; // 32 × 26
+                ResourceModel {
+                    scheme,
+                    lut_per_fifo_bit: lut_per_bit,
+                    ff_per_fifo_bit: ff_per_bit,
+                    lut_base_scalar: lut_base,
+                    ff_base_scalar: ff_base,
+                    lut_vec_factor: (48_001.0 - lut_per_bit * d3_fifo_bits) / lut_base,
+                    ff_vec_factor: (14_846.0 - ff_per_bit * d3_fifo_bits) / ff_base,
+                    bram_base: 86.0,
+                    bram_reorder: 0.0, // HERA D3 shows no BRAM growth
+                }
+            }
+            // Fit to Table IV: D1 (273503, 83583, 32, 169),
+            // D2 (77526, 38058, 32, 169), D3 (64510, 24577, 32, 336.5).
+            Scheme::Rubato => {
+                // FIFO bits: D1 1504×25 = 37600, D2 128×25 = 3200, D3 16×25.
+                let lut_per_bit = (273_503.0 - 77_526.0) / (37_600.0 - 3_200.0);
+                let ff_per_bit = (83_583.0 - 38_058.0) / (37_600.0 - 3_200.0);
+                let lut_base = 77_526.0 - lut_per_bit * 3_200.0;
+                let ff_base = 38_058.0 - ff_per_bit * 3_200.0;
+                let d3_fifo_bits = 400.0; // 16 × 25
+                ResourceModel {
+                    scheme,
+                    lut_per_fifo_bit: lut_per_bit,
+                    ff_per_fifo_bit: ff_per_bit,
+                    lut_base_scalar: lut_base,
+                    ff_base_scalar: ff_base,
+                    lut_vec_factor: (64_510.0 - lut_per_bit * d3_fifo_bits) / lut_base,
+                    ff_vec_factor: (24_577.0 - ff_per_bit * d3_fifo_bits) / ff_base,
+                    bram_base: 169.0,
+                    bram_reorder: 167.5,
+                }
+            }
+        }
+    }
+
+    /// DSP count from the multiplier inventory.
+    fn dsp(&self, cfg: &HwConfig) -> f64 {
+        let dsp_per_modmul = 2.0;
+        match (cfg.width, self.scheme) {
+            // Scalar HERA lane: one time-multiplexed modular multiplier
+            // serves ARK and Cube → 2 DSP/lane.
+            (Width::Scalar, Scheme::Hera) => dsp_per_modmul * cfg.lanes as f64,
+            // Scalar Rubato lane: ARK multiplier + Feistel squarer → 4/lane.
+            (Width::Scalar, Scheme::Rubato) => 2.0 * dsp_per_modmul * cfg.lanes as f64,
+            // Vector HERA lane: per element, ARK (1 mul) + Cube (x²·x:
+            // 2 muls, one widened) ≈ 7 DSP/element.
+            (Width::Vector, Scheme::Hera) => {
+                7.0 * (cfg.params.v * cfg.lanes) as f64
+            }
+            // Vector Rubato lane: per element, ARK (1 mul) + Feistel
+            // squarer (1 mul) → 4 DSP/element.
+            (Width::Vector, Scheme::Rubato) => {
+                2.0 * dsp_per_modmul * (cfg.params.v * cfg.lanes) as f64
+            }
+        }
+    }
+
+    /// Full utilization estimate for a configuration.
+    pub fn estimate(&self, cfg: &HwConfig) -> ResourceEstimate {
+        let elem_bits = cfg.params.rc_bits() as f64;
+        let fifo_bits = (cfg.fifo_depth * cfg.lanes) as f64 * elem_bits;
+        let (lut_base, ff_base) = match cfg.width {
+            Width::Scalar => (self.lut_base_scalar, self.ff_base_scalar),
+            Width::Vector => (
+                self.lut_base_scalar * self.lut_vec_factor,
+                self.ff_base_scalar * self.ff_vec_factor,
+            ),
+        };
+        let bram = self.bram_base
+            + if cfg.mrmc_opt && self.scheme == Scheme::Rubato {
+                self.bram_reorder
+            } else {
+                0.0
+            };
+        ResourceEstimate {
+            lut: lut_base + self.lut_per_fifo_bit * fifo_bits,
+            ff: ff_base + self.ff_per_fifo_bit * fifo_bits,
+            dsp: self.dsp(cfg),
+            bram,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::config::{DesignPoint, HwConfig};
+    use crate::params::ParamSet;
+
+    #[test]
+    fn reproduces_table_iii_hera() {
+        let m = ResourceModel::for_scheme(Scheme::Hera);
+        let p = ParamSet::hera_128a();
+        let expect = [
+            (DesignPoint::D1Baseline, 107_479.0, 25_920.0, 16.0, 86.0),
+            (DesignPoint::D2Decoupled, 37_672.0, 12_401.0, 16.0, 86.0),
+            (DesignPoint::D3Full, 48_001.0, 14_846.0, 56.0, 86.0),
+        ];
+        for (d, lut, ff, dsp, bram) in expect {
+            let e = m.estimate(&HwConfig::design(p, d));
+            assert!((e.lut - lut).abs() / lut < 0.02, "{d:?} lut {}", e.lut);
+            assert!((e.ff - ff).abs() / ff < 0.02, "{d:?} ff {}", e.ff);
+            assert!((e.dsp - dsp).abs() < 0.5, "{d:?} dsp {}", e.dsp);
+            assert!((e.bram - bram).abs() < 0.5, "{d:?} bram {}", e.bram);
+        }
+    }
+
+    #[test]
+    fn reproduces_table_iv_rubato() {
+        let m = ResourceModel::for_scheme(Scheme::Rubato);
+        let p = ParamSet::rubato_128l();
+        let expect = [
+            (DesignPoint::D1Baseline, 273_503.0, 83_583.0, 32.0, 169.0),
+            (DesignPoint::D2Decoupled, 77_526.0, 38_058.0, 32.0, 169.0),
+            (DesignPoint::D3Full, 64_510.0, 24_577.0, 32.0, 336.5),
+        ];
+        for (d, lut, ff, dsp, bram) in expect {
+            let e = m.estimate(&HwConfig::design(p, d));
+            assert!((e.lut - lut).abs() / lut < 0.02, "{d:?} lut {}", e.lut);
+            assert!((e.ff - ff).abs() / ff < 0.02, "{d:?} ff {}", e.ff);
+            assert!((e.dsp - dsp).abs() < 0.5, "{d:?} dsp {}", e.dsp);
+            assert!((e.bram - bram).abs() < 0.5, "{d:?} bram {}", e.bram);
+        }
+    }
+
+    #[test]
+    fn fifo_depth_scales_lut() {
+        let m = ResourceModel::for_scheme(Scheme::Rubato);
+        let p = ParamSet::rubato_128l();
+        let mut a = HwConfig::design(p, DesignPoint::D2Decoupled);
+        a.fifo_depth = 16;
+        let mut b = a.clone();
+        b.fifo_depth = 256;
+        assert!(m.estimate(&b).lut > m.estimate(&a).lut);
+        assert!(m.estimate(&b).ff > m.estimate(&a).ff);
+    }
+}

@@ -1,0 +1,173 @@
+//! Cipher randomness with per-value bit costs (the RNG side of the
+//! accelerator).
+//!
+//! The hardware's randomness pipeline is XOF core → rejection sampler →
+//! round-constant FIFO (plus, for Rubato, → inverse-CDF DGD sampler →
+//! noise buffer). This module samples the *functional* values exactly as
+//! the software cipher does — same XOF streams, same rejection trace — and
+//! records the per-value random-bit cost. The timing side (when each value
+//! becomes available, given the core's bits/cycle, lane sharing, FIFO depth
+//! and decoupling) lives in the engine's [`Producer`] model.
+//!
+//! [`Producer`]: super::engine
+
+use crate::arith::Elem;
+use crate::params::{ParamSet, Scheme, RUBATO_SIGMA};
+use crate::sampler::{DiscreteGaussian, RejectionSampler};
+use crate::xof::XofKind;
+
+/// One lane's randomness for one block: functional values + bit costs.
+///
+/// The producer sequence is `rc[0..rc_count]` followed by `noise[0..l]` —
+/// the order the XOF core serves the two samplers, matching consumption
+/// order (ARKs first, AGN last).
+#[derive(Debug, Clone)]
+pub struct LaneRandomness {
+    /// Round constants (rc_count values), identical to the software cipher.
+    pub rc: Vec<Elem>,
+    /// Random bits consumed per constant (incl. rejected draws).
+    pub rc_cost: Vec<u64>,
+    /// AGN noise (l values for Rubato, empty for HERA).
+    pub noise: Vec<i64>,
+    /// Bits per noise sample (65 = 64 CDF bits + sign).
+    pub noise_cost: Vec<u64>,
+}
+
+impl LaneRandomness {
+    /// Total random bits for this block.
+    pub fn total_bits(&self) -> u64 {
+        self.rc_cost.iter().sum::<u64>() + self.noise_cost.iter().sum::<u64>()
+    }
+
+    /// Number of producer values (constants + noise samples).
+    pub fn value_count(&self) -> usize {
+        self.rc.len() + self.noise.len()
+    }
+
+    /// Bit cost of producer value `i` (rc first, then noise).
+    pub fn cost(&self, i: usize) -> u64 {
+        if i < self.rc_cost.len() {
+            self.rc_cost[i]
+        } else {
+            self.noise_cost[i - self.rc_cost.len()]
+        }
+    }
+}
+
+/// Sample all randomness for `lanes × blocks`, lane L block B seeded by
+/// (nonce = base_nonce + L, counter = B) — the same convention as the
+/// software cipher and the coordinator, enabling keystream cross-checks.
+pub fn sample_randomness(
+    params: &ParamSet,
+    xof_kind: XofKind,
+    lanes: usize,
+    blocks: usize,
+    base_nonce: u64,
+) -> Vec<Vec<LaneRandomness>> {
+    let mut out = Vec::with_capacity(blocks);
+    for b in 0..blocks {
+        let mut row = Vec::with_capacity(lanes);
+        for l in 0..lanes {
+            let nonce = base_nonce + l as u64;
+            let counter = b as u64;
+            let mut xof = xof_kind.instantiate(nonce, counter);
+            let mut sampler = RejectionSampler::new(xof.as_mut(), params.q);
+            let mut rc = Vec::with_capacity(params.rc_count());
+            let mut rc_cost = Vec::with_capacity(params.rc_count());
+            let mut prev = 0u64;
+            for _ in 0..params.rc_count() {
+                rc.push(sampler.sample());
+                let now = sampler.bits_consumed();
+                rc_cost.push(now - prev);
+                prev = now;
+            }
+            let (noise, noise_cost) = if params.scheme == Scheme::Rubato {
+                let mut nxof =
+                    xof_kind.instantiate(nonce ^ 0x4147_4E00, counter ^ 0x4E4F_4953_4500);
+                let mut dgd = DiscreteGaussian::new(RUBATO_SIGMA);
+                let mut noise = Vec::with_capacity(params.l);
+                let mut cost = Vec::with_capacity(params.l);
+                for _ in 0..params.l {
+                    noise.push(dgd.sample(nxof.as_mut()));
+                    cost.push(dgd.bits_per_sample() as u64);
+                }
+                (noise, cost)
+            } else {
+                (Vec::new(), Vec::new())
+            };
+            row.push(LaneRandomness {
+                rc,
+                rc_cost,
+                noise,
+                noise_cost,
+            });
+        }
+        out.push(row);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cipher::{Rubato, SecretKey, StreamCipher};
+    use crate::params::ParamSet;
+    use crate::xof::XofKind;
+
+    #[test]
+    fn functional_values_match_cipher() {
+        let p = ParamSet::rubato_128l();
+        let vals = sample_randomness(&p, XofKind::AesCtr, 2, 2, 100);
+        let cipher = Rubato::new(p, XofKind::AesCtr);
+        for b in 0..2 {
+            for l in 0..2 {
+                let (rc, _) = cipher.sample_round_constants(100 + l as u64, b as u64);
+                let (noise, _) = cipher.sample_noise(100 + l as u64, b as u64);
+                assert_eq!(vals[b][l].rc, rc, "block {b} lane {l}");
+                assert_eq!(vals[b][l].noise, noise);
+            }
+        }
+    }
+
+    #[test]
+    fn paper_bit_arithmetic_rubato() {
+        // §IV-C: 188 constants ≈ 4700 bits ≈ 37 AES invocations (128 b each)
+        // — requires the high-acceptance modulus.
+        let p = ParamSet::rubato_128l();
+        let vals = sample_randomness(&p, XofKind::AesCtr, 1, 1, 1);
+        let rc_bits: u64 = vals[0][0].rc_cost.iter().sum();
+        assert!((4700..4900).contains(&rc_bits), "rc_bits={rc_bits}");
+        let aes_blocks = (rc_bits as f64 / 128.0).ceil() as u64;
+        assert!((37..=39).contains(&aes_blocks), "{aes_blocks} AES blocks");
+    }
+
+    #[test]
+    fn producer_sequence_indexing() {
+        let p = ParamSet::rubato_128l();
+        let vals = sample_randomness(&p, XofKind::AesCtr, 1, 1, 2);
+        let lr = &vals[0][0];
+        assert_eq!(lr.value_count(), 188 + 60);
+        assert_eq!(lr.cost(0), lr.rc_cost[0]);
+        assert_eq!(lr.cost(188), lr.noise_cost[0]);
+        assert_eq!(lr.cost(247), lr.noise_cost[59]);
+        assert!(lr.total_bits() > 4700 + 60 * 65 - 100);
+    }
+
+    #[test]
+    fn hera_has_no_noise() {
+        let p = ParamSet::hera_128a();
+        let vals = sample_randomness(&p, XofKind::AesCtr, 1, 1, 3);
+        assert!(vals[0][0].noise.is_empty());
+        assert_eq!(vals[0][0].value_count(), 96);
+    }
+
+    #[test]
+    fn keystream_from_sampled_constants_matches_reference() {
+        let p = ParamSet::rubato_128l();
+        let vals = sample_randomness(&p, XofKind::AesCtr, 1, 1, 42);
+        let key = SecretKey::generate(&p, 5);
+        let cipher = Rubato::new(p, XofKind::AesCtr);
+        let via = cipher.keystream_from_rc(&key, &vals[0][0].rc, &vals[0][0].noise);
+        assert_eq!(via, cipher.keystream(&key, 42, 0).ks);
+    }
+}

@@ -1,0 +1,209 @@
+//! Schedule tracing and the ASCII data-schedule renderer.
+//!
+//! The paper's Figures 2a–2d and 3a–3b show, per cycle and per functional
+//! unit, which state elements each module emits — making the pipeline
+//! bubbles (and their elimination) visible. The simulator records a
+//! [`TraceEvent`] per slice emission; [`ScheduleTrace::render`] reproduces
+//! the figures as a cycle-by-unit text grid with explicit `·` idle cells
+//! (the paper's "Bubble").
+
+use std::fmt::Write as _;
+
+/// Physical functional units of one lane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnitId {
+    /// Add-round-key unit.
+    Ark = 0,
+    /// Fused MixColumns/MixRows unit.
+    Mrmc = 1,
+    /// Nonlinear unit (Cube or Feistel).
+    Nl = 2,
+    /// Gaussian-noise adder.
+    Agn = 3,
+}
+
+impl UnitId {
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            UnitId::Ark => "ARK",
+            UnitId::Mrmc => "MRMC",
+            UnitId::Nl => "NL",
+            UnitId::Agn => "AGN",
+        }
+    }
+
+    /// All units in display order (matching the paper's figures: MRMC on
+    /// top, then the nonlinear unit, then ARK, then AGN).
+    pub fn display_order() -> [UnitId; 4] {
+        [UnitId::Mrmc, UnitId::Nl, UnitId::Ark, UnitId::Agn]
+    }
+}
+
+/// One slice emission.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    /// Block index within the simulation.
+    pub block: usize,
+    /// Emitting unit.
+    pub unit: UnitId,
+    /// Emission cycle.
+    pub cycle: u64,
+    /// Label of the first element of the slice (e.g. `x9`, `y1`, `f17`).
+    pub label: String,
+}
+
+/// Recorded schedule of lane 0.
+#[derive(Debug, Clone)]
+pub struct ScheduleTrace {
+    events: Vec<TraceEvent>,
+    /// Slice width (elements per emission), for the header.
+    pub width: usize,
+}
+
+impl ScheduleTrace {
+    /// Empty trace for slices of `width` elements.
+    pub fn new(width: usize) -> ScheduleTrace {
+        ScheduleTrace {
+            events: Vec::new(),
+            width,
+        }
+    }
+
+    /// Record one emission.
+    pub fn push(&mut self, e: TraceEvent) {
+        self.events.push(e);
+    }
+
+    /// All events (sorted by cycle on demand by callers).
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    /// Events of one block.
+    pub fn block_events(&self, block: usize) -> Vec<&TraceEvent> {
+        self.events.iter().filter(|e| e.block == block).collect()
+    }
+
+    /// Longest idle gap (in cycles) on a unit within a block — the
+    /// "bubble" metric. Returns 0 if the unit emitted fewer than 2 slices.
+    pub fn max_gap(&self, block: usize, unit: UnitId) -> u64 {
+        let mut cycles: Vec<u64> = self
+            .events
+            .iter()
+            .filter(|e| e.block == block && e.unit == unit)
+            .map(|e| e.cycle)
+            .collect();
+        cycles.sort_unstable();
+        cycles
+            .windows(2)
+            .map(|w| w[1].saturating_sub(w[0]).saturating_sub(1))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Render one block's schedule as a text grid (the paper's figure
+    /// format): rows = units, columns = cycles, cells = emitted slice
+    /// label or `·` when idle.
+    pub fn render(&self, block: usize) -> String {
+        let evs = self.block_events(block);
+        if evs.is_empty() {
+            return String::from("(empty trace)\n");
+        }
+        let c0 = evs.iter().map(|e| e.cycle).min().unwrap();
+        let c1 = evs.iter().map(|e| e.cycle).max().unwrap();
+        let span = (c1 - c0 + 1) as usize;
+        let cell = 5usize;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "block {block}: cycles {c0}..{c1} ({} elements per emission)",
+            self.width
+        );
+        // Header row.
+        let _ = write!(out, "{:<8}|", "cycle");
+        for c in 0..span {
+            let _ = write!(out, "{:>cell$}", c0 as usize + c);
+        }
+        out.push('\n');
+        let _ = writeln!(out, "{}", "-".repeat(9 + span * cell));
+        for unit in UnitId::display_order() {
+            let row: Vec<&&TraceEvent> =
+                evs.iter().filter(|e| e.unit == unit).collect();
+            if row.is_empty() {
+                continue;
+            }
+            let _ = write!(out, "{:<8}|", unit.name());
+            for c in 0..span {
+                let cyc = c0 + c as u64;
+                match row.iter().find(|e| e.cycle == cyc) {
+                    Some(e) => {
+                        let _ = write!(out, "{:>cell$}", e.label);
+                    }
+                    None => {
+                        let _ = write!(out, "{:>cell$}", "·");
+                    }
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(unit: UnitId, cycle: u64, label: &str) -> TraceEvent {
+        TraceEvent {
+            block: 0,
+            unit,
+            cycle,
+            label: label.to_string(),
+        }
+    }
+
+    #[test]
+    fn max_gap_detects_bubbles() {
+        let mut t = ScheduleTrace::new(8);
+        t.push(ev(UnitId::Mrmc, 10, "y1"));
+        t.push(ev(UnitId::Mrmc, 11, "y2"));
+        t.push(ev(UnitId::Mrmc, 20, "y3")); // 8-cycle bubble
+        assert_eq!(t.max_gap(0, UnitId::Mrmc), 8);
+        assert_eq!(t.max_gap(0, UnitId::Ark), 0);
+    }
+
+    #[test]
+    fn render_contains_units_and_labels() {
+        let mut t = ScheduleTrace::new(4);
+        t.push(ev(UnitId::Ark, 1, "x1"));
+        t.push(ev(UnitId::Mrmc, 3, "y1"));
+        let s = t.render(0);
+        assert!(s.contains("ARK"));
+        assert!(s.contains("MRMC"));
+        assert!(s.contains("x1"));
+        assert!(s.contains("y1"));
+        assert!(s.contains("·")); // idle cell at cycle 2
+    }
+
+    #[test]
+    fn block_filtering() {
+        let mut t = ScheduleTrace::new(1);
+        t.push(TraceEvent {
+            block: 0,
+            unit: UnitId::Ark,
+            cycle: 1,
+            label: "x1".into(),
+        });
+        t.push(TraceEvent {
+            block: 1,
+            unit: UnitId::Ark,
+            cycle: 9,
+            label: "x1".into(),
+        });
+        assert_eq!(t.block_events(0).len(), 1);
+        assert_eq!(t.block_events(1).len(), 1);
+        assert!(t.render(1).contains("block 1"));
+    }
+}

@@ -1,0 +1,57 @@
+//! # Presto — hardware acceleration of ciphers for hybrid homomorphic encryption
+//!
+//! A full-system reproduction of *"Presto: Hardware Acceleration of Ciphers
+//! for Hybrid Homomorphic Encryption"* (Jeon, Erez, Orshansky, 2025).
+//!
+//! The paper builds FPGA accelerators for the two CKKS-targeting HHE stream
+//! ciphers, **HERA** and **Rubato**, around three microarchitectural ideas:
+//! vectorization + function overlapping, the **MRMC** transposition-invariance
+//! data schedule that eliminates pipeline bubbles, and **RNG decoupling** that
+//! hides the latency of round-constant sampling and shrinks the constant FIFO.
+//!
+//! This crate contains every subsystem the paper describes or depends on:
+//!
+//! * [`arith`] — Z_q modular arithmetic (Barrett reduction, shift-add constant
+//!   multiplication mirroring the paper's DSP→LUT optimization).
+//! * [`xof`] — from-scratch AES-128 (FIPS-197 checked) in CTR mode and
+//!   SHAKE256 (Keccak-f[1600]) extendable-output functions.
+//! * [`sampler`] — rejection sampler for uniform Z_q and the inverse-CDF
+//!   discrete Gaussian sampler used by Rubato's AGN layer.
+//! * [`cipher`] — reference software implementations of HERA and Rubato
+//!   (the paper's "SW" baseline rows) plus all shared components.
+//! * [`rtf`] — Real-to-Finite encoding of real-valued client data into Z_q.
+//! * [`hw`] — a cycle-accurate model of the accelerator microarchitecture:
+//!   functional units, FIFOs, the controller, design points D1/D2/D3, a
+//!   schedule tracer (reproducing the paper's Figures 2–3), and analytic
+//!   frequency / power / resource models (Tables I–IV).
+//! * [`he`] — a BFV homomorphic-encryption substrate (negacyclic polynomial
+//!   rings, NTT, RLWE) and the RtF transciphering demo.
+//! * [`runtime`] — PJRT runtime that loads the AOT-compiled JAX/Pallas
+//!   keystream artifacts (HLO text) and executes them from Rust.
+//! * [`coordinator`] — the client-side encryption service: request router,
+//!   dynamic batcher, decoupled RNG pool feeding a bounded round-constant
+//!   FIFO, keystream executor and encryptor. Python is never on this path.
+//! * [`workload`] — synthetic client traffic generation (Poisson arrivals).
+//! * [`bench`] — the measurement harness used by `cargo bench` targets.
+//! * [`util`] — internal substrates: minimal JSON, CLI parsing, PRNG,
+//!   statistics, and a property-testing helper.
+//!
+//! See `DESIGN.md` for the hardware-substitution rationale and the
+//! per-experiment index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod arith;
+pub mod bench;
+pub mod cipher;
+pub mod coordinator;
+pub mod he;
+pub mod hw;
+pub mod params;
+pub mod rtf;
+pub mod runtime;
+pub mod sampler;
+pub mod testutil;
+pub mod util;
+pub mod workload;
+pub mod xof;
+
+pub use params::{ParamSet, Scheme};

@@ -1,0 +1,35 @@
+//! `presto` — CLI entrypoint for the Presto reproduction.
+//!
+//! Subcommands (run `presto help` for details):
+//! * `keygen`    — generate and print a secret key for a parameter set.
+//! * `keystream` — generate stream-key blocks with the software cipher.
+//! * `encrypt`   — encrypt a real-valued vector (RtF encode + keystream).
+//! * `serve`     — run the client-side encryption service (L3 coordinator).
+//! * `simulate`  — run the cycle-accurate accelerator simulator.
+//! * `tables`    — regenerate the paper's tables/figures (see repro-tables).
+
+use presto::util::cli::Args;
+
+mod commands;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let code = match cmd {
+        "keygen" => commands::keygen(&args),
+        "keystream" => commands::keystream(&args),
+        "encrypt" => commands::encrypt(&args),
+        "serve" => commands::serve(&args),
+        "simulate" => commands::simulate(&args),
+        "tables" => commands::tables(&args),
+        "help" | "--help" | "-h" => {
+            print!("{}", commands::USAGE);
+            0
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n\n{}", commands::USAGE);
+            2
+        }
+    };
+    std::process::exit(code);
+}

@@ -1,0 +1,211 @@
+//! Cipher parameter sets.
+//!
+//! The moduli are representative NTT-friendly primes of the bit widths the
+//! paper's arithmetic implies (Rubato Par-128L: 188 round constants ≈ 4700
+//! random bits ⇒ 25 bits per constant; HERA Par-128a: 96 constants at
+//! 26 bits). Exact constants from the original cipher specifications do not
+//! change any performance behaviour; functional vectors are self-generated
+//! and cross-validated Rust ↔ JAX ↔ PJRT (see `rust/tests/golden_cross_layer.rs`).
+
+use crate::arith::Zq;
+
+/// HERA Par-128a modulus: 26-bit prime, `q ≡ 1 (mod 2^16)`, with
+/// `gcd(3, q-1) = 1` so the Cube S-box is a bijection. Chosen just below
+/// 2^26 so rejection-sampling acceptance is ≈ 0.98 — this is what makes the
+/// paper's "constants ≈ ideal bits / XOF rate" arithmetic hold (§IV-C).
+pub const HERA_Q: u32 = 65_929_217; // 0x3EE0001
+
+/// Rubato modulus (all Par-128 sets): 25-bit prime, `q ≡ 1 (mod 2^16)`,
+/// just below 2^25 (acceptance ≈ 0.992): 188 constants × 25 bits ≈ 4700
+/// random bits ≈ 37 AES invocations, matching the paper's §IV-C estimate.
+pub const RUBATO_Q: u32 = 33_292_289; // 0x1FC0001
+
+/// Standard deviation of Rubato's AGN discrete Gaussian noise.
+pub const RUBATO_SIGMA: f64 = 1.6;
+
+/// Which cipher a parameter set instantiates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    /// HERA: Cube nonlinearity, fixed n = 16, no noise/truncation.
+    Hera,
+    /// Rubato: Feistel nonlinearity, n ∈ {16, 36, 64}, truncation + AGN.
+    Rubato,
+}
+
+impl Scheme {
+    /// Lowercase name used in CLIs and artifact file names.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::Hera => "hera",
+            Scheme::Rubato => "rubato",
+        }
+    }
+}
+
+/// A fully-specified cipher instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParamSet {
+    /// Human-readable identifier, e.g. `"hera-128a"`.
+    pub name: &'static str,
+    /// Cipher family.
+    pub scheme: Scheme,
+    /// State size n (number of Z_q elements).
+    pub n: usize,
+    /// Matrix dimension v = sqrt(n).
+    pub v: usize,
+    /// Number of rounds r (the stream-key function applies r-1 RF layers
+    /// plus the Fin layer after the initial ARK).
+    pub rounds: usize,
+    /// Keystream length l after truncation (l = n for HERA).
+    pub l: usize,
+    /// Field modulus.
+    pub q: u32,
+    /// Security parameter λ (bits).
+    pub lambda: u32,
+}
+
+impl ParamSet {
+    /// HERA Par-128a: n = 16, r = 5, 26-bit q.
+    pub const fn hera_128a() -> Self {
+        ParamSet {
+            name: "hera-128a",
+            scheme: Scheme::Hera,
+            n: 16,
+            v: 4,
+            rounds: 5,
+            l: 16,
+            q: HERA_Q,
+            lambda: 128,
+        }
+    }
+
+    /// Rubato Par-128S: n = 16, r = 2, l = 12.
+    pub const fn rubato_128s() -> Self {
+        ParamSet {
+            name: "rubato-128s",
+            scheme: Scheme::Rubato,
+            n: 16,
+            v: 4,
+            rounds: 2,
+            l: 12,
+            q: RUBATO_Q,
+            lambda: 128,
+        }
+    }
+
+    /// Rubato Par-128M: n = 36, r = 2, l = 32.
+    pub const fn rubato_128m() -> Self {
+        ParamSet {
+            name: "rubato-128m",
+            scheme: Scheme::Rubato,
+            n: 36,
+            v: 6,
+            rounds: 2,
+            l: 32,
+            q: RUBATO_Q,
+            lambda: 128,
+        }
+    }
+
+    /// Rubato Par-128L: n = 64, r = 2, l = 60 — the set the paper evaluates.
+    pub const fn rubato_128l() -> Self {
+        ParamSet {
+            name: "rubato-128l",
+            scheme: Scheme::Rubato,
+            n: 64,
+            v: 8,
+            rounds: 2,
+            l: 60,
+            q: RUBATO_Q,
+            lambda: 128,
+        }
+    }
+
+    /// All built-in parameter sets.
+    pub fn all() -> [ParamSet; 4] {
+        [
+            Self::hera_128a(),
+            Self::rubato_128s(),
+            Self::rubato_128m(),
+            Self::rubato_128l(),
+        ]
+    }
+
+    /// Look a parameter set up by name.
+    pub fn by_name(name: &str) -> Option<ParamSet> {
+        Self::all().into_iter().find(|p| p.name == name)
+    }
+
+    /// The field Z_q for this set.
+    pub fn field(&self) -> Zq {
+        Zq::new(self.q)
+    }
+
+    /// Number of ARK applications per stream-key generation:
+    /// initial ARK + (r-1) RF layers + the Fin layer's ARK.
+    pub const fn ark_count(&self) -> usize {
+        self.rounds + 1
+    }
+
+    /// Total round constants consumed per stream-key generation.
+    ///
+    /// Every ARK needs n constants except the final one, which feeds the
+    /// truncated state and needs only l (the paper's "l round constants for
+    /// the final layer"): HERA-128a ⇒ 96, Rubato-128L ⇒ 64+64+60 = 188.
+    pub const fn rc_count(&self) -> usize {
+        self.rounds * self.n + self.l
+    }
+
+    /// Random bits needed per round constant (rejection-sampling width).
+    pub const fn rc_bits(&self) -> u32 {
+        32 - (self.q - 1).leading_zeros()
+    }
+
+    /// Whether this set adds discrete Gaussian noise (Rubato only).
+    pub const fn has_noise(&self) -> bool {
+        matches!(self.scheme, Scheme::Rubato)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parameter_sets_are_consistent() {
+        for p in ParamSet::all() {
+            assert_eq!(p.v * p.v, p.n, "{}: v^2 != n", p.name);
+            assert!(p.l <= p.n, "{}: l > n", p.name);
+            assert!(Zq::is_prime(p.q as u64), "{}: q not prime", p.name);
+            // NTT-friendliness for the RtF/FV side: q ≡ 1 mod 2^16.
+            assert_eq!((p.q - 1) % (1 << 16), 0, "{}: q not NTT-friendly", p.name);
+        }
+    }
+
+    #[test]
+    fn rc_counts_match_paper() {
+        // §IV-C: HERA needs 96 round constants, Rubato Par-128L needs 188.
+        assert_eq!(ParamSet::hera_128a().rc_count(), 96);
+        assert_eq!(ParamSet::rubato_128l().rc_count(), 188);
+        // ... and ~4700 random bits for Rubato-128L (188 × 25 = 4700).
+        let p = ParamSet::rubato_128l();
+        assert_eq!(p.rc_count() as u32 * p.rc_bits(), 4700);
+        assert_eq!(p.rc_bits(), 25);
+        assert_eq!(ParamSet::hera_128a().rc_bits(), 26);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(
+            ParamSet::by_name("rubato-128l"),
+            Some(ParamSet::rubato_128l())
+        );
+        assert!(ParamSet::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn ark_counts() {
+        assert_eq!(ParamSet::hera_128a().ark_count(), 6);
+        assert_eq!(ParamSet::rubato_128l().ark_count(), 3);
+    }
+}

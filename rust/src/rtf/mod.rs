@@ -1,0 +1,131 @@
+//! Real-to-Finite (RtF) encoding (paper §II).
+//!
+//! In the RtF transciphering framework the client holds real-valued data,
+//! scales it into Z_q fixed-point, and symmetric-encrypts the result; the
+//! server homomorphically decrypts under FV and hands the (scaled) values
+//! to CKKS via HalfBoot. This module implements the client-side codec:
+//! `encode(x) = round(x * Δ) mod q` with scale Δ, and the inverse decode of
+//! centered representatives. Values must satisfy `|x| * Δ < q/2`.
+
+use crate::arith::{Elem, Zq};
+
+/// Fixed-point codec between `f64` and Z_q.
+#[derive(Debug, Clone, Copy)]
+pub struct RtfCodec {
+    field: Zq,
+    /// Scale factor Δ (power of two by convention; any positive value works).
+    pub delta: f64,
+}
+
+impl RtfCodec {
+    /// Codec with scale `delta` over modulus `q`.
+    pub fn new(q: u32, delta: f64) -> Self {
+        assert!(delta > 0.0);
+        RtfCodec {
+            field: Zq::new(q),
+            delta,
+        }
+    }
+
+    /// Default codec for a cipher parameter set: Δ = 2^10, leaving
+    /// |x| < q / 2^11 of headroom (≈ ±8000 for Rubato's 25-bit q) — ample
+    /// for normalized ML feature vectors.
+    pub fn for_params(p: &crate::params::ParamSet) -> Self {
+        Self::new(p.q, 1024.0)
+    }
+
+    /// Largest encodable magnitude.
+    pub fn max_magnitude(&self) -> f64 {
+        (self.field.q() as f64 / 2.0 - 1.0) / self.delta
+    }
+
+    /// Encode one real value.
+    pub fn encode(&self, x: f64) -> Elem {
+        let scaled = (x * self.delta).round();
+        assert!(
+            scaled.abs() < self.field.q() as f64 / 2.0,
+            "value {x} out of encodable range ±{}",
+            self.max_magnitude()
+        );
+        self.field.from_i64(scaled as i64)
+    }
+
+    /// Decode one element back to a real value.
+    pub fn decode(&self, e: Elem) -> f64 {
+        self.field.to_centered(e) as f64 / self.delta
+    }
+
+    /// Encode a vector.
+    pub fn encode_vec(&self, xs: &[f64]) -> Vec<Elem> {
+        xs.iter().map(|&x| self.encode(x)).collect()
+    }
+
+    /// Decode a vector.
+    pub fn decode_vec(&self, es: &[Elem]) -> Vec<f64> {
+        es.iter().map(|&e| self.decode(e)).collect()
+    }
+
+    /// Quantization error bound: |decode(encode(x)) - x| ≤ 1/(2Δ).
+    pub fn quantization_bound(&self) -> f64 {
+        0.5 / self.delta
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::ParamSet;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn roundtrip_within_quantization_error() {
+        let codec = RtfCodec::for_params(&ParamSet::rubato_128l());
+        let mut rng = SplitMix64::new(1);
+        for _ in 0..10_000 {
+            let x = (rng.next_f64() - 0.5) * 2.0 * codec.max_magnitude() * 0.99;
+            let y = codec.decode(codec.encode(x));
+            assert!(
+                (x - y).abs() <= codec.quantization_bound() + 1e-12,
+                "x={x} y={y}"
+            );
+        }
+    }
+
+    #[test]
+    fn negative_values_are_centered() {
+        let codec = RtfCodec::new(17367041, 1024.0);
+        let e = codec.encode(-1.5);
+        assert_eq!(codec.decode(e), -1.5);
+        assert!(e > 17367041 / 2); // stored in upper half
+    }
+
+    #[test]
+    fn zero_maps_to_zero() {
+        let codec = RtfCodec::for_params(&ParamSet::hera_128a());
+        assert_eq!(codec.encode(0.0), 0);
+        assert_eq!(codec.decode(0), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of encodable range")]
+    fn overflow_panics() {
+        let codec = RtfCodec::new(17367041, 1024.0);
+        codec.encode(codec.max_magnitude() * 2.0);
+    }
+
+    #[test]
+    fn homomorphic_addition_of_encodings() {
+        // encode(a) + encode(b) ≈ encode(a+b): the property the RtF
+        // pipeline relies on (keystream add/sub commutes with decode).
+        let p = ParamSet::rubato_128l();
+        let codec = RtfCodec::for_params(&p);
+        let f = Zq::new(p.q);
+        let mut rng = SplitMix64::new(2);
+        for _ in 0..1000 {
+            let a = (rng.next_f64() - 0.5) * 100.0;
+            let b = (rng.next_f64() - 0.5) * 100.0;
+            let sum = codec.decode(f.add(codec.encode(a), codec.encode(b)));
+            assert!((sum - (a + b)).abs() <= 2.0 * codec.quantization_bound() + 1e-12);
+        }
+    }
+}

@@ -1,0 +1,175 @@
+//! PJRT runtime: load and execute the AOT-compiled keystream artifacts.
+//!
+//! The compile path (`python/compile/aot.py`) lowers the JAX/Pallas model
+//! to HLO *text*; this module loads it with `HloModuleProto::from_text_file`,
+//! compiles it on the PJRT CPU client, and executes it with `u64` literals
+//! from the request path. One compiled executable per (parameter set,
+//! batch) pair. Python is never involved at runtime.
+
+use crate::arith::Elem;
+use crate::params::{ParamSet, Scheme};
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// A compiled keystream executable for one parameter set.
+pub struct KeystreamExecutable {
+    params: ParamSet,
+    batch: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime holding the client and loaded executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    /// Name of the PJRT platform (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Artifact file name convention shared with `aot.py`.
+    pub fn artifact_path(dir: &Path, params: &ParamSet, batch: usize) -> PathBuf {
+        dir.join(format!("{}_b{}.hlo.txt", params.name.replace('-', "_"), batch))
+    }
+
+    /// Load and compile a keystream artifact.
+    pub fn load_keystream(
+        &self,
+        dir: &Path,
+        params: ParamSet,
+        batch: usize,
+    ) -> Result<KeystreamExecutable> {
+        let path = Self::artifact_path(dir, &params, batch);
+        if !path.exists() {
+            bail!(
+                "artifact {} not found — run `make artifacts` first",
+                path.display()
+            );
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(KeystreamExecutable { params, batch, exe })
+    }
+}
+
+impl KeystreamExecutable {
+    /// The parameter set this executable was compiled for.
+    pub fn params(&self) -> &ParamSet {
+        &self.params
+    }
+
+    /// Compiled batch size (lanes per execution).
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Execute one batch of keystream generations.
+    ///
+    /// * `keys`  — `batch` keys, each of n elements.
+    /// * `rcs`   — `batch` round-constant vectors, each rc_count elements.
+    /// * `noise` — `batch` centered noise vectors of l elements (Rubato);
+    ///   must be empty for HERA.
+    ///
+    /// Returns `batch` keystream vectors of l elements.
+    pub fn run(
+        &self,
+        keys: &[Vec<Elem>],
+        rcs: &[Vec<Elem>],
+        noise: &[Vec<i64>],
+    ) -> Result<Vec<Vec<Elem>>> {
+        let p = &self.params;
+        let b = self.batch;
+        if keys.len() != b || rcs.len() != b {
+            bail!("expected {} lanes, got {} keys / {} rcs", b, keys.len(), rcs.len());
+        }
+        let f = p.field();
+
+        let key_lit = pack_u64(keys, p.n, |&x| x as u64)?;
+        let rc_lit = pack_u64(rcs, p.rc_count(), |&x| x as u64)?;
+        let key_lit = key_lit.reshape(&[b as i64, p.n as i64])?;
+        let rc_lit = rc_lit.reshape(&[b as i64, p.rc_count() as i64])?;
+
+        let inputs: Vec<xla::Literal> = match p.scheme {
+            Scheme::Hera => {
+                if !noise.is_empty() {
+                    bail!("HERA takes no noise input");
+                }
+                vec![key_lit, rc_lit]
+            }
+            Scheme::Rubato => {
+                if noise.len() != b {
+                    bail!("expected {} noise lanes, got {}", b, noise.len());
+                }
+                let noise_lit = pack_u64(noise, p.l, |&e| f.from_i64(e) as u64)?
+                    .reshape(&[b as i64, p.l as i64])?;
+                vec![key_lit, rc_lit, noise_lit]
+            }
+        };
+
+        let result = self.exe.execute::<xla::Literal>(&inputs)?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().context("unwrapping result tuple")?;
+        let flat: Vec<u64> = out.to_vec().context("reading keystream values")?;
+        if flat.len() != b * p.l {
+            bail!("expected {} output elements, got {}", b * p.l, flat.len());
+        }
+        Ok(flat
+            .chunks_exact(p.l)
+            .map(|lane| lane.iter().map(|&x| x as Elem).collect())
+            .collect())
+    }
+}
+
+/// Flatten `rows` (each of length `width`) into one u64 literal.
+fn pack_u64<T>(rows: &[Vec<T>], width: usize, conv: impl Fn(&T) -> u64) -> Result<xla::Literal> {
+    let mut flat = Vec::with_capacity(rows.len() * width);
+    for (i, row) in rows.iter().enumerate() {
+        if row.len() != width {
+            bail!("lane {} has {} elements, expected {}", i, row.len(), width);
+        }
+        flat.extend(row.iter().map(&conv));
+    }
+    Ok(xla::Literal::vec1(&flat))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_path_convention_matches_aot() {
+        let p = ParamSet::rubato_128l();
+        let path = Runtime::artifact_path(Path::new("artifacts"), &p, 8);
+        assert_eq!(path.to_str().unwrap(), "artifacts/rubato_128l_b8.hlo.txt");
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        let rt = Runtime::cpu().expect("cpu client");
+        let err = match rt.load_keystream(Path::new("/nonexistent"), ParamSet::hera_128a(), 8) {
+            Err(e) => e,
+            Ok(_) => panic!("loading a missing artifact should fail"),
+        };
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+
+    // Full load-and-execute coverage lives in rust/tests/integration_runtime.rs
+    // and rust/tests/golden_cross_layer.rs (needs `make artifacts`).
+}

@@ -1,0 +1,217 @@
+//! Discrete Gaussian sampler via the inverse-CDF method.
+//!
+//! Rubato's AGN layer adds noise `e_i` sampled from a discrete Gaussian
+//! D_{Z,σ}. The paper (§IV-D) implements the sampler as an inverse-CDF
+//! lookup table whose CDF values are stored at (λ/2)-bit precision
+//! (Micciancio–Walter-style constant-time table sampling); the random
+//! source is the AES XOF. We use a 64-bit fixed-point table (λ = 128) and
+//! a tail cut at 13σ (tail mass < 2^-120, far below the 2^-64 precision).
+
+use crate::xof::Xof;
+
+/// Inverse-CDF discrete Gaussian sampler over Z with parameter σ.
+pub struct DiscreteGaussian {
+    /// cdf[i] = round(2^64 * P(|X| values enumerated in CDF order up to i)).
+    /// Entries are cumulative probabilities of the values 0, ±1, ±2, …
+    /// stored as (value magnitude, cumulative) pairs over the positive side;
+    /// the sign consumes one extra bit.
+    cdf: Vec<u64>,
+    sigma: f64,
+    bits_per_sample: u32,
+    bits_consumed: u64,
+    sign_buf: u8,
+    sign_bits: u32,
+}
+
+impl DiscreteGaussian {
+    /// Build the CDF table for standard deviation `sigma > 0`.
+    pub fn new(sigma: f64) -> Self {
+        assert!(sigma > 0.0, "sigma must be positive");
+        let tail = (13.0 * sigma).ceil() as i64;
+        // Unnormalized probabilities ρ(k) = exp(-k² / 2σ²) for k = 0..tail.
+        let rho = |k: i64| (-((k * k) as f64) / (2.0 * sigma * sigma)).exp();
+        let mut mass = rho(0);
+        for k in 1..=tail {
+            mass += 2.0 * rho(k);
+        }
+        // CDF over the *magnitude* distribution: P(0), P(0)+P(±1), ...
+        // We sample magnitude from this table and a sign bit (0 maps to +).
+        let mut cdf = Vec::with_capacity(tail as usize + 1);
+        let mut acc = rho(0) / mass;
+        cdf.push(scale_u64(acc));
+        for k in 1..=tail {
+            acc += 2.0 * rho(k) / mass;
+            cdf.push(scale_u64(acc));
+        }
+        *cdf.last_mut().unwrap() = u64::MAX; // absorb fp rounding in the tail
+        DiscreteGaussian {
+            cdf,
+            sigma,
+            bits_per_sample: 65, // 64 CDF bits + 1 sign bit
+            bits_consumed: 0,
+            sign_buf: 0,
+            sign_bits: 0,
+        }
+    }
+
+    /// The σ this table was built for.
+    pub fn sigma(&self) -> f64 {
+        self.sigma
+    }
+
+    /// Random bits consumed per sample (used by the simulator's timing
+    /// model: 65 bits ⇒ one sample needs just over half an AES block).
+    pub fn bits_per_sample(&self) -> u32 {
+        self.bits_per_sample
+    }
+
+    /// Total bits consumed so far.
+    pub fn bits_consumed(&self) -> u64 {
+        self.bits_consumed
+    }
+
+    /// Draw one sample from D_{Z,σ} (consumes 64 CDF bits + 1 sign bit,
+    /// bit-packed: the sign bits of 8 consecutive samples share one byte,
+    /// matching the hardware's bit-serial consumption).
+    pub fn sample(&mut self, xof: &mut dyn Xof) -> i64 {
+        let mut buf = [0u8; 8];
+        xof.squeeze(&mut buf);
+        if self.sign_bits == 0 {
+            let mut s = [0u8; 1];
+            xof.squeeze(&mut s);
+            self.sign_buf = s[0];
+            self.sign_bits = 8;
+        }
+        let sign_bit = self.sign_buf & 1;
+        self.sign_buf >>= 1;
+        self.sign_bits -= 1;
+        self.bits_consumed += 65;
+        let u = u64::from_le_bytes(buf);
+        // Binary search: first index with cdf[idx] > u gives the magnitude.
+        let mag = match self.cdf.binary_search(&u) {
+            Ok(i) => i + 1, // u exactly on a boundary belongs to the next bin
+            Err(i) => i,
+        } as i64;
+        let mag = mag.min(self.cdf.len() as i64 - 1);
+        if mag == 0 || sign_bit == 0 {
+            mag
+        } else {
+            -mag
+        }
+    }
+
+    /// Fill a slice with samples.
+    pub fn sample_into(&mut self, xof: &mut dyn Xof, out: &mut [i64]) {
+        for o in out.iter_mut() {
+            *o = self.sample(xof);
+        }
+    }
+
+    /// Size of the CDF table in entries (the hardware stores this in BRAM;
+    /// the resource model reads it from here).
+    pub fn table_len(&self) -> usize {
+        self.cdf.len()
+    }
+}
+
+fn scale_u64(p: f64) -> u64 {
+    if p >= 1.0 {
+        u64::MAX
+    } else {
+        (p * (u64::MAX as f64)) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::RUBATO_SIGMA;
+    use crate::xof::XofKind;
+
+    #[test]
+    fn moments_match_sigma() {
+        let mut g = DiscreteGaussian::new(RUBATO_SIGMA);
+        let mut x = XofKind::AesCtr.instantiate(21, 0);
+        let n = 200_000;
+        let mut sum = 0i64;
+        let mut sumsq = 0i64;
+        for _ in 0..n {
+            let s = g.sample(x.as_mut());
+            sum += s;
+            sumsq += s * s;
+        }
+        let mean = sum as f64 / n as f64;
+        let var = sumsq as f64 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        // Discrete Gaussian variance ≈ σ² for σ ≥ 1.
+        assert!(
+            (var - RUBATO_SIGMA * RUBATO_SIGMA).abs() < 0.1,
+            "var={var} expect≈{}",
+            RUBATO_SIGMA * RUBATO_SIGMA
+        );
+    }
+
+    #[test]
+    fn symmetric_distribution() {
+        let mut g = DiscreteGaussian::new(1.6);
+        let mut x = XofKind::AesCtr.instantiate(5, 5);
+        let (mut pos, mut neg) = (0u64, 0u64);
+        for _ in 0..100_000 {
+            match g.sample(x.as_mut()).signum() {
+                1 => pos += 1,
+                -1 => neg += 1,
+                _ => {}
+            }
+        }
+        let ratio = pos as f64 / neg as f64;
+        assert!((ratio - 1.0).abs() < 0.05, "pos/neg={ratio}");
+    }
+
+    #[test]
+    fn deterministic_given_stream() {
+        let mut g1 = DiscreteGaussian::new(1.6);
+        let mut g2 = DiscreteGaussian::new(1.6);
+        let mut x1 = XofKind::AesCtr.instantiate(8, 1);
+        let mut x2 = XofKind::AesCtr.instantiate(8, 1);
+        for _ in 0..1000 {
+            assert_eq!(g1.sample(x1.as_mut()), g2.sample(x2.as_mut()));
+        }
+    }
+
+    #[test]
+    fn tail_is_bounded() {
+        let sigma = 1.6;
+        let mut g = DiscreteGaussian::new(sigma);
+        let bound = (13.0 * sigma).ceil() as i64;
+        let mut x = XofKind::Shake256.instantiate(1, 1);
+        for _ in 0..50_000 {
+            let s = g.sample(x.as_mut());
+            assert!(s.abs() <= bound, "sample {s} beyond tail cut {bound}");
+        }
+    }
+
+    #[test]
+    fn bits_accounting() {
+        let mut g = DiscreteGaussian::new(1.6);
+        let mut x = XofKind::AesCtr.instantiate(2, 2);
+        let mut out = vec![0i64; 60];
+        g.sample_into(x.as_mut(), &mut out);
+        assert_eq!(g.bits_consumed(), 60 * 65);
+    }
+
+    #[test]
+    fn probability_of_zero_matches_theory() {
+        let sigma = 1.6f64;
+        let mut g = DiscreteGaussian::new(sigma);
+        let mut x = XofKind::AesCtr.instantiate(77, 0);
+        let n = 200_000;
+        let zeros = (0..n).filter(|_| g.sample(x.as_mut()) == 0).count();
+        // theory: rho(0)/mass
+        let rho = |k: i64| (-((k * k) as f64) / (2.0 * sigma * sigma)).exp();
+        let tail = (13.0 * sigma).ceil() as i64;
+        let mass: f64 = rho(0) + (1..=tail).map(|k| 2.0 * rho(k)).sum::<f64>();
+        let p0 = rho(0) / mass;
+        let measured = zeros as f64 / n as f64;
+        assert!((measured - p0).abs() < 0.01, "measured={measured} p0={p0}");
+    }
+}

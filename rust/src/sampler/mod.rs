@@ -1,0 +1,13 @@
+//! Randomness samplers layered on the XOFs.
+//!
+//! * [`RejectionSampler`] — uniform Z_q by rejection on `ceil(log2 q)`-bit
+//!   draws; used for ARK round constants. The simulator models this exact
+//!   bit-consumption trace, so functional values and timing agree.
+//! * [`DiscreteGaussian`] — inverse-CDF discrete Gaussian used by Rubato's
+//!   AGN layer, with a (λ/2)-bit fixed-point CDF table.
+
+mod dgd;
+mod rejection;
+
+pub use dgd::DiscreteGaussian;
+pub use rejection::RejectionSampler;

@@ -1,0 +1,213 @@
+//! Property-testing helper (offline substitute for `proptest`).
+//!
+//! Provides seeded random-input generation with automatic shrinking for
+//! failing cases. Used by module tests and the `rust/tests/` integration
+//! suites to express invariants ("for all states X, MRMC(Xᵀ) = MRMC(X)ᵀ")
+//! without an external dependency.
+
+use crate::util::rng::SplitMix64;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    /// Number of random cases.
+    pub cases: usize,
+    /// RNG seed (fixed for reproducibility; override to explore).
+    pub seed: u64,
+    /// Maximum shrink iterations after a failure.
+    pub max_shrink: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 256,
+            seed: 0x5EED_CAFE,
+            max_shrink: 512,
+        }
+    }
+}
+
+/// A generator of random values with a shrink relation.
+pub trait Gen {
+    /// Generated value type.
+    type Value: Clone + std::fmt::Debug;
+    /// Generate one random value.
+    fn generate(&self, rng: &mut SplitMix64) -> Self::Value;
+    /// Candidate "smaller" values, tried in order during shrinking.
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let _ = v;
+        Vec::new()
+    }
+}
+
+/// Run `prop` against `cfg.cases` random inputs; on failure, shrink and
+/// panic with the minimal counterexample.
+pub fn check<G: Gen>(cfg: Config, gen: &G, prop: impl Fn(&G::Value) -> bool) {
+    let mut rng = SplitMix64::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let v = gen.generate(&mut rng);
+        if !prop(&v) {
+            // Shrink.
+            let mut cur = v;
+            let mut budget = cfg.max_shrink;
+            'outer: while budget > 0 {
+                for cand in gen.shrink(&cur) {
+                    budget -= 1;
+                    if !prop(&cand) {
+                        cur = cand;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed at case {case} (seed {:#x});\n  minimal counterexample: {:?}",
+                cfg.seed, cur
+            );
+        }
+    }
+}
+
+/// Uniform `u64` in [lo, hi].
+pub struct U64Range {
+    /// Inclusive lower bound.
+    pub lo: u64,
+    /// Inclusive upper bound.
+    pub hi: u64,
+}
+
+impl Gen for U64Range {
+    type Value = u64;
+    fn generate(&self, rng: &mut SplitMix64) -> u64 {
+        self.lo + rng.below(self.hi - self.lo + 1)
+    }
+    fn shrink(&self, v: &u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (v - self.lo) / 2);
+            out.push(v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Vector of uniform Z_q elements with shrinking toward shorter/zeroed
+/// vectors (length is fixed; elements shrink toward 0).
+pub struct ZqVec {
+    /// Modulus.
+    pub q: u32,
+    /// Vector length.
+    pub len: usize,
+}
+
+impl Gen for ZqVec {
+    type Value = Vec<u32>;
+    fn generate(&self, rng: &mut SplitMix64) -> Vec<u32> {
+        (0..self.len)
+            .map(|_| rng.below(self.q as u64) as u32)
+            .collect()
+    }
+    fn shrink(&self, v: &Vec<u32>) -> Vec<Vec<u32>> {
+        let mut out = Vec::new();
+        // Zero out halves, then individual elements.
+        if v.iter().any(|&x| x != 0) {
+            let mut half = v.clone();
+            for x in half.iter_mut().take(v.len() / 2) {
+                *x = 0;
+            }
+            out.push(half);
+            for i in 0..v.len() {
+                if v[i] != 0 {
+                    let mut smaller = v.clone();
+                    smaller[i] = 0;
+                    out.push(smaller);
+                    if out.len() > 8 {
+                        break;
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Pairs of independent generators.
+pub struct Pair<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut SplitMix64) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(Config::default(), &U64Range { lo: 0, hi: 100 }, |&v| v <= 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_counterexample() {
+        check(
+            Config {
+                cases: 1000,
+                ..Config::default()
+            },
+            &U64Range { lo: 0, hi: 1000 },
+            |&v| v < 500,
+        );
+    }
+
+    #[test]
+    fn shrinking_finds_small_counterexample() {
+        // Capture the panic message and confirm the shrunk value is the
+        // boundary 500, not an arbitrary large failure.
+        let result = std::panic::catch_unwind(|| {
+            check(
+                Config {
+                    cases: 2000,
+                    ..Config::default()
+                },
+                &U64Range { lo: 0, hi: 1_000_000 },
+                |&v| v < 500,
+            );
+        });
+        let msg = match result {
+            Err(e) => e
+                .downcast_ref::<String>()
+                .cloned()
+                .unwrap_or_default(),
+            Ok(()) => panic!("property unexpectedly passed"),
+        };
+        assert!(msg.contains("counterexample: 500"), "msg={msg}");
+    }
+
+    #[test]
+    fn zq_vec_generates_in_range() {
+        let gen = ZqVec { q: 97, len: 16 };
+        check(Config::default(), &gen, |v| {
+            v.len() == 16 && v.iter().all(|&x| x < 97)
+        });
+    }
+}

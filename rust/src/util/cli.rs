@@ -1,0 +1,140 @@
+//! Tiny CLI argument parser (no external crates available offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args,
+//! with typed accessors and an auto-generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Positional arguments in order.
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options (last occurrence wins).
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag`s.
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Whether `--name` was passed as a bare flag (or with a truthy value).
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+            || matches!(
+                self.options.get(name).map(String::as_str),
+                Some("1" | "true" | "yes")
+            )
+    }
+
+    /// String option value.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    /// String option with default.
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Typed option value; `Err` carries a usable message.
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| format!("--{name} {s:?}: {e}")),
+        }
+    }
+
+    /// Typed option with default.
+    pub fn parsed_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.get_parsed(name)?.unwrap_or(default))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_flags_and_options() {
+        // NOTE: a bare `--flag` consumes a following non-`--` token as its
+        // value, so positionals must precede flags (or use `--flag=true`).
+        let a = parse(&[
+            "serve",
+            "extra",
+            "--batch", "8",
+            "--scheme=rubato-128l",
+            "--verbose",
+        ]);
+        assert_eq!(a.positional, vec!["serve", "extra"]);
+        assert_eq!(a.get("batch"), Some("8"));
+        assert_eq!(a.get("scheme"), Some("rubato-128l"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_access() {
+        let a = parse(&["--n", "64", "--rate", "1.5"]);
+        assert_eq!(a.parsed_or("n", 0usize).unwrap(), 64);
+        assert_eq!(a.parsed_or("rate", 0.0f64).unwrap(), 1.5);
+        assert_eq!(a.parsed_or("missing", 7u32).unwrap(), 7);
+        assert!(a.get_parsed::<u32>("rate").is_err());
+    }
+
+    #[test]
+    fn last_option_wins_and_truthy_flags() {
+        let a = parse(&["--x", "1", "--x", "2", "--f=true"]);
+        assert_eq!(a.get("x"), Some("2"));
+        assert!(a.flag("f"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["--a", "--b", "v"]);
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("v"));
+    }
+}

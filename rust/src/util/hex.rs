@@ -1,0 +1,55 @@
+//! Hex encoding/decoding for test vectors and golden files.
+
+/// Encode bytes as lowercase hex.
+pub fn encode(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push(char::from_digit((b >> 4) as u32, 16).unwrap());
+        s.push(char::from_digit((b & 0xF) as u32, 16).unwrap());
+    }
+    s
+}
+
+/// Decode a hex string (case-insensitive). Errors on odd length or invalid
+/// characters.
+pub fn decode(s: &str) -> Result<Vec<u8>, String> {
+    let s = s.trim();
+    if s.len() % 2 != 0 {
+        return Err(format!("odd-length hex string ({} chars)", s.len()));
+    }
+    let mut out = Vec::with_capacity(s.len() / 2);
+    let bytes = s.as_bytes();
+    for i in (0..bytes.len()).step_by(2) {
+        let hi = (bytes[i] as char)
+            .to_digit(16)
+            .ok_or_else(|| format!("invalid hex char {:?}", bytes[i] as char))?;
+        let lo = (bytes[i + 1] as char)
+            .to_digit(16)
+            .ok_or_else(|| format!("invalid hex char {:?}", bytes[i + 1] as char))?;
+        out.push(((hi << 4) | lo) as u8);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let data = [0u8, 1, 0x7F, 0x80, 0xFF, 0xAB];
+        assert_eq!(decode(&encode(&data)).unwrap(), data);
+        assert_eq!(encode(&data), "00017f80ffab");
+    }
+
+    #[test]
+    fn decode_mixed_case_and_whitespace() {
+        assert_eq!(decode(" DeadBEEF ").unwrap(), vec![0xDE, 0xAD, 0xBE, 0xEF]);
+    }
+
+    #[test]
+    fn decode_errors() {
+        assert!(decode("abc").is_err());
+        assert!(decode("zz").is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! Internal substrates: deterministic PRNG, statistics, minimal JSON,
+//! CLI argument parsing, and hex encoding.
+//!
+//! These exist because the build is fully offline: no `serde_json`, `clap`,
+//! `rand` or `criterion` are available, so the pieces the system needs are
+//! implemented (and tested) here.
+
+pub mod cli;
+pub mod hex;
+pub mod json;
+pub mod rng;
+pub mod stats;

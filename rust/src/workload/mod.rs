@@ -1,0 +1,122 @@
+//! Synthetic client workload generation.
+//!
+//! The paper's client-side scenario is compute/battery-constrained edge
+//! devices encrypting real-valued data (e.g. ML feature vectors) for
+//! privacy-preserving inference. We model that traffic: Poisson request
+//! arrivals, Gaussian-ish feature vectors sized to the cipher's keystream
+//! length, and per-client sessions. Used by the end-to-end serving example
+//! (E11) and coordinator benchmarks.
+
+use crate::params::ParamSet;
+use crate::util::rng::SplitMix64;
+
+/// One client encryption request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Monotonically increasing id.
+    pub id: u64,
+    /// Session (client) identifier — selects the secret key.
+    pub session: u64,
+    /// Arrival time in seconds from workload start.
+    pub arrival_s: f64,
+    /// Real-valued message (length ≤ keystream length l).
+    pub message: Vec<f64>,
+}
+
+/// Poisson-arrival workload over a set of sessions.
+#[derive(Debug, Clone)]
+pub struct WorkloadGen {
+    rng: SplitMix64,
+    /// Mean arrival rate (requests/second).
+    pub rate: f64,
+    /// Number of distinct client sessions.
+    pub sessions: u64,
+    /// Message length (defaults to the parameter set's l).
+    pub msg_len: usize,
+    clock_s: f64,
+    next_id: u64,
+}
+
+impl WorkloadGen {
+    /// Workload for a parameter set with the given rate and session count.
+    pub fn new(params: &ParamSet, rate: f64, sessions: u64, seed: u64) -> Self {
+        assert!(rate > 0.0 && sessions > 0);
+        WorkloadGen {
+            rng: SplitMix64::new(seed),
+            rate,
+            sessions,
+            msg_len: params.l,
+            clock_s: 0.0,
+            next_id: 0,
+        }
+    }
+
+    /// Generate the next request (exponential inter-arrival).
+    pub fn next_request(&mut self) -> Request {
+        self.clock_s += self.rng.exp(self.rate);
+        let session = self.rng.below(self.sessions);
+        // Normalized "feature vector": standard normal entries, well inside
+        // the RtF codec range.
+        let message = (0..self.msg_len).map(|_| self.rng.normal()).collect();
+        let req = Request {
+            id: self.next_id,
+            session,
+            arrival_s: self.clock_s,
+            message,
+        };
+        self.next_id += 1;
+        req
+    }
+
+    /// Generate a batch of `n` requests.
+    pub fn take(&mut self, n: usize) -> Vec<Request> {
+        (0..n).map(|_| self.next_request()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::ParamSet;
+
+    #[test]
+    fn arrival_times_are_monotone_and_rate_correct() {
+        let p = ParamSet::rubato_128l();
+        let mut w = WorkloadGen::new(&p, 1000.0, 4, 7);
+        let reqs = w.take(20_000);
+        for pair in reqs.windows(2) {
+            assert!(pair[1].arrival_s >= pair[0].arrival_s);
+            assert_eq!(pair[1].id, pair[0].id + 1);
+        }
+        let span = reqs.last().unwrap().arrival_s;
+        let measured_rate = reqs.len() as f64 / span;
+        assert!(
+            (measured_rate - 1000.0).abs() / 1000.0 < 0.05,
+            "rate={measured_rate}"
+        );
+    }
+
+    #[test]
+    fn messages_fit_codec_range() {
+        let p = ParamSet::rubato_128l();
+        let codec = crate::rtf::RtfCodec::for_params(&p);
+        let mut w = WorkloadGen::new(&p, 10.0, 2, 9);
+        for r in w.take(1000) {
+            assert_eq!(r.message.len(), p.l);
+            for &x in &r.message {
+                assert!(x.abs() < codec.max_magnitude());
+            }
+        }
+    }
+
+    #[test]
+    fn sessions_are_spread() {
+        let p = ParamSet::hera_128a();
+        let mut w = WorkloadGen::new(&p, 10.0, 8, 11);
+        let mut seen = [false; 8];
+        for r in w.take(500) {
+            seen[r.session as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all sessions should appear");
+    }
+}

@@ -1,0 +1,393 @@
+//! AES-128 block cipher (FIPS-197) and an AES-CTR extendable-output function.
+//!
+//! Implemented from scratch (table-based SubBytes, on-the-fly key schedule)
+//! because the XOF *is* part of the system under study: the paper's RNG
+//! decoupling (§IV-C) hides exactly this unit's latency, and the simulator
+//! models it at 128 bits/cycle (the tiny_aes core the paper cites).
+//! Cross-checked against the FIPS-197 example vectors and the RustCrypto
+//! `aes` crate (dev-dependency oracle).
+
+use super::Xof;
+
+/// Number of 32-bit words in an AES-128 key.
+const NK: usize = 4;
+/// Number of rounds for AES-128.
+const NR: usize = 10;
+
+/// The AES S-box, generated at first use from the field inverse + affine
+/// map so no 256-entry magic table needs to be transcribed by hand.
+fn sbox() -> &'static [u8; 256] {
+    use std::sync::OnceLock;
+    static SBOX: OnceLock<[u8; 256]> = OnceLock::new();
+    SBOX.get_or_init(|| {
+        // Multiplicative inverse in GF(2^8) with the AES polynomial 0x11B,
+        // then the affine transformation b ^= rotl(b,1)^rotl(b,2)^rotl(b,3)^rotl(b,4) ^ 0x63.
+        let mut table = [0u8; 256];
+        for x in 0u16..256 {
+            let inv = if x == 0 { 0u8 } else { gf_inv(x as u8) };
+            let mut b = inv;
+            let mut res = inv;
+            for _ in 0..4 {
+                b = b.rotate_left(1);
+                res ^= b;
+            }
+            table[x as usize] = res ^ 0x63;
+        }
+        table
+    })
+}
+
+/// GF(2^8) multiply with the AES reduction polynomial.
+fn gf_mul(mut a: u8, mut b: u8) -> u8 {
+    let mut p = 0u8;
+    for _ in 0..8 {
+        if b & 1 != 0 {
+            p ^= a;
+        }
+        let hi = a & 0x80;
+        a <<= 1;
+        if hi != 0 {
+            a ^= 0x1B;
+        }
+        b >>= 1;
+    }
+    p
+}
+
+/// GF(2^8) inverse by exponentiation (a^254).
+fn gf_inv(a: u8) -> u8 {
+    // a^254 = a^(2+4+8+16+32+64+128)
+    let mut result = 1u8;
+    let mut power = a;
+    let mut e = 254u8;
+    while e > 0 {
+        if e & 1 != 0 {
+            result = gf_mul(result, power);
+        }
+        power = gf_mul(power, power);
+        e >>= 1;
+    }
+    result
+}
+
+/// Encryption T-tables: `T0[x]` packs the MixColumns-weighted S-box column
+/// `(2·S(x), S(x), S(x), 3·S(x))` as a little-endian u32; T1..T3 are byte
+/// rotations. One table lookup + xor per state byte replaces the per-byte
+/// GF(2^8) multiplies of the reference round (§Perf: ~8× faster XOF, which
+/// dominates stream-key generation).
+fn ttables() -> &'static [[u32; 256]; 4] {
+    use std::sync::OnceLock;
+    static T: OnceLock<[[u32; 256]; 4]> = OnceLock::new();
+    T.get_or_init(|| {
+        let sb = sbox();
+        let mut t = [[0u32; 256]; 4];
+        for x in 0..256 {
+            let s = sb[x];
+            let s2 = gf_mul(s, 2);
+            let s3 = gf_mul(s, 3);
+            let w = u32::from_le_bytes([s2, s, s, s3]);
+            t[0][x] = w;
+            t[1][x] = w.rotate_left(8);
+            t[2][x] = w.rotate_left(16);
+            t[3][x] = w.rotate_left(24);
+        }
+        t
+    })
+}
+
+/// AES-128 with a precomputed key schedule.
+#[derive(Clone)]
+pub struct Aes128 {
+    round_keys: [[u8; 16]; NR + 1],
+    /// Round keys as column words (little-endian over the column bytes),
+    /// for the T-table fast path.
+    rk_words: [[u32; 4]; NR + 1],
+}
+
+impl Aes128 {
+    /// Expand a 16-byte key.
+    pub fn new(key: &[u8; 16]) -> Self {
+        let sb = sbox();
+        let mut w = [[0u8; 4]; 4 * (NR + 1)];
+        for i in 0..NK {
+            w[i].copy_from_slice(&key[4 * i..4 * i + 4]);
+        }
+        let mut rcon: u8 = 1;
+        for i in NK..4 * (NR + 1) {
+            let mut temp = w[i - 1];
+            if i % NK == 0 {
+                temp.rotate_left(1);
+                for t in &mut temp {
+                    *t = sb[*t as usize];
+                }
+                temp[0] ^= rcon;
+                rcon = gf_mul(rcon, 2);
+            }
+            for j in 0..4 {
+                w[i][j] = w[i - NK][j] ^ temp[j];
+            }
+        }
+        let mut round_keys = [[0u8; 16]; NR + 1];
+        let mut rk_words = [[0u32; 4]; NR + 1];
+        for (r, rk) in round_keys.iter_mut().enumerate() {
+            for c in 0..4 {
+                rk[4 * c..4 * c + 4].copy_from_slice(&w[4 * r + c]);
+                rk_words[r][c] = u32::from_le_bytes(w[4 * r + c]);
+            }
+        }
+        Aes128 {
+            round_keys,
+            rk_words,
+        }
+    }
+
+    /// Encrypt one 16-byte block in place (T-table fast path; the
+    /// byte-wise reference implementation below is kept as the test
+    /// oracle).
+    pub fn encrypt_block(&self, block: &mut [u8; 16]) {
+        let t = ttables();
+        let sb = sbox();
+        // Load state as column words and add round key 0.
+        let mut s = [0u32; 4];
+        for c in 0..4 {
+            s[c] = u32::from_le_bytes(block[4 * c..4 * c + 4].try_into().unwrap())
+                ^ self.rk_words[0][c];
+        }
+        for round in 1..NR {
+            let rk = &self.rk_words[round];
+            let mut n = [0u32; 4];
+            for c in 0..4 {
+                // Column c pulls row r from column (c + r) mod 4
+                // (ShiftRows) through the MixColumns-weighted tables.
+                n[c] = t[0][(s[c] & 0xFF) as usize]
+                    ^ t[1][((s[(c + 1) & 3] >> 8) & 0xFF) as usize]
+                    ^ t[2][((s[(c + 2) & 3] >> 16) & 0xFF) as usize]
+                    ^ t[3][((s[(c + 3) & 3] >> 24) & 0xFF) as usize]
+                    ^ rk[c];
+            }
+            s = n;
+        }
+        // Final round: SubBytes + ShiftRows + AddRoundKey (no MixColumns).
+        let rk = &self.rk_words[NR];
+        let mut out = [0u32; 4];
+        for c in 0..4 {
+            out[c] = (sb[(s[c] & 0xFF) as usize] as u32)
+                | ((sb[((s[(c + 1) & 3] >> 8) & 0xFF) as usize] as u32) << 8)
+                | ((sb[((s[(c + 2) & 3] >> 16) & 0xFF) as usize] as u32) << 16)
+                | ((sb[((s[(c + 3) & 3] >> 24) & 0xFF) as usize] as u32) << 24);
+            out[c] ^= rk[c];
+        }
+        for c in 0..4 {
+            block[4 * c..4 * c + 4].copy_from_slice(&out[c].to_le_bytes());
+        }
+    }
+
+    /// Reference byte-wise round implementation (FIPS-197 literal form) —
+    /// correctness oracle for the T-table path.
+    pub fn encrypt_block_reference(&self, block: &mut [u8; 16]) {
+        let sb = sbox();
+        add_round_key(block, &self.round_keys[0]);
+        for round in 1..NR {
+            sub_bytes(block, sb);
+            shift_rows(block);
+            mix_columns(block);
+            add_round_key(block, &self.round_keys[round]);
+        }
+        sub_bytes(block, sb);
+        shift_rows(block);
+        add_round_key(block, &self.round_keys[NR]);
+    }
+}
+
+fn add_round_key(state: &mut [u8; 16], rk: &[u8; 16]) {
+    for i in 0..16 {
+        state[i] ^= rk[i];
+    }
+}
+
+fn sub_bytes(state: &mut [u8; 16], sb: &[u8; 256]) {
+    for b in state.iter_mut() {
+        *b = sb[*b as usize];
+    }
+}
+
+/// State layout is column-major (FIPS-197): byte index = 4*col + row.
+fn shift_rows(state: &mut [u8; 16]) {
+    let s = *state;
+    for row in 1..4 {
+        for col in 0..4 {
+            state[4 * col + row] = s[4 * ((col + row) % 4) + row];
+        }
+    }
+}
+
+fn mix_columns(state: &mut [u8; 16]) {
+    for col in 0..4 {
+        let c = &mut state[4 * col..4 * col + 4];
+        let (a0, a1, a2, a3) = (c[0], c[1], c[2], c[3]);
+        c[0] = gf_mul(a0, 2) ^ gf_mul(a1, 3) ^ a2 ^ a3;
+        c[1] = a0 ^ gf_mul(a1, 2) ^ gf_mul(a2, 3) ^ a3;
+        c[2] = a0 ^ a1 ^ gf_mul(a2, 2) ^ gf_mul(a3, 3);
+        c[3] = gf_mul(a0, 3) ^ a1 ^ a2 ^ gf_mul(a3, 2);
+    }
+}
+
+/// AES-128 in counter mode as a XOF.
+///
+/// Keyed by the cipher nonce; the stream-block counter starts at the user
+/// counter (so distinct (nonce, counter) pairs yield disjoint streams).
+/// This is the software twin of the hardware's AES unit: the simulator
+/// models this exact byte stream at 128 bits per cycle.
+pub struct AesCtrXof {
+    aes: Aes128,
+    /// Next CTR block index (low 64 bits of the CTR input).
+    block: u64,
+    /// Fixed high half of the CTR input: the user (cipher) counter.
+    prefix: u64,
+    buf: [u8; 16],
+    used: usize,
+}
+
+impl AesCtrXof {
+    /// XOF keyed by `nonce`, domain-separated by `counter`.
+    pub fn new(nonce: u64, counter: u64) -> Self {
+        let mut key = [0u8; 16];
+        key[..8].copy_from_slice(&nonce.to_le_bytes());
+        key[8..].copy_from_slice(&0x5045_5253_544F_5845u64.to_le_bytes()); // "PRESTOXE" domain tag
+        AesCtrXof {
+            aes: Aes128::new(&key),
+            block: 0,
+            prefix: counter,
+            buf: [0u8; 16],
+            used: 16, // force refill on first squeeze
+        }
+    }
+
+    fn refill(&mut self) {
+        let mut b = [0u8; 16];
+        b[..8].copy_from_slice(&self.prefix.to_le_bytes());
+        b[8..].copy_from_slice(&self.block.to_le_bytes());
+        self.aes.encrypt_block(&mut b);
+        self.buf = b;
+        self.block += 1;
+        self.used = 0;
+    }
+
+    /// Total AES block invocations so far (used by the simulator to account
+    /// random-bit throughput).
+    pub fn blocks_used(&self) -> u64 {
+        self.block
+    }
+}
+
+impl Xof for AesCtrXof {
+    fn squeeze(&mut self, out: &mut [u8]) {
+        let mut pos = 0;
+        while pos < out.len() {
+            if self.used == 16 {
+                self.refill();
+            }
+            let take = (out.len() - pos).min(16 - self.used);
+            out[pos..pos + take].copy_from_slice(&self.buf[self.used..self.used + take]);
+            self.used += take;
+            pos += take;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::hex;
+
+    #[test]
+    fn fips197_example_vector() {
+        // FIPS-197 Appendix B: key 2b7e...  plaintext 3243f6a8885a308d313198a2e0370734
+        let key: [u8; 16] = hex::decode("2b7e151628aed2a6abf7158809cf4f3c")
+            .unwrap()
+            .try_into()
+            .unwrap();
+        let mut block: [u8; 16] = hex::decode("3243f6a8885a308d313198a2e0370734")
+            .unwrap()
+            .try_into()
+            .unwrap();
+        Aes128::new(&key).encrypt_block(&mut block);
+        assert_eq!(hex::encode(&block), "3925841d02dc09fbdc118597196a0b32");
+    }
+
+    #[test]
+    fn fips197_appendix_c_vector() {
+        // FIPS-197 Appendix C.1: key 000102...0f, plaintext 00112233...ff
+        let key: [u8; 16] = hex::decode("000102030405060708090a0b0c0d0e0f")
+            .unwrap()
+            .try_into()
+            .unwrap();
+        let mut block: [u8; 16] = hex::decode("00112233445566778899aabbccddeeff")
+            .unwrap()
+            .try_into()
+            .unwrap();
+        Aes128::new(&key).encrypt_block(&mut block);
+        assert_eq!(hex::encode(&block), "69c4e0d86a7b0430d8cdb78070b4c55a");
+    }
+
+    #[test]
+    fn ttable_path_matches_reference_rounds() {
+        use crate::util::rng::SplitMix64;
+        let mut rng = SplitMix64::new(0x77AB);
+        for _ in 0..500 {
+            let mut key = [0u8; 16];
+            let mut block = [0u8; 16];
+            rng.fill_bytes(&mut key);
+            rng.fill_bytes(&mut block);
+            let aes = Aes128::new(&key);
+            let mut fast = block;
+            aes.encrypt_block(&mut fast);
+            let mut slow = block;
+            aes.encrypt_block_reference(&mut slow);
+            assert_eq!(fast, slow);
+        }
+    }
+
+    #[test]
+    fn matches_rustcrypto_oracle() {
+        use ::aes::cipher::{BlockEncrypt, KeyInit};
+        use crate::util::rng::SplitMix64;
+        let mut rng = SplitMix64::new(0xAE5);
+        for _ in 0..200 {
+            let mut key = [0u8; 16];
+            let mut block = [0u8; 16];
+            rng.fill_bytes(&mut key);
+            rng.fill_bytes(&mut block);
+            let mut ours = block;
+            Aes128::new(&key).encrypt_block(&mut ours);
+            let oracle = ::aes::Aes128::new((&key).into());
+            let mut theirs = ::aes::Block::clone_from_slice(&block);
+            oracle.encrypt_block(&mut theirs);
+            assert_eq!(&ours[..], theirs.as_slice());
+        }
+    }
+
+    #[test]
+    fn ctr_blocks_are_counted() {
+        let mut x = AesCtrXof::new(5, 0);
+        assert_eq!(x.blocks_used(), 0);
+        let mut buf = [0u8; 33];
+        x.squeeze(&mut buf);
+        assert_eq!(x.blocks_used(), 3); // ceil(33/16)
+    }
+
+    #[test]
+    fn sbox_spot_values() {
+        let sb = sbox();
+        // Canonical spot checks: S(0x00)=0x63, S(0x01)=0x7c, S(0x53)=0xed.
+        assert_eq!(sb[0x00], 0x63);
+        assert_eq!(sb[0x01], 0x7c);
+        assert_eq!(sb[0x53], 0xed);
+        // S-box must be a permutation.
+        let mut seen = [false; 256];
+        for &v in sb.iter() {
+            assert!(!seen[v as usize]);
+            seen[v as usize] = true;
+        }
+    }
+}

@@ -1,0 +1,269 @@
+//! SHAKE256 extendable-output function (FIPS-202), built on Keccak-f[1600].
+//!
+//! The HERA reference software uses SHAKE256 as its XOF; the paper replaces
+//! it with AES in hardware (§IV-D) because a SHAKE core delivers only
+//! ~14.7 random bits/cycle vs 128 for AES. We implement it from scratch so
+//! the XOF-choice ablation (E8) runs on real streams and the software
+//! baseline can be configured either way.
+
+use super::Xof;
+
+/// Keccak-f[1600] round constants (generated from the LFSR defined in
+/// FIPS-202 §3.2.5 at first use).
+fn round_constants() -> &'static [u64; 24] {
+    use std::sync::OnceLock;
+    static RC: OnceLock<[u64; 24]> = OnceLock::new();
+    RC.get_or_init(|| {
+        // rc(t): LFSR x^8 + x^6 + x^5 + x^4 + 1 over GF(2).
+        let mut lfsr: u16 = 1;
+        let mut rc_bit = |_: ()| -> u64 {
+            let bit = (lfsr & 1) as u64;
+            lfsr <<= 1;
+            if lfsr & 0x100 != 0 {
+                lfsr ^= 0x171;
+            }
+            bit
+        };
+        let mut out = [0u64; 24];
+        for rc in out.iter_mut() {
+            let mut v = 0u64;
+            for j in 0..7u32 {
+                let bit = rc_bit(());
+                v |= bit << ((1u64 << j) - 1);
+            }
+            *rc = v;
+        }
+        out
+    })
+}
+
+/// Rotation offsets for the ρ step, by lane (x, y), generated per FIPS-202.
+fn rho_offsets() -> [[u32; 5]; 5] {
+    let mut offs = [[0u32; 5]; 5];
+    let (mut x, mut y) = (1usize, 0usize);
+    for t in 0..24u32 {
+        offs[x][y] = ((t + 1) * (t + 2) / 2) % 64;
+        let (nx, ny) = (y, (2 * x + 3 * y) % 5);
+        x = nx;
+        y = ny;
+    }
+    offs
+}
+
+/// Apply Keccak-f[1600] to the 25-lane state.
+fn keccak_f1600(state: &mut [u64; 25]) {
+    let rcs = round_constants();
+    let rho = rho_offsets();
+    for &rc in rcs.iter() {
+        // θ
+        let mut c = [0u64; 5];
+        for x in 0..5 {
+            c[x] = state[x] ^ state[x + 5] ^ state[x + 10] ^ state[x + 15] ^ state[x + 20];
+        }
+        for x in 0..5 {
+            let d = c[(x + 4) % 5] ^ c[(x + 1) % 5].rotate_left(1);
+            for y in 0..5 {
+                state[x + 5 * y] ^= d;
+            }
+        }
+        // ρ and π
+        let mut b = [0u64; 25];
+        for x in 0..5 {
+            for y in 0..5 {
+                let nx = y;
+                let ny = (2 * x + 3 * y) % 5;
+                b[nx + 5 * ny] = state[x + 5 * y].rotate_left(rho[x][y]);
+            }
+        }
+        // χ
+        for y in 0..5 {
+            for x in 0..5 {
+                state[x + 5 * y] =
+                    b[x + 5 * y] ^ (!b[(x + 1) % 5 + 5 * y] & b[(x + 2) % 5 + 5 * y]);
+            }
+        }
+        // ι
+        state[0] ^= rc;
+    }
+}
+
+/// SHAKE256 sponge: rate 136 bytes, capacity 512 bits, domain suffix 0x1F.
+pub struct Shake256 {
+    state: [u64; 25],
+    /// Bytes absorbed into the current block.
+    absorbed: usize,
+    /// Squeeze cursor within the current output block; `None` while absorbing.
+    squeeze_pos: Option<usize>,
+}
+
+const RATE: usize = 136;
+
+impl Default for Shake256 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Shake256 {
+    /// Fresh sponge.
+    pub fn new() -> Self {
+        Shake256 {
+            state: [0u64; 25],
+            absorbed: 0,
+            squeeze_pos: None,
+        }
+    }
+
+    fn xor_byte(&mut self, idx: usize, b: u8) {
+        self.state[idx / 8] ^= (b as u64) << (8 * (idx % 8));
+    }
+
+    fn state_byte(&self, idx: usize) -> u8 {
+        (self.state[idx / 8] >> (8 * (idx % 8))) as u8
+    }
+
+    /// Absorb input bytes (must happen before any squeeze).
+    pub fn absorb(&mut self, data: &[u8]) {
+        assert!(self.squeeze_pos.is_none(), "absorb after squeeze");
+        for &b in data {
+            self.xor_byte(self.absorbed, b);
+            self.absorbed += 1;
+            if self.absorbed == RATE {
+                keccak_f1600(&mut self.state);
+                self.absorbed = 0;
+            }
+        }
+    }
+
+    fn pad_and_switch(&mut self) {
+        // SHAKE domain separation suffix 0x1F, then pad10*1.
+        self.xor_byte(self.absorbed, 0x1F);
+        self.xor_byte(RATE - 1, 0x80);
+        keccak_f1600(&mut self.state);
+        self.squeeze_pos = Some(0);
+    }
+
+    /// Squeeze output bytes.
+    pub fn squeeze(&mut self, out: &mut [u8]) {
+        if self.squeeze_pos.is_none() {
+            self.pad_and_switch();
+        }
+        let mut pos = self.squeeze_pos.unwrap();
+        for o in out.iter_mut() {
+            if pos == RATE {
+                keccak_f1600(&mut self.state);
+                pos = 0;
+            }
+            *o = self.state_byte(pos);
+            pos += 1;
+        }
+        self.squeeze_pos = Some(pos);
+    }
+
+    /// Number of Keccak permutations performed so far — used by the
+    /// simulator's SHAKE throughput model.
+    pub fn permutation_count(&self) -> u64 {
+        // Not tracked exactly here; the simulator models throughput
+        // analytically from bits consumed (see hw::units::xof).
+        0
+    }
+}
+
+/// SHAKE256 as the cipher XOF, seeded by (nonce, counter).
+pub struct Shake256Xof {
+    sponge: Shake256,
+}
+
+impl Shake256Xof {
+    /// Seed with the 16-byte little-endian encoding of (nonce, counter).
+    pub fn new(nonce: u64, counter: u64) -> Self {
+        let mut sponge = Shake256::new();
+        let mut seed = [0u8; 16];
+        seed[..8].copy_from_slice(&nonce.to_le_bytes());
+        seed[8..].copy_from_slice(&counter.to_le_bytes());
+        sponge.absorb(&seed);
+        Shake256Xof { sponge }
+    }
+}
+
+impl Xof for Shake256Xof {
+    fn squeeze(&mut self, out: &mut [u8]) {
+        self.sponge.squeeze(out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::hex;
+
+    #[test]
+    fn shake256_empty_input_vector() {
+        // NIST FIPS-202 example: SHAKE256(""), first 32 bytes.
+        let mut s = Shake256::new();
+        let mut out = [0u8; 32];
+        s.squeeze(&mut out);
+        assert_eq!(
+            hex::encode(&out),
+            "46b9dd2b0ba88d13233b3feb743eeb243fcd52ea62b81b82b50c27646ed5762f"
+        );
+    }
+
+    #[test]
+    fn shake256_abc_vector() {
+        // SHAKE256("abc"), first 32 bytes (NIST example files).
+        let mut s = Shake256::new();
+        s.absorb(b"abc");
+        let mut out = [0u8; 32];
+        s.squeeze(&mut out);
+        assert_eq!(
+            hex::encode(&out),
+            "483366601360a8771c6863080cc4114d8db44530f8f1e1ee4f94ea37e78b5739"
+        );
+    }
+
+    #[test]
+    fn incremental_absorb_matches_oneshot() {
+        let data = (0u8..=255).collect::<Vec<_>>();
+        let mut a = Shake256::new();
+        a.absorb(&data);
+        let mut b = Shake256::new();
+        for chunk in data.chunks(17) {
+            b.absorb(chunk);
+        }
+        let (mut oa, mut ob) = ([0u8; 64], [0u8; 64]);
+        a.squeeze(&mut oa);
+        b.squeeze(&mut ob);
+        assert_eq!(oa, ob);
+    }
+
+    #[test]
+    fn squeeze_chunking_is_stable() {
+        let mut a = Shake256Xof::new(3, 4);
+        let mut b = Shake256Xof::new(3, 4);
+        let mut oa = vec![0u8; 300]; // crosses a rate boundary (136)
+        let mut ob = vec![0u8; 300];
+        a.squeeze(&mut oa);
+        for chunk in ob.chunks_mut(11) {
+            b.squeeze(chunk);
+        }
+        assert_eq!(oa, ob);
+    }
+
+    #[test]
+    #[should_panic(expected = "absorb after squeeze")]
+    fn absorb_after_squeeze_panics() {
+        let mut s = Shake256::new();
+        let mut out = [0u8; 1];
+        s.squeeze(&mut out);
+        s.absorb(b"late");
+    }
+
+    #[test]
+    fn round_constants_spot_check() {
+        let rc = round_constants();
+        assert_eq!(rc[0], 0x0000000000000001);
+        assert_eq!(rc[1], 0x0000000000008082);
+        assert_eq!(rc[23], 0x8000000080008008);
+    }
+}

@@ -1,0 +1,123 @@
+//! Cross-layer golden tests: the JAX/Pallas model (via golden JSON emitted
+//! by `aot.py`), the Rust reference cipher, and the PJRT-executed artifact
+//! must all produce identical keystreams on identical inputs.
+//!
+//! Requires `make artifacts`.
+
+use presto::cipher::{Hera, Rubato, SecretKey};
+use presto::params::{ParamSet, Scheme};
+use presto::runtime::Runtime;
+use presto::util::json::Json;
+use presto::xof::XofKind;
+use std::path::Path;
+
+const GOLDEN_SETS: [&str; 3] = ["hera-128a", "rubato-128s", "rubato-128l"];
+
+fn load_golden(name: &str) -> Json {
+    let path = format!("artifacts/golden/{name}.json");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("{path}: {e} — run `make artifacts` first"));
+    Json::parse(&text).expect("valid golden JSON")
+}
+
+fn rows_u32(j: &Json, key: &str) -> Vec<Vec<u32>> {
+    j.get(key)
+        .unwrap_or_else(|| panic!("golden missing {key}"))
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|row| {
+            row.as_u64_vec()
+                .unwrap()
+                .into_iter()
+                .map(|x| x as u32)
+                .collect()
+        })
+        .collect()
+}
+
+fn rows_i64(j: &Json, key: &str) -> Vec<Vec<i64>> {
+    j.get(key)
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|row| {
+            row.as_arr()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_f64().unwrap() as i64)
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn golden_parameters_match_rust_definitions() {
+    // Catches drift between python/compile/params.py and rust/src/params.rs.
+    for name in GOLDEN_SETS {
+        let g = load_golden(name);
+        let p = ParamSet::by_name(name).expect("known parameter set");
+        assert_eq!(g.get("q").unwrap().as_u64().unwrap(), p.q as u64, "{name} q");
+        assert_eq!(g.get("n").unwrap().as_u64().unwrap(), p.n as u64, "{name} n");
+        assert_eq!(
+            g.get("rounds").unwrap().as_u64().unwrap(),
+            p.rounds as u64,
+            "{name} rounds"
+        );
+        assert_eq!(g.get("l").unwrap().as_u64().unwrap(), p.l as u64, "{name} l");
+    }
+}
+
+#[test]
+fn rust_cipher_matches_jax_model_on_golden_inputs() {
+    for name in GOLDEN_SETS {
+        let g = load_golden(name);
+        let p = ParamSet::by_name(name).unwrap();
+        let keys = rows_u32(&g, "key");
+        let rcs = rows_u32(&g, "rc");
+        let expected = rows_u32(&g, "ks");
+        for lane in 0..keys.len() {
+            let key = SecretKey {
+                k: keys[lane].clone(),
+            };
+            let got = match p.scheme {
+                Scheme::Hera => {
+                    Hera::new(p, XofKind::AesCtr).keystream_from_rc(&key, &rcs[lane])
+                }
+                Scheme::Rubato => {
+                    let noise = rows_i64(&g, "noise");
+                    Rubato::new(p, XofKind::AesCtr).keystream_from_rc(
+                        &key,
+                        &rcs[lane],
+                        &noise[lane],
+                    )
+                }
+            };
+            assert_eq!(got, expected[lane], "{name} lane {lane}: Rust != JAX");
+        }
+    }
+}
+
+#[test]
+fn pjrt_artifact_matches_jax_model_on_golden_inputs() {
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    for name in GOLDEN_SETS {
+        let g = load_golden(name);
+        let p = ParamSet::by_name(name).unwrap();
+        let batch = g.get("batch").unwrap().as_u64().unwrap() as usize;
+        let exe = rt
+            .load_keystream(Path::new("artifacts"), p, batch)
+            .expect("artifact loads");
+        let keys = rows_u32(&g, "key");
+        let rcs = rows_u32(&g, "rc");
+        let expected = rows_u32(&g, "ks");
+        let noise = if p.has_noise() {
+            rows_i64(&g, "noise")
+        } else {
+            Vec::new()
+        };
+        let got = exe.run(&keys, &rcs, &noise).expect("execution succeeds");
+        assert_eq!(got, expected, "{name}: PJRT != JAX");
+    }
+}

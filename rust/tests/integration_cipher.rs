@@ -1,0 +1,165 @@
+//! Cipher-level integration and property tests (using the in-repo
+//! property-testing helper in place of proptest).
+
+use presto::arith::{ShiftAddMv, Zq};
+use presto::cipher::components::{feistel, mrmc, State};
+use presto::cipher::{build_cipher, SecretKey};
+use presto::params::ParamSet;
+use presto::rtf::RtfCodec;
+use presto::testutil::{check, Config, Gen, Pair, U64Range, ZqVec};
+use presto::util::rng::SplitMix64;
+use presto::xof::XofKind;
+
+/// Generator for full cipher states.
+struct StateGen {
+    q: u32,
+    v: usize,
+}
+
+impl Gen for StateGen {
+    type Value = Vec<u32>;
+    fn generate(&self, rng: &mut SplitMix64) -> Vec<u32> {
+        (0..self.v * self.v)
+            .map(|_| rng.below(self.q as u64) as u32)
+            .collect()
+    }
+}
+
+#[test]
+fn prop_mrmc_transposition_invariance_all_dims() {
+    for p in ParamSet::all() {
+        let f = Zq::new(p.q);
+        let mv = ShiftAddMv::new(f, p.v);
+        check(
+            Config {
+                cases: 200,
+                ..Config::default()
+            },
+            &StateGen { q: p.q, v: p.v },
+            |x| {
+                let s = State::new(x.clone(), p.v);
+                let mut a = s.transposed();
+                mrmc(&mv, &mut a);
+                let mut b = s;
+                mrmc(&mv, &mut b);
+                a == b.transposed()
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_encrypt_decrypt_identity() {
+    for p in ParamSet::all() {
+        let cipher = build_cipher(p, XofKind::AesCtr);
+        let key = SecretKey::generate(&p, 11);
+        let gen = Pair(
+            ZqVec { q: p.q, len: p.l },
+            U64Range { lo: 0, hi: 1 << 30 },
+        );
+        check(
+            Config {
+                cases: 24,
+                ..Config::default()
+            },
+            &gen,
+            |(m, seed)| {
+                let nonce = seed / 7;
+                let counter = seed % 7;
+                let c = cipher.encrypt_block(&key, nonce, counter, m);
+                cipher.decrypt_block(&key, nonce, counter, &c) == *m
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_keystream_blocks_are_unique() {
+    // Distinct (nonce, counter) must give distinct keystreams (w.h.p.).
+    let p = ParamSet::rubato_128l();
+    let cipher = build_cipher(p, XofKind::AesCtr);
+    let key = SecretKey::generate(&p, 1);
+    let mut seen = std::collections::HashSet::new();
+    for nonce in 0..6 {
+        for counter in 0..6 {
+            let ks = cipher.keystream(&key, nonce, counter).ks;
+            assert!(seen.insert(ks), "keystream collision at ({nonce},{counter})");
+        }
+    }
+}
+
+#[test]
+fn prop_rtf_roundtrip_through_encryption() {
+    // Real vector → encode → encrypt → decrypt → decode ≈ identity.
+    let p = ParamSet::rubato_128m();
+    let cipher = build_cipher(p, XofKind::AesCtr);
+    let key = SecretKey::generate(&p, 2);
+    let codec = RtfCodec::for_params(&p);
+    let mut rng = SplitMix64::new(77);
+    for trial in 0..50 {
+        let msg: Vec<f64> = (0..p.l).map(|_| rng.normal() * 3.0).collect();
+        let m = codec.encode_vec(&msg);
+        let c = cipher.encrypt_block(&key, 5, trial, &m);
+        let d = codec.decode_vec(&cipher.decrypt_block(&key, 5, trial, &c));
+        for (a, b) in msg.iter().zip(&d) {
+            assert!(
+                (a - b).abs() <= codec.quantization_bound() + 1e-12,
+                "trial {trial}: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_feistel_never_escapes_field() {
+    let p = ParamSet::rubato_128l();
+    let f = Zq::new(p.q);
+    check(
+        Config {
+            cases: 300,
+            ..Config::default()
+        },
+        &ZqVec { q: p.q, len: p.n },
+        |x| {
+            let mut y = x.clone();
+            feistel(&f, &mut y);
+            y.iter().all(|&e| e < p.q)
+        },
+    );
+}
+
+#[test]
+fn shake_and_aes_variants_roundtrip() {
+    for xof in [XofKind::AesCtr, XofKind::Shake256] {
+        let p = ParamSet::hera_128a();
+        let cipher = build_cipher(p, xof);
+        let key = SecretKey::generate(&p, 3);
+        let m: Vec<u32> = (0..p.l as u32).collect();
+        let c = cipher.encrypt_block(&key, 9, 1, &m);
+        assert_eq!(cipher.decrypt_block(&key, 9, 1, &c), m);
+    }
+}
+
+#[test]
+fn ciphertext_distribution_looks_uniform() {
+    // A keystream-added ciphertext of a constant message should spread
+    // over Z_q (smoke test for keystream quality plumbing: mean near q/2).
+    let p = ParamSet::rubato_128l();
+    let cipher = build_cipher(p, XofKind::AesCtr);
+    let key = SecretKey::generate(&p, 4);
+    let m = vec![0u32; p.l];
+    let mut sum = 0f64;
+    let mut count = 0f64;
+    for counter in 0..40 {
+        for c in cipher.encrypt_block(&key, 1, counter, &m) {
+            sum += c as f64;
+            count += 1.0;
+        }
+    }
+    let mean = sum / count;
+    let half = p.q as f64 / 2.0;
+    assert!(
+        (mean - half).abs() / half < 0.05,
+        "ciphertext mean {mean} vs q/2 {half}"
+    );
+}

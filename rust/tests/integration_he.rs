@@ -1,0 +1,90 @@
+//! HE-substrate integration: full RtF transciphering round trips and BFV
+//! depth/noise behaviour at demo scale.
+
+use presto::he::bfv::{BfvParams, SecretKeyHe};
+use presto::he::transcipher::{ToyCipher, ToyParams, TranscipherServer};
+use presto::util::rng::SplitMix64;
+
+#[test]
+fn transcipher_many_blocks_round_trip() {
+    let cipher = ToyCipher::new(ToyParams::demo());
+    let he = SecretKeyHe::generate(BfvParams::test_small(), 77);
+    let mut rng = SplitMix64::new(3);
+    let t = cipher.params.t;
+    let key: Vec<u64> = (0..cipher.params.n as u64).map(|_| rng.below(t)).collect();
+    let server = TranscipherServer::setup(cipher.clone(), &he, &key, &mut rng);
+
+    for counter in 0..5 {
+        let m: Vec<u64> = (0..cipher.params.n as u64)
+            .map(|i| (i * 37 + counter * 11) % t)
+            .collect();
+        let sym_ct = cipher.encrypt(&key, 8, counter, &m);
+        let he_cts = server.transcipher(&sym_ct, 8, counter);
+        let got: Vec<u64> = he_cts.iter().map(|ct| he.decrypt_scalar(ct)).collect();
+        assert_eq!(got, m, "counter {counter}");
+    }
+}
+
+#[test]
+fn transciphered_ciphertexts_support_homomorphic_postprocessing() {
+    // The point of RtF: after transciphering, the server can compute on the
+    // data. Check Enc(m1) + Enc(m2) and Enc(m1)·Enc(m2).
+    let cipher = ToyCipher::new(ToyParams::demo());
+    let he = SecretKeyHe::generate(BfvParams::test_small(), 5);
+    let mut rng = SplitMix64::new(9);
+    let t = cipher.params.t;
+    let key: Vec<u64> = (0..4u64).map(|_| rng.below(t)).collect();
+    let server = TranscipherServer::setup(cipher.clone(), &he, &key, &mut rng);
+
+    let m1 = vec![10u64, 20, 30, 40];
+    let m2 = vec![5u64, 6, 7, 8];
+    let ct1 = server.transcipher(&cipher.encrypt(&key, 1, 0, &m1), 1, 0);
+    let ct2 = server.transcipher(&cipher.encrypt(&key, 1, 1, &m2), 1, 1);
+    for i in 0..4 {
+        let sum = he.add(&ct1[i], &ct2[i]);
+        assert_eq!(he.decrypt_scalar(&sum), (m1[i] + m2[i]) % t);
+        let prod = he.mul(&ct1[i], &ct2[i]);
+        assert_eq!(he.decrypt_scalar(&prod), (m1[i] * m2[i]) % t);
+    }
+}
+
+#[test]
+fn bfv_depth_two_works_at_demo_parameters() {
+    // Headroom beyond the transcipher's depth 1: two sequential mults.
+    let he = SecretKeyHe::generate(BfvParams::test_small(), 13);
+    let mut rng = SplitMix64::new(1);
+    let a = he.encrypt_scalar(12, &mut rng);
+    let b = he.encrypt_scalar(13, &mut rng);
+    let c = he.encrypt_scalar(3, &mut rng);
+    let ab = he.mul(&a, &b);
+    let abc = he.mul(&ab, &c);
+    assert_eq!(he.decrypt_scalar(&abc), (12 * 13 * 3) % 257);
+    assert!(he.noise_budget_bits(&abc) > 0.0);
+}
+
+#[test]
+fn wrong_he_key_decrypts_garbage() {
+    let he1 = SecretKeyHe::generate(BfvParams::test_small(), 1);
+    let he2 = SecretKeyHe::generate(BfvParams::test_small(), 2);
+    let mut rng = SplitMix64::new(4);
+    let ct = he1.encrypt_scalar(99, &mut rng);
+    assert_ne!(he2.decrypt_scalar(&ct), 99);
+}
+
+#[test]
+fn full_demo_parameters_transcipher() {
+    // The N = 2048 demo parameter set (slower; one block only).
+    let cipher = ToyCipher::new(ToyParams::demo());
+    let he = SecretKeyHe::generate(BfvParams::demo(), 21);
+    let mut rng = SplitMix64::new(2);
+    let t = cipher.params.t;
+    let key: Vec<u64> = (0..4u64).map(|_| rng.below(t)).collect();
+    let server = TranscipherServer::setup(cipher.clone(), &he, &key, &mut rng);
+    let m = vec![1u64, 128, 250, 77];
+    let he_cts = server.transcipher(&cipher.encrypt(&key, 3, 0, &m), 3, 0);
+    let got: Vec<u64> = he_cts.iter().map(|ct| he.decrypt_scalar(ct)).collect();
+    assert_eq!(got, m);
+    for ct in &he_cts {
+        assert!(he.noise_budget_bits(ct) > 5.0, "thin noise margin at demo params");
+    }
+}

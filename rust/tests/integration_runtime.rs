@@ -1,0 +1,95 @@
+//! Runtime integration: the PJRT-executed artifact must agree with the
+//! software cipher when fed real XOF-derived randomness (the full
+//! decoupled pipeline: Rust samples, XLA computes).
+//!
+//! Requires `make artifacts`.
+
+use presto::cipher::{build_cipher, SecretKey};
+use presto::coordinator::rngpool::sample_bundle;
+use presto::params::ParamSet;
+use presto::runtime::Runtime;
+use presto::xof::XofKind;
+use std::path::Path;
+
+const BATCH: usize = 8;
+
+fn check_scheme(p: ParamSet) {
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let exe = rt
+        .load_keystream(Path::new("artifacts"), p, BATCH)
+        .expect("artifact loads — run `make artifacts`");
+    assert_eq!(exe.params().name, p.name);
+    let cipher = build_cipher(p, XofKind::AesCtr);
+
+    // 8 lanes: distinct sessions (nonces) and counters.
+    let mut keys = Vec::new();
+    let mut rcs = Vec::new();
+    let mut noises = Vec::new();
+    let mut expect = Vec::new();
+    for lane in 0..BATCH {
+        let key = SecretKey::generate(&p, lane as u64 + 1);
+        let nonce = 2000 + lane as u64;
+        let counter = 5 + lane as u64;
+        let bundle = sample_bundle(&p, XofKind::AesCtr, nonce, counter);
+        expect.push(cipher.keystream(&key, nonce, counter).ks);
+        keys.push(key.k);
+        rcs.push(bundle.rc);
+        noises.push(bundle.noise);
+    }
+    let noise_arg: &[Vec<i64>] = if p.has_noise() { &noises } else { &[] };
+    let got = exe.run(&keys, &rcs, noise_arg).expect("execution succeeds");
+    assert_eq!(got, expect, "{}: XLA != software cipher", p.name);
+}
+
+#[test]
+fn xla_matches_software_hera() {
+    check_scheme(ParamSet::hera_128a());
+}
+
+#[test]
+fn xla_matches_software_rubato_128l() {
+    check_scheme(ParamSet::rubato_128l());
+}
+
+#[test]
+fn xla_matches_software_rubato_128s() {
+    check_scheme(ParamSet::rubato_128s());
+}
+
+#[test]
+fn repeated_execution_is_deterministic() {
+    let p = ParamSet::rubato_128l();
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt
+        .load_keystream(Path::new("artifacts"), p, BATCH)
+        .expect("artifact loads");
+    let keys: Vec<Vec<u32>> = (0..BATCH)
+        .map(|i| SecretKey::generate(&p, i as u64 + 1).k)
+        .collect();
+    let bundles: Vec<_> = (0..BATCH)
+        .map(|i| sample_bundle(&p, XofKind::AesCtr, 1, i as u64))
+        .collect();
+    let rcs: Vec<Vec<u32>> = bundles.iter().map(|b| b.rc.clone()).collect();
+    let noises: Vec<Vec<i64>> = bundles.iter().map(|b| b.noise.clone()).collect();
+    let a = exe.run(&keys, &rcs, &noises).unwrap();
+    let b = exe.run(&keys, &rcs, &noises).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn lane_shape_errors_are_reported() {
+    let p = ParamSet::rubato_128l();
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt
+        .load_keystream(Path::new("artifacts"), p, BATCH)
+        .expect("artifact loads");
+    // Wrong lane count.
+    let err = exe.run(&[], &[], &[]).unwrap_err();
+    assert!(err.to_string().contains("lanes"), "{err}");
+    // Wrong element count within a lane.
+    let keys: Vec<Vec<u32>> = (0..BATCH).map(|_| vec![1u32; p.n - 1]).collect();
+    let rcs: Vec<Vec<u32>> = (0..BATCH).map(|_| vec![1u32; p.rc_count()]).collect();
+    let noises: Vec<Vec<i64>> = (0..BATCH).map(|_| vec![0i64; p.l]).collect();
+    let err = exe.run(&keys, &rcs, &noises).unwrap_err();
+    assert!(err.to_string().contains("elements"), "{err}");
+}
