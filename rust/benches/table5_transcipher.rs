@@ -1,0 +1,78 @@
+//! **Table V — Transciphering performance** (new experiment, beyond the
+//! paper's client-side tables): end-to-end symmetric-ciphertext →
+//! HE-ciphertext latency and throughput.
+//!
+//! Rows:
+//! * toy-BFV — the depth-1 exact baseline (`ToyCipher` over Z_257 on the
+//!   single-modulus BFV stack), one block per evaluation.
+//! * RNS-CKKS HERA / Rubato — the flagship slot-batched path: one
+//!   homomorphic round-structure evaluation transciphers N/2 blocks.
+//!
+//! The interesting quantity is blocks/s: CKKS evaluations are orders of
+//! magnitude slower per call but amortize across the slot batch.
+
+use presto::bench::bench;
+use presto::he::bfv::{BfvParams, SecretKeyHe};
+use presto::he::ckks::CkksContext;
+use presto::he::transcipher::{
+    CkksCipherProfile, CkksTranscipher, ToyCipher, ToyParams, TranscipherServer,
+};
+use presto::params::CkksParams;
+use presto::util::rng::SplitMix64;
+
+fn bench_ckks(name: &str, profile: CkksCipherProfile, ring: usize, iters: usize) {
+    let params = CkksParams::with_shape(ring, profile.required_levels());
+    let ctx = CkksContext::generate(params, 5, &[]);
+    let mut rng = SplitMix64::new(1);
+    let key = profile.sample_key(3);
+    let server = CkksTranscipher::setup(profile.clone(), &ctx, &key, &mut rng);
+    let batch = ctx.slots();
+    let counters: Vec<u64> = (0..batch as u64).collect();
+    let blocks: Vec<Vec<f64>> = counters
+        .iter()
+        .map(|&c| profile.encrypt_block(&key, 1, c, &vec![0.5; profile.l]))
+        .collect();
+    let r = bench(name, iters, || {
+        let out = server.transcipher(&ctx, 1, &counters, &blocks);
+        std::hint::black_box(&out);
+    });
+    println!(
+        "{}  ({} blocks/eval, {:.1} blocks/s)",
+        r.report(),
+        batch,
+        r.throughput(batch as f64)
+    );
+}
+
+fn main() {
+    println!("Table V — Transciphering: toy-BFV baseline vs RNS-CKKS HERA/Rubato\n");
+
+    // toy-BFV baseline: one 4-element block per evaluation, depth 1.
+    let he = SecretKeyHe::generate(BfvParams::test_small(), 5);
+    let cipher = ToyCipher::new(ToyParams::demo());
+    let mut rng = SplitMix64::new(9);
+    let key: Vec<u64> = (0..cipher.params.n as u64)
+        .map(|_| rng.below(cipher.params.t))
+        .collect();
+    let server = TranscipherServer::setup(cipher.clone(), &he, &key, &mut rng);
+    let sym_ct = cipher.encrypt(&key, 1, 0, &[10, 20, 30, 40]);
+    let r = bench("toy-BFV transcipher (N=256, 1 block)", 64, || {
+        let out = server.transcipher(&sym_ct, 1, 0);
+        std::hint::black_box(&out);
+    });
+    println!("{}  (1 block/eval, {:.1} blocks/s)", r.report(), r.throughput(1.0));
+
+    // RNS-CKKS: slot-batched HERA and Rubato profiles.
+    bench_ckks(
+        "RNS-CKKS HERA r=2 (N=256, 7 levels)",
+        CkksCipherProfile::hera_toy(),
+        256,
+        8,
+    );
+    bench_ckks(
+        "RNS-CKKS Rubato r=2 (N=256, 5 levels)",
+        CkksCipherProfile::rubato_toy(),
+        256,
+        8,
+    );
+}

@@ -20,6 +20,9 @@ COMMANDS:
                  Generate stream-key blocks with the software cipher.
     encrypt    --params <set> [--seed N] [--nonce N] [--counter N] --values a,b,c
                  RtF-encode and encrypt a real-valued vector.
+    transcipher --params <set> [--rounds N] [--ring N] [--blocks N] [--seed N]
+                 RNS-CKKS transcipher-serving demo (client blocks in,
+                 CKKS ciphertexts out, decrypt-checked).
     serve      --params <set> [--batch B] [--rate R] [--requests N] [--artifact PATH]
                  Run the client-side encryption service (L3 coordinator).
     simulate   --params <set> [--design d1|d2|d3] [--blocks N] [--trace]
@@ -140,6 +143,88 @@ pub fn encrypt(args: &Args) -> i32 {
         ds.join(",")
     );
     0
+}
+
+/// `presto transcipher` — run the RNS-CKKS transcipher-serving demo:
+/// client blocks are symmetric-encrypted, the service transciphers them
+/// into CKKS ciphertexts, and the result is decrypted and checked.
+pub fn transcipher(args: &Args) -> i32 {
+    use presto::coordinator::{TranscipherConfig, TranscipherService};
+    use presto::he::transcipher::CkksCipherProfile;
+    use presto::params::CkksParams;
+    use presto::util::rng::SplitMix64;
+
+    let p = match params_from(args) {
+        Ok(p) => p,
+        Err(e) => return fail(e),
+    };
+    let rounds = match args.parsed_or("rounds", 2usize) {
+        Ok(r) => r,
+        Err(e) => return fail(e),
+    };
+    let ring = match args.parsed_or("ring", 256usize) {
+        Ok(r) => r,
+        Err(e) => return fail(e),
+    };
+    let blocks = match args.parsed_or("blocks", 8usize) {
+        Ok(b) => b,
+        Err(e) => return fail(e),
+    };
+    if rounds == 0 {
+        return fail("--rounds must be at least 1");
+    }
+    if !ring.is_power_of_two() || ring < 8 {
+        return fail(format!("--ring {ring} must be a power of two ≥ 8"));
+    }
+    let profile = CkksCipherProfile::from_params(&p, rounds);
+    let levels = profile.required_levels();
+    let cfg = TranscipherConfig {
+        profile,
+        ckks: CkksParams::with_shape(ring, levels),
+        seed: args.parsed_or("seed", 2026u64).unwrap_or(2026),
+        nonce: 1000,
+    };
+    let mut svc = match TranscipherService::start(cfg) {
+        Ok(s) => s,
+        Err(e) => return fail(e),
+    };
+    let l = svc.profile().l;
+    let blocks = blocks.min(svc.batch_capacity());
+    let mut rng = SplitMix64::new(9);
+    let data: Vec<Vec<f64>> = (0..blocks)
+        .map(|_| (0..l).map(|_| rng.next_f64() * 2.0 - 1.0).collect())
+        .collect();
+    let wire = svc.client_encrypt(&data);
+    let out = match svc.transcipher(&wire) {
+        Ok(o) => o,
+        Err(e) => return fail(e),
+    };
+    let mut max_err = 0.0f64;
+    for (i, ct) in out.iter().enumerate() {
+        let d = svc.context().decrypt_real(ct);
+        for (blk, row) in data.iter().enumerate() {
+            max_err = max_err.max((d[blk] - row[i]).abs());
+        }
+    }
+    let snap = svc.metrics().snapshot();
+    println!(
+        "{{\"params\":\"{}\",\"scheme\":\"{}\",\"rounds\":{},\"ring\":{},\"levels\":{},\"blocks\":{},\"max_err\":{:.3e},\"bound\":{:.1e},\"exec_ms\":{:.2}}}",
+        p.name,
+        p.scheme.name(),
+        rounds,
+        ring,
+        levels,
+        blocks,
+        max_err,
+        svc.profile().error_bound(),
+        snap.exec_mean_ns / 1e6,
+    );
+    if max_err < svc.profile().error_bound() {
+        0
+    } else {
+        eprintln!("error bound exceeded");
+        1
+    }
 }
 
 /// `presto serve` — wired to the coordinator once built (see serve_impl).

@@ -13,7 +13,10 @@
 //!   XLA-batch-sized lanes (the paper's 8 lanes) with a latency deadline.
 //! * [`server`] — the service: session/key registry, RtF encoding,
 //!   keystream execution (PJRT artifact or software cipher), encryptor,
-//!   and response routing.
+//!   and response routing. Also hosts the transcipher-serving mode
+//!   ([`server::TranscipherService`]): client symmetric ciphertexts in,
+//!   RNS-CKKS ciphertexts out, slot-batched up to N/2 blocks per
+//!   homomorphic evaluation.
 //! * [`metrics`] — counters and latency histograms.
 
 pub mod batcher;
@@ -24,4 +27,7 @@ pub mod server;
 pub use batcher::{BatchPolicy, Batcher};
 pub use metrics::Metrics;
 pub use rngpool::{RandomnessBundle, RngPool};
-pub use server::{EncryptServer, Engine, Response, ServerConfig};
+pub use server::{
+    EncryptServer, Engine, Response, ServerConfig, TranscipherBlock, TranscipherConfig,
+    TranscipherService,
+};

@@ -13,13 +13,17 @@ use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::Metrics;
 use super::rngpool::RngPool;
 use crate::arith::Elem;
+use crate::bail;
 use crate::cipher::{build_cipher, SecretKey, StreamCipher};
-use crate::params::ParamSet;
+use crate::he::ckks::{Ciphertext as CkksCiphertext, CkksContext};
+use crate::he::transcipher::{CkksCipherProfile, CkksTranscipher};
+use crate::params::{CkksParams, ParamSet};
 use crate::rtf::RtfCodec;
 use crate::runtime::{KeystreamExecutable, Runtime};
+use crate::util::error::{Context, Result};
+use crate::util::rng::SplitMix64;
 use crate::workload::Request;
 use crate::xof::XofKind;
-use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::mpsc::{channel, Sender};
@@ -341,6 +345,183 @@ fn executor_loop(
     }
 }
 
+// ---------------------------------------------------------------------
+// Transcipher-serving mode: client symmetric ciphertexts in, CKKS
+// ciphertexts out.
+// ---------------------------------------------------------------------
+
+/// Configuration for [`TranscipherService`].
+#[derive(Debug, Clone)]
+pub struct TranscipherConfig {
+    /// The cipher profile (HERA or Rubato shape, rounds, normalizer).
+    pub profile: CkksCipherProfile,
+    /// CKKS parameters; `ckks.levels` must cover
+    /// [`CkksCipherProfile::required_levels`].
+    pub ckks: CkksParams,
+    /// Deterministic seed for key material.
+    pub seed: u64,
+    /// Session nonce (one symmetric-key stream per service instance).
+    pub nonce: u64,
+}
+
+impl Default for TranscipherConfig {
+    fn default() -> Self {
+        let profile = CkksCipherProfile::rubato_toy();
+        let levels = profile.required_levels();
+        TranscipherConfig {
+            profile,
+            ckks: CkksParams::with_shape(64, levels),
+            seed: 2026,
+            nonce: 1000,
+        }
+    }
+}
+
+/// One client block on the wire: a counter and l real ciphertext values.
+#[derive(Debug, Clone)]
+pub struct TranscipherBlock {
+    /// Keystream counter (unique per block within the nonce's stream).
+    pub counter: u64,
+    /// Symmetric ciphertext c = m + z (l values).
+    pub data: Vec<f64>,
+}
+
+/// The transcipher-serving mode of the coordinator: holds the CKKS context
+/// and the CKKS-encrypted symmetric key, and converts batches of client
+/// symmetric ciphertexts into CKKS ciphertexts (slot b of output i = block
+/// b's message element i), with serving metrics.
+///
+/// For the demo the service also holds the client's symmetric key so the
+/// example/CLI can exercise both halves of the protocol in one process; a
+/// production split keeps `client_encrypt` on the client and the CKKS
+/// secret key with the data owner.
+pub struct TranscipherService {
+    cfg: TranscipherConfig,
+    ctx: CkksContext,
+    server: CkksTranscipher,
+    sym_key: Vec<f64>,
+    metrics: Arc<Metrics>,
+    next_counter: u64,
+}
+
+impl TranscipherService {
+    /// Build the CKKS context, sample the symmetric key, and perform the
+    /// RtF key upload (CKKS-encrypt the key).
+    pub fn start(cfg: TranscipherConfig) -> Result<TranscipherService> {
+        if cfg.ckks.levels < cfg.profile.required_levels() {
+            bail!(
+                "CKKS chain has {} levels but the {:?} profile needs {}",
+                cfg.ckks.levels,
+                cfg.profile.scheme,
+                cfg.profile.required_levels()
+            );
+        }
+        let ctx = CkksContext::generate(cfg.ckks, cfg.seed, &[]);
+        let sym_key = cfg.profile.sample_key(cfg.seed ^ 0x5359_4D4B); // "SYMK"
+        let mut rng = SplitMix64::new(cfg.seed ^ 0x454E_434B); // "ENCK"
+        let server = CkksTranscipher::setup(cfg.profile.clone(), &ctx, &sym_key, &mut rng);
+        Ok(TranscipherService {
+            cfg,
+            ctx,
+            server,
+            sym_key,
+            metrics: Arc::new(Metrics::new()),
+            next_counter: 0,
+        })
+    }
+
+    /// The CKKS context (decryption side for tests/examples).
+    pub fn context(&self) -> &CkksContext {
+        &self.ctx
+    }
+
+    /// The cipher profile in force.
+    pub fn profile(&self) -> &CkksCipherProfile {
+        &self.cfg.profile
+    }
+
+    /// Serving metrics.
+    pub fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// Maximum blocks per transcipher batch (the slot count).
+    pub fn batch_capacity(&self) -> usize {
+        self.ctx.slots()
+    }
+
+    /// The session nonce.
+    pub fn nonce(&self) -> u64 {
+        self.cfg.nonce
+    }
+
+    /// Client half: symmetric-encrypt real-valued blocks (each of length
+    /// ≤ l, zero-padded to l; values in the cipher's working range),
+    /// assigning stream counters.
+    pub fn client_encrypt(&mut self, blocks: &[Vec<f64>]) -> Vec<TranscipherBlock> {
+        let l = self.cfg.profile.l;
+        blocks
+            .iter()
+            .map(|m| {
+                assert!(m.len() <= l, "block longer than keystream length l = {l}");
+                let counter = self.next_counter;
+                self.next_counter += 1;
+                let mut padded = m.clone();
+                padded.resize(l, 0.0);
+                TranscipherBlock {
+                    counter,
+                    data: self.cfg.profile.encrypt_block(
+                        &self.sym_key,
+                        self.cfg.nonce,
+                        counter,
+                        &padded,
+                    ),
+                }
+            })
+            .collect()
+    }
+
+    /// Server half: transcipher one batch of symmetric ciphertexts into
+    /// CKKS ciphertexts. Records per-block latency and batch metrics.
+    pub fn transcipher(&self, blocks: &[TranscipherBlock]) -> Result<Vec<CkksCiphertext>> {
+        if blocks.is_empty() {
+            bail!("empty transcipher batch");
+        }
+        if blocks.len() > self.batch_capacity() {
+            bail!(
+                "batch of {} blocks exceeds slot capacity {}",
+                blocks.len(),
+                self.batch_capacity()
+            );
+        }
+        let l = self.cfg.profile.l;
+        if let Some(bad) = blocks.iter().find(|b| b.data.len() != l) {
+            bail!(
+                "block with counter {} has {} values, expected l = {l}",
+                bad.counter,
+                bad.data.len()
+            );
+        }
+        let t0 = Instant::now();
+        let counters: Vec<u64> = blocks.iter().map(|b| b.counter).collect();
+        let sym: Vec<Vec<f64>> = blocks.iter().map(|b| b.data.clone()).collect();
+        let out = self
+            .server
+            .transcipher(&self.ctx, self.cfg.nonce, &counters, &sym);
+        let dt = t0.elapsed().as_nanos() as u64;
+        for _ in blocks {
+            self.metrics.record_request(dt);
+        }
+        self.metrics.record_batch(
+            blocks.len(),
+            self.batch_capacity(),
+            (self.cfg.profile.l * blocks.len()) as u64,
+            dt,
+        );
+        Ok(out)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -437,5 +618,86 @@ mod tests {
         assert_eq!(snap.requests, 9);
         assert!(snap.batches >= 3);
         server.shutdown();
+    }
+
+    fn small_transcipher_service() -> TranscipherService {
+        let profile = CkksCipherProfile::rubato_toy();
+        let levels = profile.required_levels();
+        TranscipherService::start(TranscipherConfig {
+            profile,
+            ckks: CkksParams::with_shape(32, levels),
+            seed: 11,
+            nonce: 77,
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn transcipher_service_roundtrip_with_metrics() {
+        let mut svc = small_transcipher_service();
+        let l = svc.profile().l;
+        let mut rng = crate::util::rng::SplitMix64::new(3);
+        let data: Vec<Vec<f64>> = (0..4)
+            .map(|_| (0..l).map(|_| rng.next_f64() * 2.0 - 1.0).collect())
+            .collect();
+        let wire = svc.client_encrypt(&data);
+        assert_eq!(wire.len(), 4);
+        assert_eq!(wire[3].counter, 3);
+        let out = svc.transcipher(&wire).unwrap();
+        assert_eq!(out.len(), l);
+        let bound = svc.profile().error_bound();
+        for (i, ct) in out.iter().enumerate() {
+            let d = svc.context().decrypt_real(ct);
+            for (blk, row) in data.iter().enumerate() {
+                assert!(
+                    (d[blk] - row[i]).abs() < bound,
+                    "elem {i} block {blk}: {} vs {}",
+                    d[blk],
+                    row[i]
+                );
+            }
+        }
+        let snap = svc.metrics().snapshot();
+        assert_eq!(snap.requests, 4);
+        assert_eq!(snap.batches, 1);
+        assert_eq!(snap.partial_batches, 1); // 4 blocks < 16-slot capacity
+        assert_eq!(snap.keystream_elems, (4 * l) as u64);
+    }
+
+    #[test]
+    fn transcipher_service_rejects_bad_batches() {
+        let svc = small_transcipher_service();
+        assert!(svc.transcipher(&[]).is_err());
+        let too_many: Vec<TranscipherBlock> = (0..svc.batch_capacity() as u64 + 1)
+            .map(|c| TranscipherBlock {
+                counter: c,
+                data: vec![0.0; svc.profile().l],
+            })
+            .collect();
+        let err = svc.transcipher(&too_many).unwrap_err();
+        assert!(err.to_string().contains("slot capacity"), "{err}");
+        // Malformed wire data (wrong block length) is rejected, not a panic.
+        let short = vec![TranscipherBlock {
+            counter: 0,
+            data: vec![0.0; svc.profile().l - 1],
+        }];
+        let err = svc.transcipher(&short).unwrap_err();
+        assert!(err.to_string().contains("expected l"), "{err}");
+    }
+
+    #[test]
+    fn transcipher_service_rejects_shallow_chain() {
+        let profile = CkksCipherProfile::hera_toy(); // needs 7 levels
+        let cfg = TranscipherConfig {
+            ckks: CkksParams::with_shape(32, 4),
+            profile,
+            seed: 1,
+            nonce: 1,
+        };
+        let err = match TranscipherService::start(cfg) {
+            Err(e) => e,
+            Ok(_) => panic!("start should fail on a shallow chain"),
+        };
+        assert!(err.to_string().contains("levels"), "{err}");
     }
 }

@@ -1,0 +1,284 @@
+//! CKKS canonical-embedding encoder.
+//!
+//! A real-coefficient polynomial m ∈ R = Z[X]/(X^N+1) is identified with
+//! its evaluations at the primitive 2N-th roots of unity ζ^{g_j}, where
+//! g_j = 5^j mod 2N enumerates one element of each conjugate pair. The
+//! N/2 evaluations ("slots") carry complex values; encoding inverts the
+//! evaluation map under the conjugate-symmetry constraint that keeps
+//! coefficients real.
+//!
+//! Both directions are one size-2N complex FFT: the slot values (and their
+//! conjugates) are scattered onto the odd indices of a length-2N vector,
+//! whose DFT collapses to `2·Re Σ_j z_j ζ^{∓g_j k}` — exactly the
+//! orthogonality sums of the embedding matrix. O(N log N), in-crate, f64.
+
+use std::ops::{Add, Mul, Neg, Sub};
+
+/// A complex number (f64 re/im) — the minimal arithmetic the FFT needs.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Complex {
+    /// Real part.
+    pub re: f64,
+    /// Imaginary part.
+    pub im: f64,
+}
+
+impl Complex {
+    /// Construct from parts.
+    pub fn new(re: f64, im: f64) -> Complex {
+        Complex { re, im }
+    }
+
+    /// Purely real value.
+    pub fn real(re: f64) -> Complex {
+        Complex { re, im: 0.0 }
+    }
+
+    /// Complex conjugate.
+    pub fn conj(self) -> Complex {
+        Complex {
+            re: self.re,
+            im: -self.im,
+        }
+    }
+
+    /// Magnitude |z|.
+    pub fn abs(self) -> f64 {
+        self.re.hypot(self.im)
+    }
+
+    /// Scale by a real factor.
+    pub fn scale(self, s: f64) -> Complex {
+        Complex {
+            re: self.re * s,
+            im: self.im * s,
+        }
+    }
+}
+
+impl Add for Complex {
+    type Output = Complex;
+    fn add(self, o: Complex) -> Complex {
+        Complex::new(self.re + o.re, self.im + o.im)
+    }
+}
+
+impl Sub for Complex {
+    type Output = Complex;
+    fn sub(self, o: Complex) -> Complex {
+        Complex::new(self.re - o.re, self.im - o.im)
+    }
+}
+
+impl Mul for Complex {
+    type Output = Complex;
+    fn mul(self, o: Complex) -> Complex {
+        Complex::new(
+            self.re * o.re - self.im * o.im,
+            self.re * o.im + self.im * o.re,
+        )
+    }
+}
+
+impl Neg for Complex {
+    type Output = Complex;
+    fn neg(self) -> Complex {
+        Complex::new(-self.re, -self.im)
+    }
+}
+
+/// The embedding codec for ring degree N (N/2 slots).
+#[derive(Debug, Clone)]
+pub struct Encoder {
+    /// Ring degree N.
+    pub n: usize,
+    /// Slot count N/2.
+    pub slots: usize,
+    /// Rotation-group representatives g_j = 5^j mod 2N.
+    g: Vec<usize>,
+    /// 2N-th roots of unity e^{2πi j / 2N}.
+    roots: Vec<Complex>,
+}
+
+impl Encoder {
+    /// Build the codec for ring degree `n` (power of two, ≥ 4).
+    pub fn new(n: usize) -> Encoder {
+        assert!(n.is_power_of_two() && n >= 4);
+        let m = 2 * n;
+        let slots = n / 2;
+        let mut g = Vec::with_capacity(slots);
+        let mut x = 1usize;
+        for _ in 0..slots {
+            g.push(x);
+            x = x * 5 % m;
+        }
+        let roots = (0..m)
+            .map(|j| {
+                let ang = 2.0 * std::f64::consts::PI * j as f64 / m as f64;
+                Complex::new(ang.cos(), ang.sin())
+            })
+            .collect();
+        Encoder { n, slots, g, roots }
+    }
+
+    /// In-place size-2N FFT. `invert == false` uses the kernel e^{+2πi tk/2N}
+    /// (the convention the embedding scatter below is built around);
+    /// `invert == true` conjugates the kernel and divides by 2N.
+    fn fft(&self, a: &mut [Complex], invert: bool) {
+        let m = a.len();
+        debug_assert_eq!(m, 2 * self.n);
+        // Bit-reversal permutation.
+        let mut j = 0usize;
+        for i in 1..m {
+            let mut bit = m >> 1;
+            while j & bit != 0 {
+                j ^= bit;
+                bit >>= 1;
+            }
+            j |= bit;
+            if i < j {
+                a.swap(i, j);
+            }
+        }
+        let mut len = 2;
+        while len <= m {
+            let wstep = m / len;
+            for start in (0..m).step_by(len) {
+                for k in 0..len / 2 {
+                    let mut w = self.roots[k * wstep];
+                    if invert {
+                        w = w.conj();
+                    }
+                    let u = a[start + k];
+                    let v = a[start + k + len / 2] * w;
+                    a[start + k] = u + v;
+                    a[start + k + len / 2] = u - v;
+                }
+            }
+            len <<= 1;
+        }
+        if invert {
+            let inv = 1.0 / m as f64;
+            for x in a.iter_mut() {
+                *x = x.scale(inv);
+            }
+        }
+    }
+
+    /// Slots → real coefficients (unscaled). `values.len() ≤ slots`; missing
+    /// slots are zero.
+    pub fn embed(&self, values: &[Complex]) -> Vec<f64> {
+        assert!(values.len() <= self.slots, "too many slot values");
+        let m = 2 * self.n;
+        let mut v = vec![Complex::default(); m];
+        for (j, &z) in values.iter().enumerate() {
+            v[self.g[j]] = z;
+            v[m - self.g[j]] = z.conj();
+        }
+        self.fft(&mut v, false);
+        (0..self.n).map(|k| v[k].re / self.n as f64).collect()
+    }
+
+    /// Real coefficients → slot values (the evaluation map).
+    pub fn project(&self, coeffs: &[f64]) -> Vec<Complex> {
+        assert_eq!(coeffs.len(), self.n);
+        let m = 2 * self.n;
+        let mut v = vec![Complex::default(); m];
+        for (k, &c) in coeffs.iter().enumerate() {
+            v[k] = Complex::real(c);
+        }
+        self.fft(&mut v, true);
+        self.g.iter().map(|&gj| v[gj].scale(m as f64)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn embed_project_roundtrip() {
+        for n in [8usize, 64, 256] {
+            let enc = Encoder::new(n);
+            let mut rng = SplitMix64::new(n as u64);
+            let z: Vec<Complex> = (0..enc.slots)
+                .map(|_| Complex::new(rng.next_f64() - 0.5, rng.next_f64() - 0.5))
+                .collect();
+            let c = enc.embed(&z);
+            let back = enc.project(&c);
+            for (a, b) in z.iter().zip(&back) {
+                assert!((*a - *b).abs() < 1e-9, "{a:?} vs {b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn embedding_is_ring_homomorphism() {
+        // Negacyclic product of embeddings decodes to slotwise product.
+        let n = 64;
+        let enc = Encoder::new(n);
+        let mut rng = SplitMix64::new(9);
+        let z1: Vec<Complex> = (0..enc.slots)
+            .map(|_| Complex::real(rng.next_f64() - 0.5))
+            .collect();
+        let z2: Vec<Complex> = (0..enc.slots)
+            .map(|_| Complex::real(rng.next_f64() - 0.5))
+            .collect();
+        let c1 = enc.embed(&z1);
+        let c2 = enc.embed(&z2);
+        let mut prod = vec![0.0f64; n];
+        for i in 0..n {
+            for j in 0..n {
+                let k = i + j;
+                if k < n {
+                    prod[k] += c1[i] * c2[j];
+                } else {
+                    prod[k - n] -= c1[i] * c2[j];
+                }
+            }
+        }
+        let got = enc.project(&prod);
+        for ((g, a), b) in got.iter().zip(&z1).zip(&z2) {
+            assert!((*g - *a * *b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn constant_vector_embeds_to_constant_poly() {
+        let enc = Encoder::new(32);
+        let z = vec![Complex::real(0.75); enc.slots];
+        let c = enc.embed(&z);
+        assert!((c[0] - 0.75).abs() < 1e-12);
+        for &x in &c[1..] {
+            assert!(x.abs() < 1e-12, "non-constant coefficient {x}");
+        }
+    }
+
+    #[test]
+    fn automorphism_rotates_slots() {
+        // m(X^5) has slots rotated by one step under the g_j = 5^j order.
+        let n = 32;
+        let enc = Encoder::new(n);
+        let mut rng = SplitMix64::new(4);
+        let z: Vec<Complex> = (0..enc.slots)
+            .map(|_| Complex::new(rng.next_f64(), rng.next_f64()))
+            .collect();
+        let c = enc.embed(&z);
+        // Apply X -> X^5 on real coefficients.
+        let mut rot = vec![0.0f64; n];
+        for (i, &ci) in c.iter().enumerate() {
+            let j = i * 5 % (2 * n);
+            if j < n {
+                rot[j] += ci;
+            } else {
+                rot[j - n] -= ci;
+            }
+        }
+        let got = enc.project(&rot);
+        for j in 0..enc.slots {
+            let expect = z[(j + 1) % enc.slots];
+            assert!((got[j] - expect).abs() < 1e-9, "slot {j}");
+        }
+    }
+}

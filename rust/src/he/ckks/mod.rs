@@ -1,0 +1,634 @@
+//! RNS-CKKS: approximate homomorphic encryption over the reals.
+//!
+//! The server side of the paper's RtF dataflow terminates in CKKS: the
+//! HalfBoot output is a CKKS ciphertext of the client's real-valued data.
+//! This module provides the CKKS substrate that the real HERA/Rubato
+//! transciphering path ([`crate::he::transcipher`]) evaluates under:
+//!
+//! * [`encoder`] — the canonical-embedding codec (slots ↔ real
+//!   coefficients, one in-crate f64 FFT each way).
+//! * Key generation: ternary RLWE secret, relinearization and rotation
+//!   keys using a **two-level gadget** — the RNS decomposition (one digit
+//!   per prime q_i, gadget factor `(Q_l/q_i)·[(Q_l/q_i)^{-1}]_{q_i}`)
+//!   composed with a base-2^w digit decomposition inside each prime.
+//!   The second level is what keeps key-switching noise ≈ N·2^w·σ instead
+//!   of ≈ N·q·σ; without it, rotations (which key-switch at scale Δ, not
+//!   Δ²) lose the message entirely.
+//! * Ciphertext ops: add/sub, plaintext add/mul, small-integer scalar mul,
+//!   ciphertext mul with relinearization, rescale (centered division by
+//!   the top prime), and slot rotation via the Galois automorphism
+//!   X → X^(5^r) with hoistable per-level switching keys.
+//!
+//! Scale management: every ciphertext carries its scale as f64 metadata.
+//! Rescaling divides the scale by the (≈ 2^scale_bits, not exactly)
+//! dropped prime, so scales drift — operands are aligned by encoding
+//! plaintexts at the ciphertext's current scale, never by reinterpreting
+//! the scale of an existing ciphertext (a scale-only "multiplication"
+//! leaves the phase magnitude unchanged and overflows Q at low levels).
+//!
+//! Switching keys are generated **per level**: the RNS gadget of Q_l is
+//! level-dependent, so `keys[l][i][t]` holds the key for prime i, digit t
+//! at level l. Memory is O(L³·digits·N), a few MB at demo sizes.
+
+pub mod encoder;
+
+pub use encoder::{Complex, Encoder};
+
+use super::rns::{RnsBasis, RnsPoly};
+use crate::arith::{mod_mul64, mod_pow64};
+use crate::params::CkksParams;
+use crate::sampler::DiscreteGaussian;
+use crate::util::rng::SplitMix64;
+use crate::xof::{Xof, XofKind};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// An encoded (unencrypted) polynomial with its scale.
+#[derive(Debug, Clone)]
+pub struct Plaintext {
+    /// The scaled integer polynomial in RNS form.
+    pub poly: RnsPoly,
+    /// Encoding scale Δ.
+    pub scale: f64,
+}
+
+/// A CKKS ciphertext (c0, c1): decrypts as c0 + c1·s ≈ Δ·m.
+#[derive(Debug, Clone)]
+pub struct Ciphertext {
+    /// Constant term.
+    pub c0: RnsPoly,
+    /// s-coefficient term.
+    pub c1: RnsPoly,
+    /// Current scale (drifts under rescaling; tracked exactly as f64).
+    pub scale: f64,
+}
+
+impl Ciphertext {
+    /// Current level (active primes − 1).
+    pub fn level(&self) -> usize {
+        self.c0.level()
+    }
+
+    /// View at a lower level (mod-down; scale unchanged).
+    pub fn drop_to_level(&self, level: usize) -> Ciphertext {
+        Ciphertext {
+            c0: self.c0.drop_to_level(level),
+            c1: self.c1.drop_to_level(level),
+            scale: self.scale,
+        }
+    }
+}
+
+/// A key-switching key ladder: `keys[level][i][t]` = (b, a) with
+/// `b = -(a·s + e) + 2^(w·t) · g_i^(level) · target`, where `target` is the
+/// key being switched away from (s² for relinearization, s(X^g) for
+/// rotations) and `g_i` the RNS gadget factor of Q_level.
+struct SwitchKey {
+    keys: Vec<Vec<Vec<(RnsPoly, RnsPoly)>>>,
+}
+
+struct RotKey {
+    galois: usize,
+    key: SwitchKey,
+}
+
+/// The CKKS context: parameters, RNS basis, encoder, secret key and
+/// evaluation keys. Symmetric-key (the RtF client shares its data with the
+/// key owner; public-key encryption adds nothing to the dataflow modeled
+/// here — see DESIGN.md).
+pub struct CkksContext {
+    params: CkksParams,
+    basis: Arc<RnsBasis>,
+    encoder: Encoder,
+    s: RnsPoly,
+    relin: SwitchKey,
+    rot_keys: BTreeMap<usize, RotKey>,
+}
+
+/// Galois element for a left-rotation by `steps` slots: 5^steps mod 2N.
+pub fn galois_element(n: usize, steps: usize) -> usize {
+    mod_pow64(5, steps as u64, 2 * n as u64) as usize
+}
+
+fn digit_count(q: u64, w: u32) -> usize {
+    (64 - q.leading_zeros()).div_ceil(w) as usize
+}
+
+fn gaussian_rns(
+    basis: &Arc<RnsBasis>,
+    dgd: &mut DiscreteGaussian,
+    xof: &mut dyn Xof,
+    level: usize,
+) -> RnsPoly {
+    let c: Vec<i64> = (0..basis.n).map(|_| dgd.sample(xof)).collect();
+    RnsPoly::from_i64_coeffs(basis, &c, level)
+}
+
+fn make_switch_key(
+    basis: &Arc<RnsBasis>,
+    s: &RnsPoly,
+    target: &RnsPoly,
+    w: u32,
+    rng: &mut SplitMix64,
+    dgd: &mut DiscreteGaussian,
+    xof: &mut dyn Xof,
+) -> SwitchKey {
+    let top = basis.max_level();
+    let mut keys = Vec::with_capacity(top + 1);
+    for l in 0..=top {
+        let sl = s.drop_to_level(l);
+        let tl = target.drop_to_level(l);
+        let mut per_prime = Vec::with_capacity(l + 1);
+        for i in 0..=l {
+            let digits = digit_count(basis.primes[i], w);
+            let mut per_digit = Vec::with_capacity(digits);
+            for t in 0..digits {
+                let a = RnsPoly::uniform(basis, rng, l);
+                let e = gaussian_rns(basis, dgd, xof, l);
+                // 2^(w·t) · g_i · target, row by row.
+                let mut gt_rows = Vec::with_capacity(l + 1);
+                for j in 0..=l {
+                    let qj = basis.primes[j];
+                    let mut gij =
+                        mod_mul64(basis.hat_inv_at(l, i), basis.hat_mod_at(l, i, j), qj);
+                    gij = mod_mul64(gij, mod_pow64(2, w as u64 * t as u64, qj), qj);
+                    gt_rows.push(
+                        tl.rows[j]
+                            .iter()
+                            .map(|&x| mod_mul64(x, gij, qj))
+                            .collect(),
+                    );
+                }
+                let gt = RnsPoly {
+                    rows: gt_rows,
+                    basis: Arc::clone(basis),
+                };
+                let b = a.mul(&sl).add(&e).neg().add(&gt);
+                per_digit.push((b, a));
+            }
+            per_prime.push(per_digit);
+        }
+        keys.push(per_prime);
+    }
+    SwitchKey { keys }
+}
+
+impl CkksContext {
+    /// Generate a context deterministically from `seed`, with rotation keys
+    /// for the given left-rotation step counts.
+    pub fn generate(params: CkksParams, seed: u64, rotations: &[usize]) -> CkksContext {
+        let basis = RnsBasis::generate(
+            params.n,
+            params.base_bits,
+            params.scale_bits,
+            params.levels,
+        );
+        let encoder = Encoder::new(params.n);
+        let mut rng = SplitMix64::new(seed);
+        let mut dgd = DiscreteGaussian::new(params.sigma);
+        let mut xof = XofKind::AesCtr.instantiate(seed ^ 0x434B_4B53, 0); // "CKKS"
+        let top = basis.max_level();
+        let s_coeffs: Vec<i64> = (0..params.n).map(|_| rng.below(3) as i64 - 1).collect();
+        let s = RnsPoly::from_i64_coeffs(&basis, &s_coeffs, top);
+        let s2 = s.mul(&s);
+        let relin = make_switch_key(
+            &basis,
+            &s,
+            &s2,
+            params.ksk_digit_bits,
+            &mut rng,
+            &mut dgd,
+            xof.as_mut(),
+        );
+        let mut rot_keys = BTreeMap::new();
+        for &r in rotations {
+            let g = galois_element(params.n, r);
+            let sg = s.automorphism(g);
+            let key = make_switch_key(
+                &basis,
+                &s,
+                &sg,
+                params.ksk_digit_bits,
+                &mut rng,
+                &mut dgd,
+                xof.as_mut(),
+            );
+            rot_keys.insert(r, RotKey { galois: g, key });
+        }
+        CkksContext {
+            params,
+            basis,
+            encoder,
+            s,
+            relin,
+            rot_keys,
+        }
+    }
+
+    /// Parameters.
+    pub fn params(&self) -> &CkksParams {
+        &self.params
+    }
+
+    /// The RNS basis.
+    pub fn basis(&self) -> &Arc<RnsBasis> {
+        &self.basis
+    }
+
+    /// Slot count N/2.
+    pub fn slots(&self) -> usize {
+        self.encoder.slots
+    }
+
+    /// Top level of the modulus chain.
+    pub fn max_level(&self) -> usize {
+        self.basis.max_level()
+    }
+
+    /// The prime q_level (the one a rescale at this level divides by).
+    pub fn prime_at(&self, level: usize) -> u64 {
+        self.basis.primes[level]
+    }
+
+    /// Rotation step counts this context has keys for.
+    pub fn rotation_steps(&self) -> Vec<usize> {
+        self.rot_keys.keys().copied().collect()
+    }
+
+    // ---- encoding ----
+
+    /// Encode real slot values at the given scale and level.
+    pub fn encode(&self, values: &[f64], scale: f64, level: usize) -> Plaintext {
+        let z: Vec<Complex> = values.iter().map(|&v| Complex::real(v)).collect();
+        self.encode_complex(&z, scale, level)
+    }
+
+    /// Encode complex slot values at the given scale and level.
+    pub fn encode_complex(&self, values: &[Complex], scale: f64, level: usize) -> Plaintext {
+        assert!(scale > 0.0, "scale must be positive");
+        let coeffs = self.encoder.embed(values);
+        let ints: Vec<i128> = coeffs
+            .iter()
+            .map(|&c| {
+                let s = c * scale;
+                assert!(
+                    s.abs() < 1.7e38,
+                    "encoded coefficient overflows i128 (|value|·Δ too large)"
+                );
+                s.round() as i128
+            })
+            .collect();
+        Plaintext {
+            poly: RnsPoly::from_i128_coeffs(&self.basis, &ints, level),
+            scale,
+        }
+    }
+
+    /// Decode a plaintext back to complex slot values.
+    pub fn decode(&self, pt: &Plaintext) -> Vec<Complex> {
+        let coeffs: Vec<f64> = pt
+            .poly
+            .centered_f64()
+            .iter()
+            .map(|&c| c / pt.scale)
+            .collect();
+        self.encoder.project(&coeffs)
+    }
+
+    // ---- encryption ----
+
+    /// Encrypt a plaintext (symmetric RLWE).
+    pub fn encrypt(&self, pt: &Plaintext, rng: &mut SplitMix64) -> Ciphertext {
+        let level = pt.poly.level();
+        let a = RnsPoly::uniform(&self.basis, rng, level);
+        let mut dgd = DiscreteGaussian::new(self.params.sigma);
+        let mut xof = XofKind::AesCtr.instantiate(rng.next_u64(), 2);
+        let e = gaussian_rns(&self.basis, &mut dgd, xof.as_mut(), level);
+        let c0 = a.mul(&self.s.drop_to_level(level)).neg().add(&e).add(&pt.poly);
+        Ciphertext {
+            c0,
+            c1: a,
+            scale: pt.scale,
+        }
+    }
+
+    /// Encrypt real slot values at the top level.
+    pub fn encrypt_values(&self, values: &[f64], scale: f64, rng: &mut SplitMix64) -> Ciphertext {
+        let pt = self.encode(values, scale, self.max_level());
+        self.encrypt(&pt, rng)
+    }
+
+    /// Decrypt to complex slot values.
+    pub fn decrypt(&self, ct: &Ciphertext) -> Vec<Complex> {
+        let sl = self.s.drop_to_level(ct.level());
+        let phase = ct.c0.add(&ct.c1.mul(&sl));
+        let coeffs: Vec<f64> = phase
+            .centered_f64()
+            .iter()
+            .map(|&c| c / ct.scale)
+            .collect();
+        self.encoder.project(&coeffs)
+    }
+
+    /// Decrypt to the real parts of the slots.
+    pub fn decrypt_real(&self, ct: &Ciphertext) -> Vec<f64> {
+        self.decrypt(ct).iter().map(|z| z.re).collect()
+    }
+
+    // ---- arithmetic ----
+
+    fn assert_scales_match(a: f64, b: f64) {
+        assert!(
+            (a - b).abs() <= a.abs() * 1e-6,
+            "ciphertext scale mismatch: {a} vs {b}"
+        );
+    }
+
+    /// Homomorphic addition (levels aligned automatically; scales must
+    /// match).
+    pub fn add(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
+        Self::assert_scales_match(a.scale, b.scale);
+        let l = a.level().min(b.level());
+        let (a, b) = (a.drop_to_level(l), b.drop_to_level(l));
+        Ciphertext {
+            c0: a.c0.add(&b.c0),
+            c1: a.c1.add(&b.c1),
+            scale: a.scale,
+        }
+    }
+
+    /// Homomorphic subtraction.
+    pub fn sub(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
+        Self::assert_scales_match(a.scale, b.scale);
+        let l = a.level().min(b.level());
+        let (a, b) = (a.drop_to_level(l), b.drop_to_level(l));
+        Ciphertext {
+            c0: a.c0.sub(&b.c0),
+            c1: a.c1.sub(&b.c1),
+            scale: a.scale,
+        }
+    }
+
+    /// Add plaintext slot values (encoded at the ciphertext's scale/level).
+    pub fn add_plain(&self, ct: &Ciphertext, values: &[f64]) -> Ciphertext {
+        let pt = self.encode(values, ct.scale, ct.level());
+        Ciphertext {
+            c0: ct.c0.add(&pt.poly),
+            c1: ct.c1.clone(),
+            scale: ct.scale,
+        }
+    }
+
+    /// `plaintext − ciphertext`: the transcipher's final step
+    /// `Enc(m) = c − Enc(z)` with public c.
+    pub fn plain_sub(&self, values: &[f64], ct: &Ciphertext) -> Ciphertext {
+        let pt = self.encode(values, ct.scale, ct.level());
+        Ciphertext {
+            c0: pt.poly.sub(&ct.c0),
+            c1: ct.c1.neg(),
+            scale: ct.scale,
+        }
+    }
+
+    /// Multiply by plaintext slot values encoded at `pt_scale`; resulting
+    /// scale is the product (caller typically rescales next).
+    pub fn mul_plain(&self, ct: &Ciphertext, values: &[f64], pt_scale: f64) -> Ciphertext {
+        let pt = self.encode(values, pt_scale, ct.level());
+        Ciphertext {
+            c0: ct.c0.mul(&pt.poly),
+            c1: ct.c1.mul(&pt.poly),
+            scale: ct.scale * pt_scale,
+        }
+    }
+
+    /// Multiply by a small signed integer (exact; scale unchanged). This is
+    /// the MixColumns/MixRows path: matrix entries {1, 2, 3} cost no level.
+    pub fn mul_scalar_int(&self, ct: &Ciphertext, k: i64) -> Ciphertext {
+        Ciphertext {
+            c0: ct.c0.mul_scalar_i64(k),
+            c1: ct.c1.mul_scalar_i64(k),
+            scale: ct.scale,
+        }
+    }
+
+    /// Ciphertext multiplication with relinearization. Scale multiplies;
+    /// rescale afterwards to return near Δ.
+    pub fn mul(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
+        let l = a.level().min(b.level());
+        let (a, b) = (a.drop_to_level(l), b.drop_to_level(l));
+        let d0 = a.c0.mul(&b.c0);
+        let d1 = a.c0.mul(&b.c1).add(&a.c1.mul(&b.c0));
+        let d2 = a.c1.mul(&b.c1);
+        let (k0, k1) = self.key_switch(&d2, &self.relin);
+        Ciphertext {
+            c0: d0.add(&k0),
+            c1: d1.add(&k1),
+            scale: a.scale * b.scale,
+        }
+    }
+
+    /// Rescale: divide the phase (and scale) by the current top prime,
+    /// dropping one level.
+    pub fn rescale(&self, ct: &Ciphertext) -> Ciphertext {
+        let q = self.basis.primes[ct.level()] as f64;
+        Ciphertext {
+            c0: ct.c0.rescale_top(),
+            c1: ct.c1.rescale_top(),
+            scale: ct.scale / q,
+        }
+    }
+
+    /// Rotate slots left by `steps` (requires a rotation key generated for
+    /// exactly this step count).
+    pub fn rotate(&self, ct: &Ciphertext, steps: usize) -> Ciphertext {
+        let rk = self
+            .rot_keys
+            .get(&steps)
+            .unwrap_or_else(|| panic!("no rotation key for step {steps}"));
+        let c0g = ct.c0.automorphism(rk.galois);
+        let c1g = ct.c1.automorphism(rk.galois);
+        let (k0, k1) = self.key_switch(&c1g, &rk.key);
+        Ciphertext {
+            c0: c0g.add(&k0),
+            c1: k1,
+            scale: ct.scale,
+        }
+    }
+
+    fn key_switch(&self, d: &RnsPoly, key: &SwitchKey) -> (RnsPoly, RnsPoly) {
+        let l = d.level();
+        let w = self.params.ksk_digit_bits;
+        let mask = (1u64 << w) - 1;
+        let mut c0 = RnsPoly::zero(&self.basis, l);
+        let mut c1 = RnsPoly::zero(&self.basis, l);
+        for i in 0..=l {
+            let digits = digit_count(self.basis.primes[i], w);
+            for t in 0..digits {
+                let shift = w * t as u32;
+                let drow: Vec<u64> = d.rows[i].iter().map(|&x| (x >> shift) & mask).collect();
+                // Digit values are < 2^w < every prime in the chain, so one
+                // row serves as the residue of the lifted digit everywhere.
+                let dpoly = RnsPoly {
+                    rows: vec![drow; l + 1],
+                    basis: Arc::clone(&self.basis),
+                };
+                let (b, a) = &key.keys[l][i][t];
+                c0 = c0.add(&dpoly.mul(b));
+                c1 = c1.add(&dpoly.mul(a));
+            }
+        }
+        (c0, c1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::CkksParams;
+
+    const DELTA: f64 = 1_099_511_627_776.0; // 2^40
+
+    fn small_params() -> CkksParams {
+        CkksParams::with_shape(32, 6)
+    }
+
+    fn setup(rotations: &[usize]) -> (CkksContext, SplitMix64) {
+        (
+            CkksContext::generate(small_params(), 7, rotations),
+            SplitMix64::new(3),
+        )
+    }
+
+    fn rand_slots(rng: &mut SplitMix64, count: usize) -> Vec<f64> {
+        (0..count).map(|_| rng.next_f64() - 0.5).collect()
+    }
+
+    fn max_err(got: &[Complex], want: &[f64]) -> f64 {
+        got.iter()
+            .zip(want)
+            .map(|(g, &w)| (Complex::real(w) - *g).abs())
+            .fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn encrypt_decrypt_roundtrip() {
+        let (ctx, mut rng) = setup(&[]);
+        let x = rand_slots(&mut rng, ctx.slots());
+        let ct = ctx.encrypt_values(&x, DELTA, &mut rng);
+        assert_eq!(ct.level(), ctx.max_level());
+        let err = max_err(&ctx.decrypt(&ct), &x);
+        assert!(err < 1e-8, "enc/dec err {err}");
+    }
+
+    #[test]
+    fn addition_and_subtraction() {
+        let (ctx, mut rng) = setup(&[]);
+        let x = rand_slots(&mut rng, ctx.slots());
+        let y = rand_slots(&mut rng, ctx.slots());
+        let cx = ctx.encrypt_values(&x, DELTA, &mut rng);
+        let cy = ctx.encrypt_values(&y, DELTA, &mut rng);
+        let sum: Vec<f64> = x.iter().zip(&y).map(|(a, b)| a + b).collect();
+        let dif: Vec<f64> = x.iter().zip(&y).map(|(a, b)| a - b).collect();
+        assert!(max_err(&ctx.decrypt(&ctx.add(&cx, &cy)), &sum) < 1e-8);
+        assert!(max_err(&ctx.decrypt(&ctx.sub(&cx, &cy)), &dif) < 1e-8);
+        // Plaintext add and plaintext − ciphertext.
+        assert!(max_err(&ctx.decrypt(&ctx.add_plain(&cx, &y)), &sum) < 1e-8);
+        let psd: Vec<f64> = y.iter().zip(&x).map(|(a, b)| a - b).collect();
+        assert!(max_err(&ctx.decrypt(&ctx.plain_sub(&y, &cx)), &psd) < 1e-8);
+    }
+
+    #[test]
+    fn multiplication_with_relinearization() {
+        let (ctx, mut rng) = setup(&[]);
+        let x = rand_slots(&mut rng, ctx.slots());
+        let y = rand_slots(&mut rng, ctx.slots());
+        let cx = ctx.encrypt_values(&x, DELTA, &mut rng);
+        let cy = ctx.encrypt_values(&y, DELTA, &mut rng);
+        let cm = ctx.rescale(&ctx.mul(&cx, &cy));
+        assert_eq!(cm.level(), ctx.max_level() - 1);
+        let prod: Vec<f64> = x.iter().zip(&y).map(|(a, b)| a * b).collect();
+        let err = max_err(&ctx.decrypt(&cm), &prod);
+        assert!(err < 1e-7, "mul err {err}");
+        // The rescaled scale is Δ²/q_top, near Δ.
+        let expect = DELTA * DELTA / ctx.prime_at(ctx.max_level()) as f64;
+        assert!((cm.scale - expect).abs() < 1e-3);
+    }
+
+    #[test]
+    fn plaintext_and_integer_multiplication() {
+        let (ctx, mut rng) = setup(&[]);
+        let x = rand_slots(&mut rng, ctx.slots());
+        let y = rand_slots(&mut rng, ctx.slots());
+        let cx = ctx.encrypt_values(&x, DELTA, &mut rng);
+        let cp = ctx.rescale(&ctx.mul_plain(&cx, &y, DELTA));
+        let prod: Vec<f64> = x.iter().zip(&y).map(|(a, b)| a * b).collect();
+        assert!(max_err(&ctx.decrypt(&cp), &prod) < 1e-7);
+        let c3 = ctx.mul_scalar_int(&cx, -3);
+        let t3: Vec<f64> = x.iter().map(|a| -3.0 * a).collect();
+        assert!(max_err(&ctx.decrypt(&c3), &t3) < 1e-7);
+        assert_eq!(c3.level(), cx.level()); // no level consumed
+    }
+
+    #[test]
+    fn depth_chain_of_squares() {
+        let (ctx, mut rng) = setup(&[]);
+        let x = rand_slots(&mut rng, ctx.slots());
+        let mut c = ctx.encrypt_values(&x, DELTA, &mut rng);
+        let mut v = x.clone();
+        for _ in 0..3 {
+            c = ctx.rescale(&ctx.mul(&c, &c));
+            v = v.iter().map(|a| a * a).collect();
+        }
+        let err = max_err(&ctx.decrypt(&c), &v);
+        assert!(err < 1e-6, "depth-3 err {err}");
+        assert_eq!(c.level(), ctx.max_level() - 3);
+    }
+
+    #[test]
+    fn rotation_via_galois_automorphism() {
+        let (ctx, mut rng) = setup(&[1, 3]);
+        let slots = ctx.slots();
+        let x = rand_slots(&mut rng, slots);
+        let cx = ctx.encrypt_values(&x, DELTA, &mut rng);
+        for steps in [1usize, 3] {
+            let cr = ctx.rotate(&cx, steps);
+            let want: Vec<f64> = (0..slots).map(|j| x[(j + steps) % slots]).collect();
+            let err = max_err(&ctx.decrypt(&cr), &want);
+            assert!(err < 1e-4, "rot {steps} err {err}");
+        }
+    }
+
+    #[test]
+    fn rotations_compose() {
+        let (ctx, mut rng) = setup(&[1]);
+        let slots = ctx.slots();
+        let x = rand_slots(&mut rng, slots);
+        let cx = ctx.encrypt_values(&x, DELTA, &mut rng);
+        let c2 = ctx.rotate(&ctx.rotate(&cx, 1), 1);
+        let want: Vec<f64> = (0..slots).map(|j| x[(j + 2) % slots]).collect();
+        assert!(max_err(&ctx.decrypt(&c2), &want) < 1e-4);
+    }
+
+    #[test]
+    #[should_panic(expected = "no rotation key")]
+    fn missing_rotation_key_panics() {
+        let (ctx, mut rng) = setup(&[]);
+        let x = rand_slots(&mut rng, ctx.slots());
+        let cx = ctx.encrypt_values(&x, DELTA, &mut rng);
+        let _ = ctx.rotate(&cx, 1);
+    }
+
+    #[test]
+    fn complex_slots_roundtrip() {
+        let (ctx, mut rng) = setup(&[]);
+        let z: Vec<Complex> = (0..ctx.slots())
+            .map(|_| Complex::new(rng.next_f64() - 0.5, rng.next_f64() - 0.5))
+            .collect();
+        let pt = ctx.encode_complex(&z, DELTA, ctx.max_level());
+        let ct = ctx.encrypt(&pt, &mut rng);
+        let back = ctx.decrypt(&ct);
+        for (a, b) in z.iter().zip(&back) {
+            assert!((*a - *b).abs() < 1e-8);
+        }
+    }
+}

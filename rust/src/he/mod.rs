@@ -1,33 +1,48 @@
 //! Homomorphic-encryption substrate: the server side of the RtF framework.
 //!
 //! The paper's §II background: the RtF server homomorphically evaluates the
-//! symmetric cipher's decryption under FV/BFV, then hands the result to
-//! CKKS via HalfBoot. The paper itself evaluates only the *client-side*
-//! accelerators, but a credible system needs the server path to exist, so
-//! this module implements a real (scaled-down) BFV stack:
+//! symmetric cipher's decryption, then hands the result to CKKS via
+//! HalfBoot — both HERA and Rubato exist *because* CKKS is the target. The
+//! paper itself evaluates only the client-side accelerators, but a credible
+//! system needs the server path to exist, so this module implements two HE
+//! stacks:
 //!
-//! * [`ntt`] — negacyclic number-theoretic transform over u64 NTT primes.
+//! * [`ntt`] — negacyclic number-theoretic transform over u64 NTT primes
+//!   (shared by both stacks).
 //! * [`poly`] — the ring R_q = Z_q[X]/(X^N + 1): NTT-based multiplication,
 //!   centered/exact tensor products for the FV scaling step, samplers.
-//! * [`bfv`] — textbook FV/BFV: RLWE keygen, encrypt/decrypt, add,
-//!   plaintext ops, ciphertext multiplication with base-2^w
-//!   relinearization, and noise-budget tracking.
-//! * [`transcipher`] — the RtF dataflow demo: a client encrypts under a
-//!   reduced-parameter stream cipher (same ARK/Mix/Feistel round structure
-//!   over Z_t), the server — holding only a BFV encryption of the
-//!   symmetric key — homomorphically derives the keystream and converts
-//!   the symmetric ciphertext into a BFV ciphertext of the message.
+//! * [`bfv`] — textbook FV/BFV over a single modulus: RLWE keygen,
+//!   encrypt/decrypt, add, plaintext ops, ciphertext multiplication with
+//!   base-2^w relinearization, and noise-budget tracking.
+//! * [`rns`] — the residue number system: NTT prime chains, [`rns::RnsPoly`]
+//!   ring elements in residue form, CRT compose/decompose, rescaling.
+//! * [`ckks`] — RNS-CKKS: canonical-embedding encoder, RLWE keygen with
+//!   relinearization + rotation keys (two-level RNS × base-2^w gadget),
+//!   add/mul/rescale/rotate — the substrate the real transcipher runs on.
+//! * [`transcipher`] — the RtF dataflow. The flagship path is
+//!   [`transcipher::CkksTranscipher`]: the server, holding only CKKS
+//!   encryptions of the HERA/Rubato key, homomorphically evaluates the
+//!   ARK/MixColumns/MixRows/nonlinear round structure and subtracts the
+//!   keystream from client symmetric ciphertexts, yielding CKKS
+//!   ciphertexts of the client's real-valued data. The original
+//!   single-modulus BFV toy demo ([`transcipher::ToyCipher`]) is retained
+//!   as the depth-1 exact-arithmetic baseline.
 //!
-//! Scale note (DESIGN.md substitution table): full-parameter HERA/Rubato
-//! transciphering needs an RNS-BFV with log Q ≳ 600 bits; this substrate
-//! uses a single ≤ 60-bit modulus, which supports the full dataflow at
-//! reduced cipher parameters (documented per demo). The algorithms are the
-//! real ones — only the moduli are small.
+//! Scale note (DESIGN.md substitution table): the CKKS profile evaluates
+//! the ciphers' round structure over ℝ in the slots (reduced rounds,
+//! normalized magnitudes) rather than exactly over Z_q under FV — the
+//! halfboot conversion is the remaining gap to the full RtF stack.
 
 pub mod bfv;
+pub mod ckks;
 pub mod ntt;
 pub mod poly;
+pub mod rns;
 pub mod transcipher;
 
 pub use bfv::{BfvParams, Ciphertext, KeyPair, SecretKeyHe};
-pub use transcipher::{ToyCipher, ToyParams, TranscipherServer};
+pub use ckks::{CkksContext, Complex, Encoder};
+pub use rns::{RnsBasis, RnsPoly};
+pub use transcipher::{
+    CkksCipherProfile, CkksTranscipher, ToyCipher, ToyParams, TranscipherServer,
+};

@@ -24,8 +24,12 @@
 //!   functional units, FIFOs, the controller, design points D1/D2/D3, a
 //!   schedule tracer (reproducing the paper's Figures 2–3), and analytic
 //!   frequency / power / resource models (Tables I–IV).
-//! * [`he`] — a BFV homomorphic-encryption substrate (negacyclic polynomial
-//!   rings, NTT, RLWE) and the RtF transciphering demo.
+//! * [`he`] — the homomorphic-encryption substrates: negacyclic polynomial
+//!   rings and NTT, single-modulus BFV, the RNS basis (prime chains, CRT,
+//!   rescaling), RNS-CKKS (canonical-embedding encoder, relinearization and
+//!   Galois rotation keys, add/mul/rescale/rotate), and the RtF
+//!   transciphering paths — the flagship slot-batched HERA/Rubato → CKKS
+//!   transcipher plus the depth-1 BFV toy baseline.
 //! * [`runtime`] — PJRT runtime that loads the AOT-compiled JAX/Pallas
 //!   keystream artifacts (HLO text) and executes them from Rust.
 //! * [`coordinator`] — the client-side encryption service: request router,
@@ -34,7 +38,8 @@
 //! * [`workload`] — synthetic client traffic generation (Poisson arrivals).
 //! * [`bench`] — the measurement harness used by `cargo bench` targets.
 //! * [`util`] — internal substrates: minimal JSON, CLI parsing, PRNG,
-//!   statistics, and a property-testing helper.
+//!   statistics, error handling (the offline `anyhow` replacement), and a
+//!   property-testing helper.
 //!
 //! See `DESIGN.md` for the hardware-substitution rationale and the
 //! per-experiment index, and `EXPERIMENTS.md` for paper-vs-measured results.
@@ -54,4 +59,4 @@ pub mod util;
 pub mod workload;
 pub mod xof;
 
-pub use params::{ParamSet, Scheme};
+pub use params::{CkksParams, ParamSet, Scheme};

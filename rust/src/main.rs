@@ -4,6 +4,7 @@
 //! * `keygen`    — generate and print a secret key for a parameter set.
 //! * `keystream` — generate stream-key blocks with the software cipher.
 //! * `encrypt`   — encrypt a real-valued vector (RtF encode + keystream).
+//! * `transcipher` — RNS-CKKS transcipher-serving demo (HERA/Rubato → CKKS).
 //! * `serve`     — run the client-side encryption service (L3 coordinator).
 //! * `simulate`  — run the cycle-accurate accelerator simulator.
 //! * `tables`    — regenerate the paper's tables/figures (see repro-tables).
@@ -19,6 +20,7 @@ fn main() {
         "keygen" => commands::keygen(&args),
         "keystream" => commands::keystream(&args),
         "encrypt" => commands::encrypt(&args),
+        "transcipher" => commands::transcipher(&args),
         "serve" => commands::serve(&args),
         "simulate" => commands::simulate(&args),
         "tables" => commands::tables(&args),

@@ -167,9 +167,97 @@ impl ParamSet {
     }
 }
 
+/// RNS-CKKS parameter set (the server-side HE substrate of the RtF flow).
+///
+/// The ciphertext modulus is a chain of NTT primes: one `base_bits` prime
+/// for decryption headroom plus `levels` working primes of `scale_bits`
+/// each, one consumed per rescale. `log2 Q ≈ base_bits + levels·scale_bits`
+/// is the depth budget; the transcipher profiles in
+/// [`crate::he::transcipher`] state how many levels each round consumes
+/// (HERA: 3 per round, Rubato: 2, plus one for the initial ARK).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CkksParams {
+    /// Ring degree N (power of two ≥ 4; N/2 slots).
+    pub n: usize,
+    /// Bits of the base prime q_0.
+    pub base_bits: u32,
+    /// Bits of each working prime ≈ bits of the scale Δ.
+    pub scale_bits: u32,
+    /// Number of working primes (rescale budget).
+    pub levels: usize,
+    /// RLWE error standard deviation.
+    pub sigma: f64,
+    /// Digit width of the key-switching gadget's second (base-2^w)
+    /// decomposition. Smaller ⇒ less key-switching noise, more keys.
+    pub ksk_digit_bits: u32,
+}
+
+impl CkksParams {
+    /// Small, fast parameters for tests: N = 64 (32 slots), log Q ≈ 330.
+    /// Not secure — functional testing only (see DESIGN.md).
+    pub fn test_small() -> CkksParams {
+        CkksParams {
+            n: 64,
+            base_bits: 50,
+            scale_bits: 40,
+            levels: 7,
+            sigma: 3.2,
+            ksk_digit_bits: 12,
+        }
+    }
+
+    /// Demo parameters for examples/benches: N = 1024 (512 slots).
+    pub fn demo() -> CkksParams {
+        CkksParams {
+            n: 1024,
+            base_bits: 50,
+            scale_bits: 40,
+            levels: 7,
+            sigma: 3.2,
+            ksk_digit_bits: 12,
+        }
+    }
+
+    /// Same shape with an explicit ring degree and level budget.
+    pub fn with_shape(n: usize, levels: usize) -> CkksParams {
+        CkksParams {
+            n,
+            levels,
+            ..Self::test_small()
+        }
+    }
+
+    /// The encoding scale Δ = 2^scale_bits.
+    pub fn delta(&self) -> f64 {
+        (self.scale_bits as f64).exp2()
+    }
+
+    /// Slot count N/2.
+    pub fn slots(&self) -> usize {
+        self.n / 2
+    }
+
+    /// Approximate log2 of the full ciphertext modulus Q.
+    pub fn log2_q(&self) -> f64 {
+        self.base_bits as f64 + self.levels as f64 * self.scale_bits as f64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn ckks_params_shapes() {
+        let p = CkksParams::test_small();
+        assert_eq!(p.slots(), 32);
+        assert_eq!(p.delta(), (1u64 << 40) as f64);
+        assert!((p.log2_q() - 330.0).abs() < 1e-9);
+        let q = CkksParams::with_shape(256, 5);
+        assert_eq!(q.n, 256);
+        assert_eq!(q.levels, 5);
+        assert_eq!(q.scale_bits, CkksParams::test_small().scale_bits);
+    }
 
     #[test]
     fn parameter_sets_are_consistent() {

@@ -3,9 +3,16 @@
 //! In the RtF transciphering framework the client holds real-valued data,
 //! scales it into Z_q fixed-point, and symmetric-encrypts the result; the
 //! server homomorphically decrypts under FV and hands the (scaled) values
-//! to CKKS via HalfBoot. This module implements the client-side codec:
-//! `encode(x) = round(x * Δ) mod q` with scale Δ, and the inverse decode of
-//! centered representatives. Values must satisfy `|x| * Δ < q/2`.
+//! to CKKS via HalfBoot. Both halves of the codec live here:
+//!
+//! * [`RtfCodec`] — the client-side finite half:
+//!   `encode(x) = round(x · Δ) mod q` with scale Δ, and the inverse decode
+//!   of centered representatives. Values must satisfy `|x| · Δ < q/2`.
+//! * [`CkksRtfCodec`] — the CKKS-side real half: the RNS-CKKS transcipher
+//!   ([`crate::he::transcipher::CkksTranscipher`]) carries client data as
+//!   reals in the cipher's working range [−1, 1]; this codec normalizes
+//!   application values of magnitude ≤ M into that range and decodes
+//!   decrypted slot values back, propagating the HE error bound.
 
 use crate::arith::{Elem, Zq};
 
@@ -71,11 +78,89 @@ impl RtfCodec {
     }
 }
 
+/// The CKKS-side half of the RtF codec: maps application values in
+/// [−M, M] to the transcipher's working range [−1, 1] and back, and turns
+/// the transcipher's documented HE error bound into an application-space
+/// bound.
+#[derive(Debug, Clone, Copy)]
+pub struct CkksRtfCodec {
+    /// Largest application-value magnitude M.
+    pub max_magnitude: f64,
+    /// The transcipher's end-to-end HE error bound in working-range units
+    /// (see `CkksCipherProfile::error_bound`).
+    pub he_error_bound: f64,
+}
+
+impl CkksRtfCodec {
+    /// Codec for values of magnitude ≤ `max_magnitude` over a transcipher
+    /// path with the given working-range error bound.
+    pub fn new(max_magnitude: f64, he_error_bound: f64) -> CkksRtfCodec {
+        assert!(max_magnitude > 0.0 && he_error_bound >= 0.0);
+        CkksRtfCodec {
+            max_magnitude,
+            he_error_bound,
+        }
+    }
+
+    /// Encode one application value into the cipher's working range.
+    pub fn encode(&self, x: f64) -> f64 {
+        assert!(
+            x.abs() <= self.max_magnitude,
+            "value {x} out of range ±{}",
+            self.max_magnitude
+        );
+        x / self.max_magnitude
+    }
+
+    /// Decode one working-range value (e.g. a decrypted CKKS slot).
+    pub fn decode(&self, u: f64) -> f64 {
+        u * self.max_magnitude
+    }
+
+    /// Encode a block.
+    pub fn encode_block(&self, xs: &[f64]) -> Vec<f64> {
+        xs.iter().map(|&x| self.encode(x)).collect()
+    }
+
+    /// Decode a block.
+    pub fn decode_block(&self, us: &[f64]) -> Vec<f64> {
+        us.iter().map(|&u| self.decode(u)).collect()
+    }
+
+    /// Application-space error bound: the HE bound scaled back up.
+    pub fn error_bound(&self) -> f64 {
+        self.he_error_bound * self.max_magnitude
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::params::ParamSet;
     use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn ckks_codec_roundtrip_and_bound() {
+        let codec = CkksRtfCodec::new(50.0, 1e-3);
+        let mut rng = SplitMix64::new(4);
+        for _ in 0..1000 {
+            let x = (rng.next_f64() - 0.5) * 100.0;
+            let u = codec.encode(x);
+            assert!(u.abs() <= 1.0 + 1e-12);
+            assert!((codec.decode(u) - x).abs() < 1e-12);
+        }
+        assert!((codec.error_bound() - 0.05).abs() < 1e-12);
+        let xs = vec![-12.5, 0.0, 49.9];
+        for (back, x) in codec.decode_block(&codec.encode_block(&xs)).iter().zip(&xs) {
+            assert!((back - x).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn ckks_codec_rejects_overflow() {
+        CkksRtfCodec::new(1.0, 1e-3).encode(1.5);
+    }
 
     #[test]
     fn roundtrip_within_quantization_error() {

@@ -5,34 +5,59 @@
 //! compiles it on the PJRT CPU client, and executes it with `u64` literals
 //! from the request path. One compiled executable per (parameter set,
 //! batch) pair. Python is never involved at runtime.
+//!
+//! The XLA bindings are feature-gated: the default (offline) build compiles
+//! a stub whose `load_keystream` fails with a clear message, so every
+//! consumer — the coordinator's `Engine::Xla` arm, the CLI `serve
+//! --artifact` path — degrades gracefully to the software cipher. Enable
+//! the `xla` cargo feature (and vendor the bindings crate) for the real
+//! backend; the artifact path convention and the `run` signature are
+//! identical in both builds.
 
 use crate::arith::Elem;
-use crate::params::{ParamSet, Scheme};
-use anyhow::{bail, Context, Result};
+use crate::params::ParamSet;
+#[cfg(feature = "xla")]
+use crate::params::Scheme;
+#[cfg(feature = "xla")]
+use crate::util::error::Context;
+use crate::bail;
+use crate::util::error::Result;
 use std::path::{Path, PathBuf};
 
 /// A compiled keystream executable for one parameter set.
 pub struct KeystreamExecutable {
     params: ParamSet,
     batch: usize,
+    #[cfg(feature = "xla")]
     exe: xla::PjRtLoadedExecutable,
 }
 
 /// The PJRT runtime holding the client and loaded executables.
 pub struct Runtime {
+    #[cfg(feature = "xla")]
     client: xla::PjRtClient,
 }
 
 impl Runtime {
-    /// Create a CPU PJRT client.
+    /// Create a CPU PJRT client (a no-op handle in the stub build).
     pub fn cpu() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client })
+        #[cfg(feature = "xla")]
+        {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Runtime { client })
+        }
+        #[cfg(not(feature = "xla"))]
+        Ok(Runtime {})
     }
 
     /// Name of the PJRT platform (e.g. "cpu").
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        #[cfg(feature = "xla")]
+        {
+            self.client.platform_name()
+        }
+        #[cfg(not(feature = "xla"))]
+        "stub".to_string()
     }
 
     /// Artifact file name convention shared with `aot.py`.
@@ -54,16 +79,27 @@ impl Runtime {
                 path.display()
             );
         }
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 artifact path")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(KeystreamExecutable { params, batch, exe })
+        #[cfg(feature = "xla")]
+        {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            Ok(KeystreamExecutable { params, batch, exe })
+        }
+        #[cfg(not(feature = "xla"))]
+        {
+            bail!(
+                "artifact {} exists but the PJRT backend is not compiled in \
+                 (rebuild with `--features xla`, or run with the software engine)",
+                path.display()
+            );
+        }
     }
 }
 
@@ -86,6 +122,7 @@ impl KeystreamExecutable {
     ///   must be empty for HERA.
     ///
     /// Returns `batch` keystream vectors of l elements.
+    #[cfg(feature = "xla")]
     pub fn run(
         &self,
         keys: &[Vec<Elem>],
@@ -135,9 +172,22 @@ impl KeystreamExecutable {
             .map(|lane| lane.iter().map(|&x| x as Elem).collect())
             .collect())
     }
+
+    /// Stub build: executables cannot exist, so this is unreachable in
+    /// practice (construction already failed) but keeps the API identical.
+    #[cfg(not(feature = "xla"))]
+    pub fn run(
+        &self,
+        _keys: &[Vec<Elem>],
+        _rcs: &[Vec<Elem>],
+        _noise: &[Vec<i64>],
+    ) -> Result<Vec<Vec<Elem>>> {
+        bail!("PJRT backend is not compiled in (rebuild with `--features xla`)");
+    }
 }
 
 /// Flatten `rows` (each of length `width`) into one u64 literal.
+#[cfg(feature = "xla")]
 fn pack_u64<T>(rows: &[Vec<T>], width: usize, conv: impl Fn(&T) -> u64) -> Result<xla::Literal> {
     let mut flat = Vec::with_capacity(rows.len() * width);
     for (i, row) in rows.iter().enumerate() {

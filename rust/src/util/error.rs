@@ -1,0 +1,123 @@
+//! Minimal error-handling substrate — the offline replacement for `anyhow`.
+//!
+//! Provides a string-chained [`Error`], a crate-wide [`Result`] alias, the
+//! [`Context`] extension trait for `Result`/`Option`, and the [`bail!`]
+//! macro. The API mirrors the `anyhow` subset the crate uses so call sites
+//! read identically; only the `use` lines differ.
+//!
+//! [`bail!`]: crate::bail
+
+use std::fmt;
+
+/// A boxed error message with an optional context chain, built by
+/// [`Context::context`] / [`Context::with_context`].
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context layer: `"{ctx}: {self}"`.
+    pub fn wrap(self, ctx: impl fmt::Display) -> Error {
+        Error {
+            msg: format!("{ctx}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Crate-wide result alias (mirrors `anyhow::Result`).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to fallible values (mirrors `anyhow::Context`).
+pub trait Context<T> {
+    /// Wrap the error with a fixed message.
+    fn context(self, ctx: impl fmt::Display) -> Result<T>;
+    /// Wrap the error with a lazily-built message.
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Early-return with a formatted [`Error`] (mirrors `anyhow::bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn failing() -> Result<u32> {
+        bail!("bad value {}", 7);
+    }
+
+    #[test]
+    fn bail_formats() {
+        let e = failing().unwrap_err();
+        assert_eq!(e.to_string(), "bad value 7");
+    }
+
+    #[test]
+    fn context_chains() {
+        let r: std::result::Result<(), std::io::Error> = Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "no such file",
+        ));
+        let e = r.context("loading artifact").unwrap_err();
+        assert!(e.to_string().starts_with("loading artifact: "));
+        assert!(e.to_string().contains("no such file"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert_eq!(v.context("missing").unwrap_err().to_string(), "missing");
+        let v = Some(3u32).with_context(|| "unused").unwrap();
+        assert_eq!(v, 3);
+    }
+
+    #[test]
+    fn wrap_prepends() {
+        let e = Error::msg("inner").wrap("outer");
+        assert_eq!(e.to_string(), "outer: inner");
+    }
+}

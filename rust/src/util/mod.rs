@@ -1,11 +1,12 @@
 //! Internal substrates: deterministic PRNG, statistics, minimal JSON,
-//! CLI argument parsing, and hex encoding.
+//! CLI argument parsing, hex encoding, and error handling.
 //!
 //! These exist because the build is fully offline: no `serde_json`, `clap`,
-//! `rand` or `criterion` are available, so the pieces the system needs are
-//! implemented (and tested) here.
+//! `rand`, `criterion` or `anyhow` are available, so the pieces the system
+//! needs are implemented (and tested) here.
 
 pub mod cli;
+pub mod error;
 pub mod hex;
 pub mod json;
 pub mod rng;

@@ -53,6 +53,7 @@ fn rows_i64(j: &Json, key: &str) -> Vec<Vec<i64>> {
 }
 
 #[test]
+#[ignore = "requires `make artifacts` (golden JSON emitted by aot.py)"]
 fn golden_parameters_match_rust_definitions() {
     // Catches drift between python/compile/params.py and rust/src/params.rs.
     for name in GOLDEN_SETS {
@@ -70,6 +71,7 @@ fn golden_parameters_match_rust_definitions() {
 }
 
 #[test]
+#[ignore = "requires `make artifacts` (golden JSON emitted by aot.py)"]
 fn rust_cipher_matches_jax_model_on_golden_inputs() {
     for name in GOLDEN_SETS {
         let g = load_golden(name);
@@ -100,6 +102,7 @@ fn rust_cipher_matches_jax_model_on_golden_inputs() {
 }
 
 #[test]
+#[ignore = "requires `make artifacts` and the PJRT backend (`--features xla`)"]
 fn pjrt_artifact_matches_jax_model_on_golden_inputs() {
     let rt = Runtime::cpu().expect("PJRT CPU client");
     for name in GOLDEN_SETS {

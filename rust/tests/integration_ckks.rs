@@ -1,0 +1,217 @@
+//! RNS-CKKS integration: property tests for the substrate and the
+//! acceptance test for the flagship transciphering path — a HERA/Rubato
+//! keystream evaluated homomorphically under RNS-CKKS transciphers
+//! real-valued client data end-to-end, decrypting within the documented
+//! error bound.
+
+use presto::coordinator::{TranscipherConfig, TranscipherService};
+use presto::he::ckks::CkksContext;
+use presto::he::ntt::NttContext;
+use presto::he::rns::RnsBasis;
+use presto::he::transcipher::{CkksCipherProfile, CkksTranscipher};
+use presto::params::CkksParams;
+use presto::rtf::CkksRtfCodec;
+use presto::testutil::{check, Config, Gen};
+use presto::util::rng::SplitMix64;
+
+const DELTA: f64 = 1_099_511_627_776.0; // 2^40
+
+/// Generator of random slot vectors with entries in [-1, 1], shrinking
+/// toward zeroed entries.
+struct SlotVec {
+    len: usize,
+}
+
+impl Gen for SlotVec {
+    type Value = Vec<f64>;
+    fn generate(&self, rng: &mut SplitMix64) -> Vec<f64> {
+        (0..self.len).map(|_| rng.next_f64() * 2.0 - 1.0).collect()
+    }
+    fn shrink(&self, v: &Vec<f64>) -> Vec<Vec<f64>> {
+        let mut out = Vec::new();
+        if v.iter().any(|&x| x != 0.0) {
+            for i in 0..v.len() {
+                if v[i] != 0.0 {
+                    let mut smaller = v.clone();
+                    smaller[i] = 0.0;
+                    out.push(smaller);
+                    if out.len() >= 8 {
+                        break;
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[test]
+fn property_encode_decode_roundtrip_within_scale_bound() {
+    // Each coefficient of the scaled embedding rounds by ≤ 1/2, and the
+    // slot projection sums N coefficients, so the slot error is bounded by
+    // N/(2Δ); we allow 2× for the f64 FFT itself.
+    let ctx = CkksContext::generate(CkksParams::with_shape(64, 2), 1, &[]);
+    let bound = ctx.params().n as f64 / ctx.params().delta();
+    check(
+        Config {
+            cases: 64,
+            ..Config::default()
+        },
+        &SlotVec { len: ctx.slots() },
+        |values| {
+            let pt = ctx.encode(values, DELTA, 1);
+            let back = ctx.decode(&pt);
+            values
+                .iter()
+                .zip(&back)
+                .all(|(&v, z)| (z.re - v).abs() < bound && z.im.abs() < bound)
+        },
+    );
+}
+
+#[test]
+fn property_ntt_roundtrip_across_whole_rns_chain() {
+    // Forward/inverse NTT is the identity for every prime of the chain.
+    let basis = RnsBasis::generate(64, 50, 40, 6);
+    for (i, &q) in basis.primes.iter().enumerate() {
+        let ntt = NttContext::new(q, basis.n);
+        check(
+            Config {
+                cases: 32,
+                seed: 0xC0FFEE + i as u64,
+                ..Config::default()
+            },
+            &UniformPoly { q, len: basis.n },
+            |coeffs| {
+                let mut a = coeffs.clone();
+                ntt.forward(&mut a);
+                ntt.inverse(&mut a);
+                a == *coeffs
+            },
+        );
+    }
+}
+
+/// Generator of uniform residue rows for one NTT prime.
+struct UniformPoly {
+    q: u64,
+    len: usize,
+}
+
+impl Gen for UniformPoly {
+    type Value = Vec<u64>;
+    fn generate(&self, rng: &mut SplitMix64) -> Vec<u64> {
+        (0..self.len).map(|_| rng.below(self.q)).collect()
+    }
+}
+
+#[test]
+fn ckks_mul_and_rotate_integration() {
+    let ctx = CkksContext::generate(CkksParams::with_shape(64, 4), 9, &[2]);
+    let mut rng = SplitMix64::new(4);
+    let slots = ctx.slots();
+    let x: Vec<f64> = (0..slots).map(|_| rng.next_f64() - 0.5).collect();
+    let y: Vec<f64> = (0..slots).map(|_| rng.next_f64() - 0.5).collect();
+    let cx = ctx.encrypt_values(&x, DELTA, &mut rng);
+    let cy = ctx.encrypt_values(&y, DELTA, &mut rng);
+    // (x·y) rotated by 2 slots.
+    let prod = ctx.rescale(&ctx.mul(&cx, &cy));
+    let rot = ctx.rotate(&prod, 2);
+    let d = ctx.decrypt_real(&rot);
+    for j in 0..slots {
+        let want = x[(j + 2) % slots] * y[(j + 2) % slots];
+        assert!((d[j] - want).abs() < 1e-4, "slot {j}: {} vs {want}", d[j]);
+    }
+}
+
+/// The acceptance path: full client → server RtF flow, checked against
+/// the documented error bound, for both cipher families.
+fn transcipher_acceptance(profile: CkksCipherProfile) {
+    let levels = profile.required_levels();
+    let ctx = CkksContext::generate(CkksParams::with_shape(64, levels), 33, &[]);
+    let mut rng = SplitMix64::new(6);
+    let key = profile.sample_key(17);
+    let server = CkksTranscipher::setup(profile.clone(), &ctx, &key, &mut rng);
+
+    let nonce = 5;
+    let blocks = 12usize.min(ctx.slots());
+    let counters: Vec<u64> = (100..100 + blocks as u64).collect();
+    let mut wrng = SplitMix64::new(8);
+    let data: Vec<Vec<f64>> = (0..blocks)
+        .map(|_| (0..profile.l).map(|_| wrng.next_f64() * 2.0 - 1.0).collect())
+        .collect();
+
+    // Client: symmetric encryption only (f64 keystream add).
+    let sym: Vec<Vec<f64>> = data
+        .iter()
+        .zip(&counters)
+        .map(|(m, &c)| profile.encrypt_block(&key, nonce, c, m))
+        .collect();
+
+    // Server: homomorphic keystream evaluation + subtraction.
+    let cts = server.transcipher(&ctx, nonce, &counters, &sym);
+    assert_eq!(cts.len(), profile.l);
+
+    // Data owner: decrypt + decode matches the plaintext within the bound.
+    let bound = profile.error_bound();
+    let mut max_err = 0.0f64;
+    for (i, ct) in cts.iter().enumerate() {
+        let d = ctx.decrypt_real(ct);
+        for (blk, row) in data.iter().enumerate() {
+            max_err = max_err.max((d[blk] - row[i]).abs());
+        }
+    }
+    assert!(
+        max_err < bound,
+        "{:?}: max error {max_err:.3e} exceeds documented bound {bound:.1e}",
+        profile.scheme
+    );
+}
+
+#[test]
+fn hera_keystream_transciphers_real_data_end_to_end() {
+    transcipher_acceptance(CkksCipherProfile::hera_toy());
+}
+
+#[test]
+fn rubato_keystream_transciphers_real_data_end_to_end() {
+    transcipher_acceptance(CkksCipherProfile::rubato_toy());
+}
+
+#[test]
+fn transcipher_service_full_flow_with_codec() {
+    // The serving wrapper: CkksRtfCodec → client_encrypt → transcipher →
+    // decrypt+decode, with metrics.
+    let profile = CkksCipherProfile::rubato_toy();
+    let levels = profile.required_levels();
+    let mut svc = TranscipherService::start(TranscipherConfig {
+        profile,
+        ckks: CkksParams::with_shape(64, levels),
+        seed: 4,
+        nonce: 9,
+    })
+    .unwrap();
+    let codec = CkksRtfCodec::new(25.0, svc.profile().error_bound());
+    let l = svc.profile().l;
+    let mut rng = SplitMix64::new(2);
+    let readings: Vec<Vec<f64>> = (0..6)
+        .map(|_| (0..l).map(|_| (rng.next_f64() - 0.5) * 50.0).collect())
+        .collect();
+    let normalized: Vec<Vec<f64>> = readings.iter().map(|r| codec.encode_block(r)).collect();
+    let wire = svc.client_encrypt(&normalized);
+    let cts = svc.transcipher(&wire).unwrap();
+    for (i, ct) in cts.iter().enumerate() {
+        let d = svc.context().decrypt_real(ct);
+        for (blk, row) in readings.iter().enumerate() {
+            let got = codec.decode(d[blk]);
+            assert!(
+                (got - row[i]).abs() < codec.error_bound(),
+                "elem {i} block {blk}: {got} vs {}",
+                row[i]
+            );
+        }
+    }
+    let snap = svc.metrics().snapshot();
+    assert_eq!(snap.requests, 6);
+    assert_eq!(snap.batches, 1);
+}

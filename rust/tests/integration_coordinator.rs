@@ -41,6 +41,7 @@ fn decrypt(p: ParamSet, resp: &presto::coordinator::Response, msg_len: usize) ->
 }
 
 #[test]
+#[ignore = "requires `make artifacts` and the PJRT backend (`--features xla`)"]
 fn end_to_end_roundtrip_through_xla_engine() {
     let p = ParamSet::rubato_128l();
     let server = xla_server(p, 2);
@@ -60,6 +61,7 @@ fn end_to_end_roundtrip_through_xla_engine() {
 }
 
 #[test]
+#[ignore = "requires `make artifacts` and the PJRT backend (`--features xla`)"]
 fn concurrent_workload_is_lossless_and_correct() {
     let p = ParamSet::rubato_128s();
     let sessions = 4;
@@ -88,6 +90,7 @@ fn concurrent_workload_is_lossless_and_correct() {
 }
 
 #[test]
+#[ignore = "requires `make artifacts` and the PJRT backend (`--features xla`)"]
 fn per_session_counters_never_repeat() {
     let p = ParamSet::rubato_128s();
     let server = xla_server(p, 1);
@@ -110,6 +113,7 @@ fn per_session_counters_never_repeat() {
 }
 
 #[test]
+#[ignore = "requires `make artifacts` and the PJRT backend (`--features xla`)"]
 fn partial_batches_are_padded_not_stalled() {
     // A single request must complete within the batcher deadline even
     // though the executor batch is 8-wide.

@@ -42,21 +42,25 @@ fn check_scheme(p: ParamSet) {
 }
 
 #[test]
+#[ignore = "requires `make artifacts` and the PJRT backend (`--features xla`)"]
 fn xla_matches_software_hera() {
     check_scheme(ParamSet::hera_128a());
 }
 
 #[test]
+#[ignore = "requires `make artifacts` and the PJRT backend (`--features xla`)"]
 fn xla_matches_software_rubato_128l() {
     check_scheme(ParamSet::rubato_128l());
 }
 
 #[test]
+#[ignore = "requires `make artifacts` and the PJRT backend (`--features xla`)"]
 fn xla_matches_software_rubato_128s() {
     check_scheme(ParamSet::rubato_128s());
 }
 
 #[test]
+#[ignore = "requires `make artifacts` and the PJRT backend (`--features xla`)"]
 fn repeated_execution_is_deterministic() {
     let p = ParamSet::rubato_128l();
     let rt = Runtime::cpu().unwrap();
@@ -77,6 +81,7 @@ fn repeated_execution_is_deterministic() {
 }
 
 #[test]
+#[ignore = "requires `make artifacts` and the PJRT backend (`--features xla`)"]
 fn lane_shape_errors_are_reported() {
     let p = ParamSet::rubato_128l();
     let rt = Runtime::cpu().unwrap();
