@@ -26,7 +26,9 @@ use std::time::Instant;
 
 fn main() {
     let profile = CkksCipherProfile::hera_toy();
-    let levels = profile.required_levels();
+    // One level beyond the cipher's budget for the post-transcipher
+    // slot linear layer (hoisted rotations).
+    let levels = profile.required_levels() + 1;
     let ckks = CkksParams::with_shape(512, levels);
     println!(
         "HERA CKKS profile: n = {}, v = {}, rounds = {}, l = {} (η = {:.3e})",
@@ -47,6 +49,7 @@ fn main() {
         ckks,
         seed: 2026,
         nonce: 1,
+        rotations: vec![1],
     })
     .expect("service start");
     println!(
@@ -111,6 +114,27 @@ fn main() {
         println!(
             "  block {blk}: homomorphic elem0+elem1 = {got:.4} (expected {expect:.4})"
         );
+        assert!((got - expect).abs() < 2.0 * codec.error_bound());
+    }
+
+    // Cross-block linear layer: windowed mean of adjacent blocks,
+    // (block b + block b+1)/2, via hoisted rotations — the digit
+    // decomposition is computed once per output ciphertext and shared by
+    // every rotation step of the layer.
+    let slots = svc.batch_capacity();
+    let diags = vec![(0usize, vec![0.5; slots]), (1usize, vec![0.5; slots])];
+    let t2 = Instant::now();
+    let windowed = svc.transcipher_linear(&wire, &diags).expect("linear layer");
+    println!(
+        "server: transcipher + windowed-mean linear layer in {:?} (key memory {:.1} KiB)",
+        t2.elapsed(),
+        svc.key_memory_bytes() as f64 / 1024.0
+    );
+    let w0 = svc.context().decrypt_real(&windowed[0]);
+    for blk in 0..3 {
+        let expect = 0.5 * (readings[blk][0] + readings[blk + 1][0]);
+        let got = codec.decode(w0[blk]);
+        println!("  block {blk}: windowed mean elem0 = {got:.4} (expected {expect:.4})");
         assert!((got - expect).abs() < 2.0 * codec.error_bound());
     }
     println!("ckks transcipher flow OK");

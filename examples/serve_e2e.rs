@@ -41,7 +41,10 @@ fn main() {
     let originals: Vec<Vec<f64>> = reqs.iter().map(|r| r.message.clone()).collect();
 
     let t0 = Instant::now();
-    let rxs: Vec<_> = reqs.into_iter().map(|r| server.submit(r)).collect();
+    let rxs: Vec<_> = reqs
+        .into_iter()
+        .map(|r| server.submit(r).expect("server accepting requests"))
+        .collect();
     let responses: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
     let wall = t0.elapsed().as_secs_f64();
 

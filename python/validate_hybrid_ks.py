@@ -1,0 +1,388 @@
+#!/usr/bin/env python3
+"""Numerical validation of hybrid special-modulus (P) key switching.
+
+Mirrors the planned Rust implementation operation-for-operation so the
+algebra and noise magnitudes are verified before the Rust is written
+(the build container has no Rust toolchain):
+
+* RNS chain of NTT-friendly primes + one special prime P,
+* per-prime digit decomposition with [0, q_i) representatives,
+* switching keys over Q_L*P with gadget P * (Q_L/q_i) * [(Q_L/q_i)^-1]_{q_i},
+* fast basis extension (approximate CRT lift) Q_l -> Q_l*P,
+* mod-down by P with centered rounding (the rescale_top algorithm),
+* hoisted rotations: decompose once, multiply by inverse-rotated keys,
+  apply the automorphism to the accumulated result after mod-down.
+
+Run: python3 python/validate_hybrid_ks.py
+"""
+
+import random
+
+random.seed(7)
+
+N = 32
+SIGMA = 3.2
+
+
+# ---------------------------------------------------------------- primes
+def is_prime(n):
+    if n < 2:
+        return False
+    for p in (2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37):
+        if n % p == 0:
+            return n == p
+    d, s = n - 1, 0
+    while d % 2 == 0:
+        d //= 2
+        s += 1
+    for a in (2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37):
+        x = pow(a, d, n)
+        if x in (1, n - 1):
+            continue
+        for _ in range(s - 1):
+            x = x * x % n
+            if x == n - 1:
+                break
+        else:
+            return False
+    return True
+
+
+def find_ntt_primes(n, bits, count, exclude):
+    step = 2 * n
+    q = ((1 << bits) - 1) // step * step + 1
+    out = []
+    while len(out) < count:
+        assert q > 1 << (bits - 1)
+        if is_prime(q) and q not in exclude and q not in out:
+            out.append(q)
+        q -= step
+    return out
+
+
+BASE_BITS, SCALE_BITS, LEVELS = 45, 40, 6
+primes = find_ntt_primes(N, BASE_BITS, 1, [])
+primes += find_ntt_primes(N, SCALE_BITS, LEVELS, primes)
+SPECIAL = find_ntt_primes(N, BASE_BITS + 1, 1, primes)[0]
+L = len(primes) - 1
+DELTA = float(1 << SCALE_BITS)
+
+
+# ------------------------------------------------------------- ring ops
+def polymul(a, b, q):
+    """Negacyclic schoolbook product mod (X^N + 1, q)."""
+    out = [0] * N
+    for i, ai in enumerate(a):
+        if ai == 0:
+            continue
+        for j, bj in enumerate(b):
+            k = i + j
+            p = ai * bj
+            if k < N:
+                out[k] = (out[k] + p) % q
+            else:
+                out[k - N] = (out[k - N] - p) % q
+    return out
+
+
+def rows_from_int(coeffs, moduli):
+    return [[c % q for c in coeffs] for q in moduli]
+
+
+def rows_add(a, b, moduli):
+    return [[(x + y) % q for x, y in zip(ra, rb)] for ra, rb, q in zip(a, b, moduli)]
+
+
+def rows_sub(a, b, moduli):
+    return [[(x - y) % q for x, y in zip(ra, rb)] for ra, rb, q in zip(a, b, moduli)]
+
+
+def rows_neg(a, moduli):
+    return [[(-x) % q for x in ra] for ra, q in zip(a, moduli)]
+
+
+def rows_mul(a, b, moduli):
+    return [polymul(ra, rb, q) for ra, rb, q in zip(a, b, moduli)]
+
+
+def automorphism(row, g, q):
+    out = [0] * N
+    for i, c in enumerate(row):
+        j = (i * g) % (2 * N)
+        if j < N:
+            out[j] = c
+        else:
+            out[j - N] = (-c) % q
+    return out
+
+
+def rows_aut(a, g, moduli):
+    return [automorphism(ra, g, q) for ra, q in zip(a, moduli)]
+
+
+def aut_signed(coeffs, g):
+    """Automorphism on signed integer coefficients (reference)."""
+    out = [0] * N
+    for i, c in enumerate(coeffs):
+        j = (i * g) % (2 * N)
+        if j < N:
+            out[j] = c
+        else:
+            out[j - N] = -c
+    return out
+
+
+def compose_centered(rows, moduli):
+    """CRT-compose residue rows to centered integer coefficients."""
+    Q = 1
+    for q in moduli:
+        Q *= q
+    out = []
+    for k in range(N):
+        acc = 0
+        for i, q in enumerate(moduli):
+            hat = Q // q
+            acc += hat * ((rows[i][k] * pow(hat % q, q - 2, q)) % q)
+        acc %= Q
+        if acc > Q // 2:
+            acc -= Q
+        out.append(acc)
+    return out
+
+
+# ----------------------------------------------- basis extension / mod down
+def fast_basis_extend(rows, moduli, target):
+    """Approximate CRT lift of x (given mod Q = prod moduli) to mod target:
+    returns (x + alpha*Q) mod target with 0 <= alpha <= len(moduli)."""
+    Q = 1
+    for q in moduli:
+        Q *= q
+    out = [0] * N
+    for k in range(N):
+        acc = 0
+        for i, q in enumerate(moduli):
+            hat = Q // q
+            y = (rows[i][k] * pow(hat % q, q - 2, q)) % q
+            acc += (hat % target) * y
+        out[k] = acc % target
+    return out
+
+
+def mod_down(rows, prow, moduli):
+    """round(x / P) mod Q_l given x over {moduli, P}: per row j,
+    (x_j - [x]_P) * P^-1 mod q_j with [x]_P centered."""
+    half = SPECIAL // 2
+    out = []
+    for ra, q in zip(rows, moduli):
+        inv = pow(SPECIAL % q, q - 2, q)
+        row = []
+        for xj, xp in zip(ra, prow):
+            if xp > half:
+                xc = (xp - SPECIAL) % q
+            else:
+                xc = xp % q
+            row.append(((xj - xc) * inv) % q)
+        out.append(row)
+    return out
+
+
+# ------------------------------------------------------------ key material
+def sample_ternary():
+    return [random.randrange(3) - 1 for _ in range(N)]
+
+
+def sample_gauss():
+    return [round(random.gauss(0, SIGMA)) for _ in range(N)]
+
+
+def sample_uniform(moduli):
+    return [[random.randrange(q) for _ in range(N)] for q in moduli]
+
+
+ext_moduli = primes + [SPECIAL]  # full chain + special
+s = sample_ternary()
+s_ext = rows_from_int(s, ext_moduli)
+
+QL = 1
+for q in primes:
+    QL *= q
+
+
+def make_switch_key(target_int_rows):
+    """target given as rows over ext_moduli. Returns [(b_i, a_i)] i=0..L."""
+    keys = []
+    for i in range(L + 1):
+        qi = primes[i]
+        hat = QL // qi
+        u = pow(hat % qi, qi - 2, qi)  # [(Q_L/q_i)^{-1}]_{q_i} in [0, q_i)
+        a = sample_uniform(ext_moduli)
+        e = rows_from_int(sample_gauss(), ext_moduli)
+        # gadget factor mod each modulus: P * (hat mod m) * (u mod m); 0 mod P.
+        b = rows_neg(rows_add(rows_mul(a, s_ext, ext_moduli), e, ext_moduli), ext_moduli)
+        for j, m in enumerate(ext_moduli):
+            if m == SPECIAL:
+                continue  # P * ... == 0 mod P
+            g = (SPECIAL % m) * (hat % m) % m * (u % m) % m
+            for k in range(N):
+                b[j][k] = (b[j][k] + g * target_int_rows[j][k]) % m
+        keys.append((a, b))
+    return keys
+
+
+def key_switch(d_rows, level, keys, galois=None):
+    """d given over primes[:level+1]. Returns (c0, c1) over primes[:level+1].
+    If galois is given, keys must be the inverse-rotated rotation keys and
+    the automorphism is applied to the accumulated result after mod-down."""
+    ml = primes[: level + 1]
+    use = ml + [SPECIAL]
+    acc0 = [[0] * N for _ in use]
+    acc1 = [[0] * N for _ in use]
+    for i in range(level + 1):
+        digit = d_rows[i]  # values in [0, q_i)
+        # single-prime fast basis extension: reduce the integer digit.
+        ext = [[v % m for v in digit] for m in use]
+        a, b = keys[i]
+        asub = [a[j] for j in range(level + 1)] + [a[L + 1]]
+        bsub = [b[j] for j in range(level + 1)] + [b[L + 1]]
+        acc0 = rows_add(acc0, rows_mul(ext, bsub, use), use)
+        acc1 = rows_add(acc1, rows_mul(ext, asub, use), use)
+    c0 = mod_down(acc0[:-1], acc0[-1], ml)
+    c1 = mod_down(acc1[:-1], acc1[-1], ml)
+    if galois is not None:
+        c0 = rows_aut(c0, galois, ml)
+        c1 = rows_aut(c1, galois, ml)
+    return c0, c1
+
+
+def phase(c0, c1, level):
+    ml = primes[: level + 1]
+    sl = rows_from_int(s, ml)
+    return compose_centered(rows_add(c0, rows_mul(c1, sl, ml), ml), ml)
+
+
+def encrypt(m_scaled, level):
+    """Symmetric RLWE encryption of integer coefficients m_scaled."""
+    ml = primes[: level + 1]
+    a = sample_uniform(ml)
+    e = rows_from_int(sample_gauss(), ml)
+    sl = rows_from_int(s, ml)
+    c0 = rows_add(rows_neg(rows_mul(a, sl, ml), ml), rows_add(e, rows_from_int(m_scaled, ml), ml), ml)
+    return c0, a
+
+
+# ============================================================ validations
+print(f"chain: base {primes[0].bit_length()}b + {LEVELS} x {primes[1].bit_length()}b, "
+      f"P = {SPECIAL} ({SPECIAL.bit_length()}b), N = {N}")
+
+# ---- 1. FBE lift property: lifted = x + alpha*Q_l mod P, alpha in [0, l+1]
+for level in (2, L):
+    ml = primes[: level + 1]
+    Ql = 1
+    for q in ml:
+        Ql *= q
+    x = [random.randrange(-(10**9), 10**9) for _ in range(N)]
+    rows = rows_from_int(x, ml)
+    lifted = fast_basis_extend(rows, ml, SPECIAL)
+    for k in range(N):
+        diff = (lifted[k] - x[k]) % SPECIAL
+        # alpha*Q_l mod P for small alpha
+        ok = False
+        for alpha in range(level + 2):
+            if diff == (alpha * Ql) % SPECIAL:
+                ok = True
+                break
+        assert ok, f"FBE lift alpha out of range at level {level}, k={k}"
+print("1. fast-basis-extension lift: alpha in [0, l+1]  OK")
+
+# ---- 2. mod_down(P*x) == x exactly
+level = L
+ml = primes[: level + 1]
+x = [random.randrange(-(10**12), 10**12) for _ in range(N)]
+rows = [[(xi * SPECIAL) % q for xi in x] for q in ml]
+prow = [0] * N  # P*x == 0 mod P
+back = compose_centered(mod_down(rows, prow, ml), ml)
+assert back == x, "mod_down(P*x) != x"
+print("2. mod_down(P*x) == x exactly  OK")
+
+# ---- 3. relinearization via hybrid key switch
+s2 = polymul(s, s, 1 << 200)  # integer product, then centered
+s2 = [((v + (1 << 199)) % (1 << 200)) - (1 << 199) for v in s2]
+s2_rows = rows_from_int(s2, ext_moduli)
+relin_key = make_switch_key(s2_rows)
+
+level = L
+m1 = [random.randrange(-(1 << 20), 1 << 20) for _ in range(N)]
+m2 = [random.randrange(-(1 << 20), 1 << 20) for _ in range(N)]
+c0a, c1a = encrypt([v * (1 << 20) for v in m1], level)  # scale irrelevant; phases exact
+c0b, c1b = encrypt([v * (1 << 20) for v in m2], level)
+ml = primes[: level + 1]
+d0 = rows_mul(c0a, c0b, ml)
+d1 = rows_add(rows_mul(c0a, c1b, ml), rows_mul(c1a, c0b, ml), ml)
+d2 = rows_mul(c1a, c1b, ml)
+k0, k1 = key_switch(d2, level, relin_key)
+r0, r1 = rows_add(d0, k0, ml), rows_add(d1, k1, ml)
+# expected phase: (c0a + c1a s)(c0b + c1b s)
+pa = compose_centered(rows_add(c0a, rows_mul(c1a, rows_from_int(s, ml), ml), ml), ml)
+pb = compose_centered(rows_add(c0b, rows_mul(c1b, rows_from_int(s, ml), ml), ml), ml)
+Ql = 1
+for q in ml:
+    Ql *= q
+expect = []
+for v in polymul(pa, pb, 1 << 600):
+    v = ((v + (1 << 599)) % (1 << 600)) - (1 << 599)  # back to signed
+    v %= Ql
+    if v > Ql // 2:
+        v -= Ql
+    expect.append(v)
+got = phase(r0, r1, level)
+err = max(abs(a - b) for a, b in zip(got, expect))
+print(f"3. relinearization noise: max |err| = {err:.3e} "
+      f"(budget P = {SPECIAL:.3e}); err/Delta = {err / DELTA:.3e}")
+assert err < 2 ** 24, "relin noise too large"
+
+# ---- 4. rotation (non-hoisted == hoisted single) at low level, scale Delta
+for level in (L, 3, 1):
+    steps = 1
+    g = pow(5, steps, 2 * N)
+    ginv = pow(g, -1, 2 * N)
+    sg = automorphism(s, g, 1 << 200)
+    sg = [((v + (1 << 199)) % (1 << 200)) - (1 << 199) for v in sg]
+    rot_key = make_switch_key(rows_from_int(sg, ext_moduli))
+    # store inverse-rotated keys for the hoisted path
+    rot_key_tilde = [
+        (rows_aut(a, ginv, ext_moduli), rows_aut(b, ginv, ext_moduli)) for a, b in rot_key
+    ]
+    m = [random.randrange(-(1 << 40), 1 << 40) for _ in range(N)]  # ~ Delta-scale payload
+    c0, c1 = encrypt(m, level)
+    ml = primes[: level + 1]
+    # hoisted form: acc with inverse-rotated keys, automorphism last
+    k0, k1 = key_switch(c1, level, rot_key_tilde, galois=g)
+    r0 = rows_add(rows_aut(c0, g, ml), k0, ml)
+    r1 = k1
+    got = phase(r0, r1, level)
+    want = aut_signed(phase(c0, c1, level), g)
+    err = max(abs(a - b) for a, b in zip(got, want))
+    print(f"4. rotation level {level}: max |err| = {err:.3e}; slot-scale err ~ {err * N / DELTA:.3e}")
+    assert err * N / DELTA < 1e-3, "rotation noise exceeds 1e-3 slot bound"
+
+# ---- 5. hoisted multi-rotation: shared decomposition, three steps
+level = 4
+m = [random.randrange(-(1 << 40), 1 << 40) for _ in range(N)]
+c0, c1 = encrypt(m, level)
+ml = primes[: level + 1]
+for steps in (1, 2, 5):
+    g = pow(5, steps, 2 * N)
+    ginv = pow(g, -1, 2 * N)
+    sg = automorphism(s, g, 1 << 200)
+    sg = [((v + (1 << 199)) % (1 << 200)) - (1 << 199) for v in sg]
+    key = make_switch_key(rows_from_int(sg, ext_moduli))
+    key_t = [(rows_aut(a, ginv, ext_moduli), rows_aut(b, ginv, ext_moduli)) for a, b in key]
+    k0, k1 = key_switch(c1, level, key_t, galois=g)  # same digits reused per step
+    r0 = rows_add(rows_aut(c0, g, ml), k0, ml)
+    got = phase(r0, k1, level)
+    want = aut_signed(phase(c0, c1, level), g)
+    err = max(abs(a - b) for a, b in zip(got, want))
+    print(f"5. hoisted rotation by {steps}: max |err| = {err:.3e}")
+    assert err * N / DELTA < 1e-3
+
+print("\nall hybrid key-switching validations passed")

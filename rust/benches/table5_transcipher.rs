@@ -22,7 +22,9 @@ use presto::util::rng::SplitMix64;
 
 fn bench_ckks(name: &str, profile: CkksCipherProfile, ring: usize, iters: usize) {
     let params = CkksParams::with_shape(ring, profile.required_levels());
-    let ctx = CkksContext::generate(params, 5, &[]);
+    // One rotation key: enough to measure hybrid key-switch time (every
+    // Galois element adds the same O(L) single Q·P key).
+    let ctx = CkksContext::generate(params, 5, &[1]);
     let mut rng = SplitMix64::new(1);
     let key = profile.sample_key(3);
     let server = CkksTranscipher::setup(profile.clone(), &ctx, &key, &mut rng);
@@ -41,6 +43,31 @@ fn bench_ckks(name: &str, profile: CkksCipherProfile, ring: usize, iters: usize)
         r.report(),
         batch,
         r.throughput(batch as f64)
+    );
+
+    // Key-switch microbenchmarks at the top level: one full rotation
+    // (decompose + accumulate + mod-down + automorphism) vs the hoisted
+    // split where the decomposition is shared across rotations.
+    let x: Vec<f64> = (0..batch).map(|i| i as f64 / batch as f64).collect();
+    let ct = ctx.encrypt_values(&x, ctx.params().delta(), &mut rng);
+    let rks = bench(&format!("{name} — key-switch (rotate by 1)"), iters * 4, || {
+        let out = ctx.rotate(&ct, 1).expect("rotation key registered");
+        std::hint::black_box(&out);
+    });
+    let dec = ctx.hoist(&ct);
+    let hoist = bench(
+        &format!("{name} — hoisted apply (decompose amortized)"),
+        iters * 4,
+        || {
+            let out = ctx.apply_hoisted(&ct, &dec, 1).expect("rotation key registered");
+            std::hint::black_box(&out);
+        },
+    );
+    println!("{}", rks.report());
+    println!("{}", hoist.report());
+    println!(
+        "switching-key memory: {:.1} KiB total (relin + 1 rotation; single Q·P key per target, O(L) digits)",
+        ctx.switch_key_bytes() as f64 / 1024.0
     );
 }
 

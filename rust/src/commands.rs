@@ -183,6 +183,7 @@ pub fn transcipher(args: &Args) -> i32 {
         ckks: CkksParams::with_shape(ring, levels),
         seed: args.parsed_or("seed", 2026u64).unwrap_or(2026),
         nonce: 1000,
+        rotations: vec![],
     };
     let mut svc = match TranscipherService::start(cfg) {
         Ok(s) => s,

@@ -59,7 +59,10 @@ pub fn serve_impl(args: &Args) -> i32 {
     let t0 = Instant::now();
     let mut rxs = Vec::with_capacity(requests);
     for _ in 0..requests {
-        rxs.push(server.submit(wl.next_request()));
+        match server.submit(wl.next_request()) {
+            Ok(rx) => rxs.push(rx),
+            Err(e) => return fail(e),
+        }
     }
     for rx in rxs {
         let _ = rx.recv();

@@ -6,6 +6,8 @@
 //! dynamic-batching policy of serving systems, applied to the client-side
 //! encryption engine.
 
+use crate::bail;
+use crate::util::error::Result;
 use crate::workload::Request;
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
@@ -62,12 +64,18 @@ impl Batcher {
     }
 
     /// Enqueue one request (never blocks; the queue is unbounded and
-    /// backpressure is applied upstream by the workload driver).
-    pub fn submit(&self, req: Request) {
+    /// backpressure is applied upstream by the workload driver). A request
+    /// racing [`Batcher::close`] is **rejected with a typed error**, never
+    /// a panic — shutdown is an ordinary event on a serving path and must
+    /// not kill the submitting thread.
+    pub fn submit(&self, req: Request) -> Result<()> {
         let mut inner = self.inner.lock().unwrap();
-        assert!(!inner.closed, "submit after close");
+        if inner.closed {
+            bail!("batcher closed: request {} rejected during shutdown", req.id);
+        }
         inner.queue.push_back((req, Instant::now()));
         self.cv.notify_one();
+        Ok(())
     }
 
     /// Signal that no more requests will arrive; pending ones still drain.
@@ -136,7 +144,7 @@ mod tests {
             max_wait: Duration::from_secs(10),
         });
         for i in 0..4 {
-            b.submit(req(i));
+            b.submit(req(i)).unwrap();
         }
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), [0, 1, 2, 3]);
@@ -148,7 +156,7 @@ mod tests {
             batch_size: 8,
             max_wait: Duration::from_millis(20),
         });
-        b.submit(req(1));
+        b.submit(req(1)).unwrap();
         let t0 = Instant::now();
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.len(), 1);
@@ -161,11 +169,63 @@ mod tests {
             batch_size: 4,
             max_wait: Duration::from_secs(10),
         });
-        b.submit(req(1));
-        b.submit(req(2));
+        b.submit(req(1)).unwrap();
+        b.submit(req(2)).unwrap();
         b.close();
+        assert!(b.submit(req(3)).is_err(), "submit after close must be rejected");
         assert_eq!(b.next_batch().unwrap().len(), 2);
         assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn submit_close_race_rejects_instead_of_panicking() {
+        // Regression: `submit` used to `assert!(!closed)` — a request
+        // racing shutdown panicked the submitting thread. Now every racing
+        // submit either succeeds (and is delivered exactly once) or is
+        // rejected with an error; nothing panics, nothing is lost.
+        for trial in 0..8u64 {
+            let b = Arc::new(Batcher::new(BatchPolicy {
+                batch_size: 4,
+                max_wait: Duration::from_micros(200),
+            }));
+            let accepted = Arc::new(Mutex::new(Vec::<u64>::new()));
+            let submitters: Vec<_> = (0..3u64)
+                .map(|t| {
+                    let b = Arc::clone(&b);
+                    let accepted = Arc::clone(&accepted);
+                    std::thread::spawn(move || {
+                        for i in 0..200u64 {
+                            let id = trial * 10_000 + t * 1000 + i;
+                            if b.submit(req(id)).is_ok() {
+                                accepted.lock().unwrap().push(id);
+                            } else {
+                                break; // closed: stop submitting, no panic
+                            }
+                        }
+                    })
+                })
+                .collect();
+            let closer = {
+                let b = Arc::clone(&b);
+                std::thread::spawn(move || {
+                    std::thread::sleep(Duration::from_micros(50 * (trial + 1)));
+                    b.close();
+                })
+            };
+            let mut seen = Vec::new();
+            while let Some(batch) = b.next_batch() {
+                seen.extend(batch.iter().map(|r| r.id));
+            }
+            for h in submitters {
+                h.join().expect("submitter must not panic");
+            }
+            closer.join().unwrap();
+            // Exactly the accepted requests are delivered, each once.
+            let mut acc = accepted.lock().unwrap().clone();
+            acc.sort_unstable();
+            seen.sort_unstable();
+            assert_eq!(seen, acc, "trial {trial}: accepted vs delivered mismatch");
+        }
     }
 
     #[test]
@@ -179,7 +239,7 @@ mod tests {
             let b = Arc::clone(&b);
             std::thread::spawn(move || {
                 for i in 0..n {
-                    b.submit(req(i));
+                    b.submit(req(i)).unwrap();
                 }
                 b.close();
             })

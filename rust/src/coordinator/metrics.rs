@@ -15,6 +15,7 @@ struct Inner {
     batches: u64,
     partial_batches: u64,
     keystream_elems: u64,
+    key_bytes: u64,
     e2e_latency: Option<LatencyHistogram>,
     exec_latency: Option<LatencyHistogram>,
 }
@@ -30,6 +31,8 @@ pub struct MetricsSnapshot {
     pub partial_batches: u64,
     /// Keystream elements produced.
     pub keystream_elems: u64,
+    /// Resident evaluation-key memory (relin + rotation keys), bytes.
+    pub key_bytes: u64,
     /// End-to-end request latency, mean ns.
     pub e2e_mean_ns: f64,
     /// End-to-end p50 upper bound, ns.
@@ -59,6 +62,20 @@ impl Metrics {
             .record(exec_ns);
     }
 
+    /// Set the resident evaluation-key memory gauge (bytes).
+    pub fn set_key_bytes(&self, bytes: u64) {
+        self.inner.lock().unwrap().key_bytes = bytes;
+    }
+
+    /// Record executor-only work (e.g. a post-processing pass on an
+    /// already-counted batch) without incrementing the batch counters.
+    pub fn record_exec(&self, exec_ns: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.exec_latency
+            .get_or_insert_with(LatencyHistogram::new)
+            .record(exec_ns);
+    }
+
     /// Record one completed request with its end-to-end latency.
     pub fn record_request(&self, e2e_ns: u64) {
         let mut m = self.inner.lock().unwrap();
@@ -78,6 +95,7 @@ impl Metrics {
             batches: m.batches,
             partial_batches: m.partial_batches,
             keystream_elems: m.keystream_elems,
+            key_bytes: m.key_bytes,
             e2e_mean_ns: e2e.mean_ns(),
             e2e_p50_ns: e2e.percentile_ns(50.0),
             e2e_p99_ns: e2e.percentile_ns(99.0),
@@ -93,6 +111,7 @@ impl MetricsSnapshot {
             "requests        {}\n\
              batches         {} ({} partial)\n\
              ks elements     {}\n\
+             key memory      {:.1} KiB\n\
              throughput      {:.1} req/s, {:.2} Melem/s\n\
              e2e latency     mean {:.1} µs, p50 ≤ {:.1} µs, p99 ≤ {:.1} µs\n\
              exec latency    mean {:.1} µs/batch",
@@ -100,6 +119,7 @@ impl MetricsSnapshot {
             self.batches,
             self.partial_batches,
             self.keystream_elems,
+            self.key_bytes as f64 / 1024.0,
             self.requests as f64 / wall_s.max(1e-9),
             self.keystream_elems as f64 / wall_s.max(1e-9) / 1e6,
             self.e2e_mean_ns / 1e3,

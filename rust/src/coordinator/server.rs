@@ -208,18 +208,25 @@ impl EncryptServer {
         })
     }
 
-    /// Submit a request; returns a receiver for its response.
-    pub fn submit(&self, req: Request) -> std::sync::mpsc::Receiver<Response> {
+    /// Submit a request; returns a receiver for its response. A request
+    /// racing shutdown is rejected with a typed error (the pending-table
+    /// entry is rolled back), never a panic.
+    pub fn submit(&self, req: Request) -> Result<std::sync::mpsc::Receiver<Response>> {
         let (tx, rx) = channel();
-        self.pending.lock().unwrap().insert(req.id, tx);
-        self.batcher.submit(req);
-        rx
+        let id = req.id;
+        self.pending.lock().unwrap().insert(id, tx);
+        if let Err(e) = self.batcher.submit(req) {
+            self.pending.lock().unwrap().remove(&id);
+            return Err(e.wrap("submit rejected"));
+        }
+        Ok(rx)
     }
 
     /// Encrypt synchronously (submit + wait).
-    pub fn encrypt(&self, req: Request) -> Response {
-        let rx = self.submit(req);
-        rx.recv().expect("server dropped response channel")
+    pub fn encrypt(&self, req: Request) -> Result<Response> {
+        let rx = self.submit(req)?;
+        rx.recv()
+            .context("server dropped response channel during shutdown")
     }
 
     /// Metrics handle.
@@ -362,6 +369,10 @@ pub struct TranscipherConfig {
     pub seed: u64,
     /// Session nonce (one symmetric-key stream per service instance).
     pub nonce: u64,
+    /// Rotation step counts to generate hoistable Galois keys for (used by
+    /// the post-transcipher slot linear layer). One hybrid Q·P key each —
+    /// O(L) memory per step, reported via [`Metrics`].
+    pub rotations: Vec<usize>,
 }
 
 impl Default for TranscipherConfig {
@@ -373,6 +384,7 @@ impl Default for TranscipherConfig {
             ckks: CkksParams::with_shape(64, levels),
             seed: 2026,
             nonce: 1000,
+            rotations: Vec::new(),
         }
     }
 }
@@ -416,18 +428,26 @@ impl TranscipherService {
                 cfg.profile.required_levels()
             );
         }
-        let ctx = CkksContext::generate(cfg.ckks, cfg.seed, &[]);
+        let ctx = CkksContext::generate(cfg.ckks, cfg.seed, &cfg.rotations);
         let sym_key = cfg.profile.sample_key(cfg.seed ^ 0x5359_4D4B); // "SYMK"
         let mut rng = SplitMix64::new(cfg.seed ^ 0x454E_434B); // "ENCK"
         let server = CkksTranscipher::setup(cfg.profile.clone(), &ctx, &sym_key, &mut rng);
+        let metrics = Arc::new(Metrics::new());
+        metrics.set_key_bytes(ctx.switch_key_bytes());
         Ok(TranscipherService {
             cfg,
             ctx,
             server,
             sym_key,
-            metrics: Arc::new(Metrics::new()),
+            metrics,
             next_counter: 0,
         })
+    }
+
+    /// Resident switching-key memory (relinearization + rotation keys) in
+    /// bytes — O(L) per Galois element under hybrid key switching.
+    pub fn key_memory_bytes(&self) -> u64 {
+        self.ctx.switch_key_bytes()
     }
 
     /// The CKKS context (decryption side for tests/examples).
@@ -520,6 +540,32 @@ impl TranscipherService {
         );
         Ok(out)
     }
+
+    /// Transcipher a batch and apply a cross-block slot linear layer
+    /// `Σ_(step, diag) diag ⊙ rot(·, step)` to every output ciphertext —
+    /// windowed aggregation / pooling over the block dimension. Every
+    /// output shares one hoisted decomposition across its rotation steps;
+    /// a step with no registered Galois key (see
+    /// [`TranscipherConfig::rotations`]) is a typed error, not a panic, so
+    /// malformed post-processing requests cannot kill the serving thread.
+    /// Key-switch wall time is recorded as executor latency.
+    pub fn transcipher_linear(
+        &self,
+        blocks: &[TranscipherBlock],
+        diags: &[(usize, Vec<f64>)],
+    ) -> Result<Vec<CkksCiphertext>> {
+        let cts = self.transcipher(blocks)?;
+        let t0 = Instant::now();
+        let out: Result<Vec<CkksCiphertext>> = cts
+            .iter()
+            .map(|ct| self.server.slot_linear(&self.ctx, ct, diags))
+            .collect();
+        let out = out?;
+        // The batch itself was already counted by transcipher(); only the
+        // linear pass's key-switch wall time is added here.
+        self.metrics.record_exec(t0.elapsed().as_nanos() as u64);
+        Ok(out)
+    }
 }
 
 #[cfg(test)]
@@ -560,12 +606,14 @@ mod tests {
         let p = server.config().clone();
         let codec = server.codec();
         let msg = vec![1.5, -2.25, 0.0, 3.75];
-        let resp = server.encrypt(Request {
-            id: 1,
-            session: 0,
-            arrival_s: 0.0,
-            message: msg.clone(),
-        });
+        let resp = server
+            .encrypt(Request {
+                id: 1,
+                session: 0,
+                arrival_s: 0.0,
+                message: msg.clone(),
+            })
+            .unwrap();
         // Decrypt with the session key (nonce/counter from the response).
         let cipher = build_cipher(p.params, p.xof);
         let key = SecretKey::generate(&p.params, 1); // session 0 ⇒ seed 1
@@ -588,12 +636,14 @@ mod tests {
         let server = software_server(1);
         let mut counters = Vec::new();
         for i in 0..12 {
-            let r = server.encrypt(Request {
-                id: i,
-                session: 0,
-                arrival_s: 0.0,
-                message: vec![0.5],
-            });
+            let r = server
+                .encrypt(Request {
+                    id: i,
+                    session: 0,
+                    arrival_s: 0.0,
+                    message: vec![0.5],
+                })
+                .unwrap();
             counters.push(r.counter);
         }
         let mut sorted = counters.clone();
@@ -607,12 +657,14 @@ mod tests {
     fn metrics_accumulate() {
         let server = software_server(2);
         for i in 0..9 {
-            server.encrypt(Request {
-                id: i,
-                session: i % 2,
-                arrival_s: 0.0,
-                message: vec![0.1, 0.2],
-            });
+            server
+                .encrypt(Request {
+                    id: i,
+                    session: i % 2,
+                    arrival_s: 0.0,
+                    message: vec![0.1, 0.2],
+                })
+                .unwrap();
         }
         let snap = server.metrics().snapshot();
         assert_eq!(snap.requests, 9);
@@ -628,6 +680,7 @@ mod tests {
             ckks: CkksParams::with_shape(32, levels),
             seed: 11,
             nonce: 77,
+            rotations: vec![],
         })
         .unwrap()
     }
@@ -686,6 +739,75 @@ mod tests {
     }
 
     #[test]
+    fn submit_racing_shutdown_is_rejected_not_a_panic() {
+        let server = software_server(1);
+        // Simulate a shutdown racing an in-flight submitter: close the
+        // batcher first, then submit.
+        server.batcher.close();
+        let err = server
+            .submit(Request {
+                id: 99,
+                session: 0,
+                arrival_s: 0.0,
+                message: vec![0.5],
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("rejected"), "{err}");
+        // The pending-table entry was rolled back (no response-channel leak).
+        assert!(server.pending.lock().unwrap().is_empty());
+        server.shutdown();
+    }
+
+    #[test]
+    fn transcipher_linear_layer_roundtrip_and_key_metrics() {
+        let profile = CkksCipherProfile::rubato_toy();
+        let levels = profile.required_levels() + 1; // one level for the linear layer
+        let mut svc = TranscipherService::start(TranscipherConfig {
+            profile,
+            ckks: CkksParams::with_shape(32, levels),
+            seed: 21,
+            nonce: 5,
+            rotations: vec![1],
+        })
+        .unwrap();
+        // Key memory gauge: relin + 1 rotation key, surfaced in metrics.
+        assert_eq!(
+            svc.metrics().snapshot().key_bytes,
+            svc.key_memory_bytes()
+        );
+        assert!(svc.key_memory_bytes() > 0);
+
+        let l = svc.profile().l;
+        let blocks = 4usize;
+        let mut rng = crate::util::rng::SplitMix64::new(6);
+        let data: Vec<Vec<f64>> = (0..blocks)
+            .map(|_| (0..l).map(|_| rng.next_f64() * 2.0 - 1.0).collect())
+            .collect();
+        let wire = svc.client_encrypt(&data);
+        // Cross-block windowed mean: (block b + block b+1) / 2.
+        let slots = svc.batch_capacity();
+        let diags = vec![(0usize, vec![0.5; slots]), (1usize, vec![0.5; slots])];
+        let out = svc.transcipher_linear(&wire, &diags).unwrap();
+        assert_eq!(out.len(), l);
+        let bound = svc.profile().error_bound();
+        for (i, ct) in out.iter().enumerate() {
+            let d = svc.context().decrypt_real(ct);
+            for blk in 0..blocks - 1 {
+                let want = 0.5 * (data[blk][i] + data[blk + 1][i]);
+                assert!(
+                    (d[blk] - want).abs() < bound,
+                    "elem {i} block {blk}: {} vs {want}",
+                    d[blk]
+                );
+            }
+        }
+        // An unregistered rotation step errors through the serving path.
+        let bad = vec![(3usize, vec![1.0; slots])];
+        let err = svc.transcipher_linear(&wire, &bad).unwrap_err();
+        assert!(err.to_string().contains("no rotation key"), "{err}");
+    }
+
+    #[test]
     fn transcipher_service_rejects_shallow_chain() {
         let profile = CkksCipherProfile::hera_toy(); // needs 7 levels
         let cfg = TranscipherConfig {
@@ -693,6 +815,7 @@ mod tests {
             profile,
             seed: 1,
             nonce: 1,
+            rotations: vec![],
         };
         let err = match TranscipherService::start(cfg) {
             Err(e) => e,

@@ -8,36 +8,45 @@
 //! * [`encoder`] — the canonical-embedding codec (slots ↔ real
 //!   coefficients, one in-crate f64 FFT each way).
 //! * Key generation: ternary RLWE secret, relinearization and rotation
-//!   keys using a **two-level gadget** — the RNS decomposition (one digit
-//!   per prime q_i, gadget factor `(Q_l/q_i)·[(Q_l/q_i)^{-1}]_{q_i}`)
-//!   composed with a base-2^w digit decomposition inside each prime.
-//!   The second level is what keeps key-switching noise ≈ N·2^w·σ instead
-//!   of ≈ N·q·σ; without it, rotations (which key-switch at scale Δ, not
-//!   Δ²) lose the message entirely.
-//! * Ciphertext ops: add/sub, plaintext add/mul, small-integer scalar mul,
-//!   ciphertext mul with relinearization, rescale (centered division by
-//!   the top prime), and slot rotation via the Galois automorphism
-//!   X → X^(5^r) with hoistable per-level switching keys.
+//!   keys in the **hybrid special-modulus** formulation: one switching key
+//!   per target (s² or s(X^g)) over Q_L·P, with one digit per chain prime
+//!   (gadget factor `P·(Q_L/q_i)·[(Q_L/q_i)^{-1}]_{q_i}`). The digit×key
+//!   products accumulate over Q_l·P and a final centered division by the
+//!   special prime P ([`crate::he::rns::RnsPolyExt::mod_down`]) shrinks
+//!   the full-size digit noise to ≈ L·N·σ·(q_max/P) — below one unit at
+//!   the working scale. One key works at every level because the gadget
+//!   congruence `Σ_i [d]_{q_i}·q̃_i ≡ d` holds modulo each prime
+//!   individually; no per-level key ladder, no base-2^w digit splitting.
+//! * Ciphertext ops: add/sub (with physical scale realignment on drift),
+//!   plaintext add/mul, small-integer scalar mul, ciphertext mul with
+//!   relinearization, rescale, and slot rotations via the Galois
+//!   automorphism X → X^(5^r) — including **hoisted** rotations: the
+//!   NTT-domain digit decomposition of c1 is computed once
+//!   ([`CkksContext::hoist`]) and shared by every rotation of the same
+//!   ciphertext. Rotation keys are stored inverse-rotated (φ_g^{-1}
+//!   applied at keygen), so each hoisted application is pointwise
+//!   multiply-accumulate + mod-down + one automorphism of the result:
+//!   `φ_g(Σ_i D_i(c1)·φ_g^{-1}(ksk_i)) = Σ_i φ_g(D_i(c1))·ksk_i`.
 //!
 //! Scale management: every ciphertext carries its scale as f64 metadata.
 //! Rescaling divides the scale by the (≈ 2^scale_bits, not exactly)
-//! dropped prime, so scales drift — operands are aligned by encoding
-//! plaintexts at the ciphertext's current scale, never by reinterpreting
-//! the scale of an existing ciphertext (a scale-only "multiplication"
-//! leaves the phase magnitude unchanged and overflows Q at low levels).
-//!
-//! Switching keys are generated **per level**: the RNS gadget of Q_l is
-//! level-dependent, so `keys[l][i][t]` holds the key for prime i, digit t
-//! at level l. Memory is O(L³·digits·N), a few MB at demo sizes.
+//! dropped prime, so scales drift. Operands are aligned by encoding
+//! plaintexts at the ciphertext's current scale; when two *ciphertexts*
+//! meet in add/sub with genuinely drifted scales, the lower-scale operand
+//! is physically raised to the higher scale (one plaintext multiplication
+//! + rescale, costing both operands a level) instead of silently summing
+//! phases at different scales — a scale-metadata-only "fix" corrupts
+//! every slot by the drift with no diagnostic.
 
 pub mod encoder;
 
 pub use encoder::{Complex, Encoder};
 
-use super::rns::{RnsBasis, RnsPoly};
+use super::rns::{RnsBasis, RnsPoly, RnsPolyExt};
 use crate::arith::{mod_mul64, mod_pow64};
 use crate::params::CkksParams;
 use crate::sampler::DiscreteGaussian;
+use crate::util::error::{Error, Result};
 use crate::util::rng::SplitMix64;
 use crate::xof::{Xof, XofKind};
 use std::collections::BTreeMap;
@@ -79,17 +88,70 @@ impl Ciphertext {
     }
 }
 
-/// A key-switching key ladder: `keys[level][i][t]` = (b, a) with
-/// `b = -(a·s + e) + 2^(w·t) · g_i^(level) · target`, where `target` is the
-/// key being switched away from (s² for relinearization, s(X^g) for
-/// rotations) and `g_i` the RNS gadget factor of Q_level.
-struct SwitchKey {
-    keys: Vec<Vec<Vec<(RnsPoly, RnsPoly)>>>,
+/// One digit component of a hybrid switching key: `(b, a)` over Q_L·P with
+/// `b = -(a·s + e) + P·q̃_i·target`, held row-wise in the NTT domain so the
+/// hot path is pointwise multiply-accumulate (keys are NTT'd once at
+/// keygen, never again).
+struct KeyDigit {
+    b_rows: Vec<Vec<u64>>,
+    b_prow: Vec<u64>,
+    a_rows: Vec<Vec<u64>>,
+    a_prow: Vec<u64>,
 }
 
+/// A hybrid switching key: one [`KeyDigit`] per chain prime — O(L)
+/// components over the fixed modulus Q_L·P, usable at every level (the
+/// per-level key ladder of the previous design is gone).
+struct SwitchKey {
+    digits: Vec<KeyDigit>,
+}
+
+impl SwitchKey {
+    /// Resident key material in bytes.
+    fn bytes(&self) -> u64 {
+        self.digits
+            .iter()
+            .map(|d| {
+                let rows: usize = d
+                    .b_rows
+                    .iter()
+                    .chain(&d.a_rows)
+                    .map(|r| r.len())
+                    .sum::<usize>()
+                    + d.b_prow.len()
+                    + d.a_prow.len();
+                8 * rows as u64
+            })
+            .sum()
+    }
+}
+
+/// A rotation key: the Galois element and the switching key for
+/// s(X^g) → s, stored **inverse-rotated** (φ_g^{-1} applied to both key
+/// polynomials at keygen) so hoisted application can multiply the
+/// un-rotated digits and apply φ_g once to the accumulated result.
 struct RotKey {
     galois: usize,
     key: SwitchKey,
+}
+
+/// One decomposed digit extended to Q_l·P: (chain rows, P row), NTT domain.
+type DigitNtt = (Vec<Vec<u64>>, Vec<u64>);
+
+/// The NTT-domain digit decomposition of a ciphertext's c1, extended to
+/// Q_l·P — the expensive half of a rotation, computed once by
+/// [`CkksContext::hoist`] and shared by every rotation of that ciphertext.
+pub struct HoistedDecomposition {
+    /// `digits[i]` = (chain rows, P row) of digit i, all in NTT domain.
+    digits: Vec<DigitNtt>,
+    level: usize,
+}
+
+impl HoistedDecomposition {
+    /// Level the decomposition was taken at.
+    pub fn level(&self) -> usize {
+        self.level
+    }
 }
 
 /// The CKKS context: parameters, RNS basis, encoder, secret key and
@@ -110,8 +172,34 @@ pub fn galois_element(n: usize, steps: usize) -> usize {
     mod_pow64(5, steps as u64, 2 * n as u64) as usize
 }
 
-fn digit_count(q: u64, w: u32) -> usize {
-    (64 - q.leading_zeros()).div_ceil(w) as usize
+/// Inverse of an odd Galois element modulo 2N: the unit group of Z_{2N}
+/// (N a power of two ≥ 4) has exponent 2N/4, so g^{2N/4 − 1} = g^{-1}.
+fn galois_inverse(g: usize, n: usize) -> usize {
+    let m = 2 * n as u64;
+    debug_assert!(n >= 4 && g % 2 == 1);
+    mod_pow64(g as u64, m / 4 - 1, m) as usize
+}
+
+/// Relative scale drift beyond which add/sub physically realigns the
+/// operands (one level) instead of mislabeling the sum; drift below this
+/// is f64 bookkeeping noise, orders of magnitude under the HE error.
+const SCALE_ALIGN_RTOL: f64 = 1e-9;
+
+/// Drift beyond which add/sub refuses to repair: scales this far apart
+/// (e.g. Δ vs Δ² from a missing rescale) are a programming error, and the
+/// repair multiplication itself would overflow Q at low levels — better
+/// the loud panic than silently wrapped slots. Not reachable from the
+/// serving path, whose scale discipline is exact (see transcipher).
+const SCALE_REPAIR_MAX: f64 = 1e-3;
+
+fn gaussian_ext(
+    basis: &Arc<RnsBasis>,
+    dgd: &mut DiscreteGaussian,
+    xof: &mut dyn Xof,
+    level: usize,
+) -> RnsPolyExt {
+    let c: Vec<i64> = (0..basis.n).map(|_| dgd.sample(xof)).collect();
+    RnsPolyExt::from_i64_coeffs(basis, &c, level)
 }
 
 fn gaussian_rns(
@@ -124,53 +212,75 @@ fn gaussian_rns(
     RnsPoly::from_i64_coeffs(basis, &c, level)
 }
 
+/// Generate a hybrid switching key for `target` (s², or s(X^g) for
+/// rotations). `inv_galois` = Some(g^{-1}) stores the key inverse-rotated
+/// for hoisted application.
 fn make_switch_key(
     basis: &Arc<RnsBasis>,
-    s: &RnsPoly,
-    target: &RnsPoly,
-    w: u32,
+    s_ext: &RnsPolyExt,
+    target: &RnsPolyExt,
+    inv_galois: Option<usize>,
     rng: &mut SplitMix64,
     dgd: &mut DiscreteGaussian,
     xof: &mut dyn Xof,
 ) -> SwitchKey {
     let top = basis.max_level();
-    let mut keys = Vec::with_capacity(top + 1);
-    for l in 0..=top {
-        let sl = s.drop_to_level(l);
-        let tl = target.drop_to_level(l);
-        let mut per_prime = Vec::with_capacity(l + 1);
-        for i in 0..=l {
-            let digits = digit_count(basis.primes[i], w);
-            let mut per_digit = Vec::with_capacity(digits);
-            for t in 0..digits {
-                let a = RnsPoly::uniform(basis, rng, l);
-                let e = gaussian_rns(basis, dgd, xof, l);
-                // 2^(w·t) · g_i · target, row by row.
-                let mut gt_rows = Vec::with_capacity(l + 1);
-                for j in 0..=l {
-                    let qj = basis.primes[j];
-                    let mut gij =
-                        mod_mul64(basis.hat_inv_at(l, i), basis.hat_mod_at(l, i, j), qj);
-                    gij = mod_mul64(gij, mod_pow64(2, w as u64 * t as u64, qj), qj);
-                    gt_rows.push(
-                        tl.rows[j]
-                            .iter()
-                            .map(|&x| mod_mul64(x, gij, qj))
-                            .collect(),
-                    );
-                }
-                let gt = RnsPoly {
-                    rows: gt_rows,
-                    basis: Arc::clone(basis),
-                };
-                let b = a.mul(&sl).add(&e).neg().add(&gt);
-                per_digit.push((b, a));
+    let p = basis.special;
+    let mut digits = Vec::with_capacity(top + 1);
+    for i in 0..=top {
+        let a = RnsPolyExt::uniform(basis, rng, top);
+        let e = gaussian_ext(basis, dgd, xof, top);
+        // b = -(a·s + e), then add the gadget term P·q̃_i·target to every
+        // chain row (the P row gets nothing: P·q̃_i ≡ 0 mod P).
+        let mut b = a.mul(s_ext).add(&e).neg();
+        let hinv = basis.hat_inv_at(top, i);
+        for j in 0..=top {
+            let qj = basis.primes[j];
+            let mut gij = mod_mul64(hinv % qj, basis.hat_mod_at(top, i, j), qj);
+            gij = mod_mul64(gij, p % qj, qj);
+            for (bk, &tk) in b.rows[j].iter_mut().zip(&target.rows[j]) {
+                let term = mod_mul64(gij, tk, qj);
+                let sum = *bk + term;
+                *bk = if sum >= qj { sum - qj } else { sum };
             }
-            per_prime.push(per_digit);
         }
-        keys.push(per_prime);
+        let (b, a) = match inv_galois {
+            Some(gi) => (b.automorphism(gi), a.automorphism(gi)),
+            None => (b, a),
+        };
+        // Freeze in NTT domain.
+        let ntt_rows = |poly: RnsPolyExt| -> (Vec<Vec<u64>>, Vec<u64>) {
+            let rows = poly
+                .rows
+                .into_iter()
+                .zip(&basis.ctxs)
+                .map(|(mut row, ctx)| {
+                    ctx.forward(&mut row);
+                    row
+                })
+                .collect();
+            let mut prow = poly.prow;
+            basis.special_ctx.forward(&mut prow);
+            (rows, prow)
+        };
+        let (b_rows, b_prow) = ntt_rows(b);
+        let (a_rows, a_prow) = ntt_rows(a);
+        digits.push(KeyDigit {
+            b_rows,
+            b_prow,
+            a_rows,
+            a_prow,
+        });
     }
-    SwitchKey { keys }
+    SwitchKey { digits }
+}
+
+/// `acc[k] += x[k]·y[k] mod q`, all operands already NTT-domain residues.
+fn madd_ntt(acc: &mut [u64], x: &[u64], y: &[u64], q: u64) {
+    for ((a, &xv), &yv) in acc.iter_mut().zip(x).zip(y) {
+        let s = *a + mod_mul64(xv, yv, q);
+        *a = if s >= q { s - q } else { s };
+    }
 }
 
 impl CkksContext {
@@ -190,12 +300,13 @@ impl CkksContext {
         let top = basis.max_level();
         let s_coeffs: Vec<i64> = (0..params.n).map(|_| rng.below(3) as i64 - 1).collect();
         let s = RnsPoly::from_i64_coeffs(&basis, &s_coeffs, top);
-        let s2 = s.mul(&s);
+        let s_ext = RnsPolyExt::from_i64_coeffs(&basis, &s_coeffs, top);
+        let s2_ext = s_ext.mul(&s_ext);
         let relin = make_switch_key(
             &basis,
-            &s,
-            &s2,
-            params.ksk_digit_bits,
+            &s_ext,
+            &s2_ext,
+            None,
             &mut rng,
             &mut dgd,
             xof.as_mut(),
@@ -203,12 +314,12 @@ impl CkksContext {
         let mut rot_keys = BTreeMap::new();
         for &r in rotations {
             let g = galois_element(params.n, r);
-            let sg = s.automorphism(g);
+            let sg_ext = s_ext.automorphism(g);
             let key = make_switch_key(
                 &basis,
-                &s,
-                &sg,
-                params.ksk_digit_bits,
+                &s_ext,
+                &sg_ext,
+                Some(galois_inverse(g, params.n)),
                 &mut rng,
                 &mut dgd,
                 xof.as_mut(),
@@ -253,6 +364,14 @@ impl CkksContext {
     /// Rotation step counts this context has keys for.
     pub fn rotation_steps(&self) -> Vec<usize> {
         self.rot_keys.keys().copied().collect()
+    }
+
+    /// Total resident switching-key material (relinearization + rotation
+    /// keys) in bytes: O(L) digit components per key, each over the fixed
+    /// modulus Q_L·P — compare O(L³·digits) for the per-level ladder this
+    /// replaces.
+    pub fn switch_key_bytes(&self) -> u64 {
+        self.relin.bytes() + self.rot_keys.values().map(|rk| rk.key.bytes()).sum::<u64>()
     }
 
     // ---- encoding ----
@@ -337,35 +456,77 @@ impl CkksContext {
 
     // ---- arithmetic ----
 
-    fn assert_scales_match(a: f64, b: f64) {
-        assert!(
-            (a - b).abs() <= a.abs() * 1e-6,
-            "ciphertext scale mismatch: {a} vs {b}"
-        );
+    /// Physically raise a ciphertext's scale to `target` (> current): one
+    /// all-ones plaintext multiplication at scale `target·q_l / current`
+    /// followed by a rescale. Costs one level; the result's scale metadata
+    /// is exactly `target` (the residual error is the usual plaintext
+    /// encoding rounding, ≲ 2^-40 relative).
+    fn raise_scale(&self, ct: &Ciphertext, target: f64) -> Ciphertext {
+        let l = ct.level();
+        debug_assert!(l >= 1, "raise_scale needs a level to spend");
+        let ql = self.basis.primes[l] as f64;
+        let ones = vec![1.0; self.slots()];
+        let mut out = self.rescale(&self.mul_plain(ct, &ones, target * ql / ct.scale));
+        out.scale = target;
+        out
     }
 
-    /// Homomorphic addition (levels aligned automatically; scales must
-    /// match).
-    pub fn add(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
-        Self::assert_scales_match(a.scale, b.scale);
+    /// Bring two operands to a common (level, scale) for add/sub. Scales
+    /// within [`SCALE_ALIGN_RTOL`] relative are treated as equal; genuine
+    /// drift (independent rescale histories) is repaired by raising the
+    /// lower-scale operand, costing both one level. At level 0 no repair
+    /// is possible — debug builds assert, release keeps the max scale
+    /// (error bounded by the drift itself).
+    fn aligned_operands(&self, a: &Ciphertext, b: &Ciphertext) -> (Ciphertext, Ciphertext) {
         let l = a.level().min(b.level());
         let (a, b) = (a.drop_to_level(l), b.drop_to_level(l));
-        Ciphertext {
-            c0: a.c0.add(&b.c0),
-            c1: a.c1.add(&b.c1),
-            scale: a.scale,
+        let max = a.scale.max(b.scale);
+        let drift = (a.scale - b.scale).abs() / max;
+        if drift <= SCALE_ALIGN_RTOL {
+            return (a, b);
+        }
+        assert!(
+            drift <= SCALE_REPAIR_MAX,
+            "ciphertext scale mismatch beyond repair: {} vs {} (missing rescale?)",
+            a.scale,
+            b.scale
+        );
+        if l == 0 {
+            debug_assert!(
+                drift <= 1e-6,
+                "un-alignable scale drift {drift:.3e} at level 0: {} vs {}",
+                a.scale,
+                b.scale
+            );
+            return (a, b);
+        }
+        if a.scale < b.scale {
+            let a2 = self.raise_scale(&a, max);
+            (a2, b.drop_to_level(l - 1))
+        } else {
+            let b2 = self.raise_scale(&b, max);
+            (a.drop_to_level(l - 1), b2)
         }
     }
 
-    /// Homomorphic subtraction.
+    /// Homomorphic addition. Levels are aligned automatically; drifted
+    /// scales are physically realigned (see [`Self::aligned_operands`]).
+    pub fn add(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
+        let (a, b) = self.aligned_operands(a, b);
+        Ciphertext {
+            c0: a.c0.add(&b.c0),
+            c1: a.c1.add(&b.c1),
+            scale: a.scale.max(b.scale),
+        }
+    }
+
+    /// Homomorphic subtraction (same alignment rules as [`Self::add`]).
     pub fn sub(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
-        Self::assert_scales_match(a.scale, b.scale);
-        let l = a.level().min(b.level());
-        let (a, b) = (a.drop_to_level(l), b.drop_to_level(l));
+        let (a, b) = self.aligned_operands(a, b);
         Ciphertext {
             c0: a.c0.sub(&b.c0),
             c1: a.c1.sub(&b.c1),
-            scale: a.scale,
+            scale: a.scale.max(b.scale),
         }
     }
 
@@ -411,8 +572,9 @@ impl CkksContext {
         }
     }
 
-    /// Ciphertext multiplication with relinearization. Scale multiplies;
-    /// rescale afterwards to return near Δ.
+    /// Ciphertext multiplication with relinearization (hybrid key switch
+    /// of the s² term). Scale multiplies; rescale afterwards to return
+    /// near Δ.
     pub fn mul(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
         let l = a.level().min(b.level());
         let (a, b) = (a.drop_to_level(l), b.drop_to_level(l));
@@ -438,46 +600,139 @@ impl CkksContext {
         }
     }
 
-    /// Rotate slots left by `steps` (requires a rotation key generated for
-    /// exactly this step count).
-    pub fn rotate(&self, ct: &Ciphertext, steps: usize) -> Ciphertext {
-        let rk = self
-            .rot_keys
-            .get(&steps)
-            .unwrap_or_else(|| panic!("no rotation key for step {steps}"));
-        let c0g = ct.c0.automorphism(rk.galois);
-        let c1g = ct.c1.automorphism(rk.galois);
-        let (k0, k1) = self.key_switch(&c1g, &rk.key);
-        Ciphertext {
-            c0: c0g.add(&k0),
-            c1: k1,
-            scale: ct.scale,
-        }
+    /// Rotate slots left by `steps`. Returns a typed error (not a panic)
+    /// when no rotation key was generated for this step count — the
+    /// serving path surfaces this to the client instead of dying.
+    pub fn rotate(&self, ct: &Ciphertext, steps: usize) -> Result<Ciphertext> {
+        let dec = self.hoist(ct);
+        self.apply_hoisted(ct, &dec, steps)
     }
 
-    fn key_switch(&self, d: &RnsPoly, key: &SwitchKey) -> (RnsPoly, RnsPoly) {
-        let l = d.level();
-        let w = self.params.ksk_digit_bits;
-        let mask = (1u64 << w) - 1;
-        let mut c0 = RnsPoly::zero(&self.basis, l);
-        let mut c1 = RnsPoly::zero(&self.basis, l);
-        for i in 0..=l {
-            let digits = digit_count(self.basis.primes[i], w);
-            for t in 0..digits {
-                let shift = w * t as u32;
-                let drow: Vec<u64> = d.rows[i].iter().map(|&x| (x >> shift) & mask).collect();
-                // Digit values are < 2^w < every prime in the chain, so one
-                // row serves as the residue of the lifted digit everywhere.
-                let dpoly = RnsPoly {
-                    rows: vec![drow; l + 1],
-                    basis: Arc::clone(&self.basis),
-                };
-                let (b, a) = &key.keys[l][i][t];
-                c0 = c0.add(&dpoly.mul(b));
-                c1 = c1.add(&dpoly.mul(a));
-            }
+    /// Rotate by several step counts, sharing one hoisted decomposition —
+    /// the multi-rotation linear-layer primitive: decompose once, apply
+    /// many Galois maps.
+    pub fn rotate_hoisted(&self, ct: &Ciphertext, steps: &[usize]) -> Result<Vec<Ciphertext>> {
+        if steps.is_empty() {
+            return Ok(Vec::new());
         }
-        (c0, c1)
+        let dec = self.hoist(ct);
+        steps
+            .iter()
+            .map(|&r| self.apply_hoisted(ct, &dec, r))
+            .collect()
+    }
+
+    /// Compute the NTT-domain digit decomposition of `ct.c1`, extended to
+    /// Q_l·P — the expensive, rotation-independent half of a rotation.
+    pub fn hoist(&self, ct: &Ciphertext) -> HoistedDecomposition {
+        self.decompose_ntt(&ct.c1)
+    }
+
+    /// Apply one rotation using a precomputed decomposition of `ct.c1`.
+    pub fn apply_hoisted(
+        &self,
+        ct: &Ciphertext,
+        dec: &HoistedDecomposition,
+        steps: usize,
+    ) -> Result<Ciphertext> {
+        assert_eq!(
+            dec.level,
+            ct.level(),
+            "hoisted decomposition level does not match ciphertext"
+        );
+        let rk = self.rot_keys.get(&steps).ok_or_else(|| {
+            Error::msg(format!(
+                "no rotation key for step {steps} (keys exist for {:?})",
+                self.rotation_steps()
+            ))
+        })?;
+        let (e0, e1) = self.accumulate_key(dec, &rk.key);
+        // Keys are stored inverse-rotated: rotating the accumulated result
+        // gives Σ φ_g(D_i(c1))·ksk_i, the hoisted key switch for φ_g(c1).
+        let k0 = e0.mod_down().automorphism(rk.galois);
+        let k1 = e1.mod_down().automorphism(rk.galois);
+        Ok(Ciphertext {
+            c0: ct.c0.automorphism(rk.galois).add(&k0),
+            c1: k1,
+            scale: ct.scale,
+        })
+    }
+
+    /// Digit-decompose `d` and extend each digit to Q_l·P, NTT'd: digit i
+    /// is the residue row `[d]_{q_i}` (a single-prime fast basis extension
+    /// — the integer digit is < q_i, so reduction mod each target modulus
+    /// is the exact lift).
+    fn decompose_ntt(&self, d: &RnsPoly) -> HoistedDecomposition {
+        let l = d.level();
+        let p = self.basis.special;
+        let digits = (0..=l)
+            .map(|i| {
+                let digit = &d.rows[i];
+                let rows: Vec<Vec<u64>> = (0..=l)
+                    .map(|j| {
+                        let qj = self.basis.primes[j];
+                        let mut row: Vec<u64> =
+                            digit.iter().map(|&v| if v >= qj { v % qj } else { v }).collect();
+                        self.basis.ctxs[j].forward(&mut row);
+                        row
+                    })
+                    .collect();
+                let mut prow: Vec<u64> = digit.iter().map(|&v| v % p).collect();
+                self.basis.special_ctx.forward(&mut prow);
+                (rows, prow)
+            })
+            .collect();
+        HoistedDecomposition { digits, level: l }
+    }
+
+    /// Pointwise multiply-accumulate of decomposed digits against a
+    /// switching key, inverse-NTT'd back to coefficient-domain extended
+    /// polynomials (caller mod-downs).
+    fn accumulate_key(
+        &self,
+        dec: &HoistedDecomposition,
+        key: &SwitchKey,
+    ) -> (RnsPolyExt, RnsPolyExt) {
+        let l = dec.level;
+        let n = self.basis.n;
+        let p = self.basis.special;
+        let mut acc0_rows = vec![vec![0u64; n]; l + 1];
+        let mut acc1_rows = vec![vec![0u64; n]; l + 1];
+        let mut acc0_prow = vec![0u64; n];
+        let mut acc1_prow = vec![0u64; n];
+        for (i, (drows, dprow)) in dec.digits.iter().enumerate() {
+            let kd = &key.digits[i];
+            for j in 0..=l {
+                let qj = self.basis.primes[j];
+                madd_ntt(&mut acc0_rows[j], &drows[j], &kd.b_rows[j], qj);
+                madd_ntt(&mut acc1_rows[j], &drows[j], &kd.a_rows[j], qj);
+            }
+            madd_ntt(&mut acc0_prow, dprow, &kd.b_prow, p);
+            madd_ntt(&mut acc1_prow, dprow, &kd.a_prow, p);
+        }
+        let finish = |mut rows: Vec<Vec<u64>>, mut prow: Vec<u64>| -> RnsPolyExt {
+            for (row, ctx) in rows.iter_mut().zip(&self.basis.ctxs) {
+                ctx.inverse(row);
+            }
+            self.basis.special_ctx.inverse(&mut prow);
+            RnsPolyExt {
+                rows,
+                prow,
+                basis: Arc::clone(&self.basis),
+            }
+        };
+        (
+            finish(acc0_rows, acc0_prow),
+            finish(acc1_rows, acc1_prow),
+        )
+    }
+
+    /// Hybrid key switch: decompose, accumulate against the key, divide by
+    /// the special prime. `k0 + k1·s ≈ d·target` with noise ≈ L·N·σ·q/P.
+    fn key_switch(&self, d: &RnsPoly, key: &SwitchKey) -> (RnsPoly, RnsPoly) {
+        let dec = self.decompose_ntt(d);
+        let (e0, e1) = self.accumulate_key(&dec, key);
+        (e0.mod_down(), e1.mod_down())
     }
 }
 
@@ -591,7 +846,7 @@ mod tests {
         let x = rand_slots(&mut rng, slots);
         let cx = ctx.encrypt_values(&x, DELTA, &mut rng);
         for steps in [1usize, 3] {
-            let cr = ctx.rotate(&cx, steps);
+            let cr = ctx.rotate(&cx, steps).unwrap();
             let want: Vec<f64> = (0..slots).map(|j| x[(j + steps) % slots]).collect();
             let err = max_err(&ctx.decrypt(&cr), &want);
             assert!(err < 1e-4, "rot {steps} err {err}");
@@ -604,18 +859,119 @@ mod tests {
         let slots = ctx.slots();
         let x = rand_slots(&mut rng, slots);
         let cx = ctx.encrypt_values(&x, DELTA, &mut rng);
-        let c2 = ctx.rotate(&ctx.rotate(&cx, 1), 1);
+        let c2 = ctx.rotate(&ctx.rotate(&cx, 1).unwrap(), 1).unwrap();
         let want: Vec<f64> = (0..slots).map(|j| x[(j + 2) % slots]).collect();
         assert!(max_err(&ctx.decrypt(&c2), &want) < 1e-4);
     }
 
     #[test]
-    #[should_panic(expected = "no rotation key")]
-    fn missing_rotation_key_panics() {
+    fn rotation_works_at_low_level() {
+        // The single Q·P key must serve every level, including after
+        // rescales (the per-level ladder this replaced was born from
+        // exactly this case).
+        let (ctx, mut rng) = setup(&[2]);
+        let slots = ctx.slots();
+        let x = rand_slots(&mut rng, slots);
+        let mut c = ctx.encrypt_values(&x, DELTA, &mut rng);
+        let mut v = x.clone();
+        for _ in 0..3 {
+            c = ctx.rescale(&ctx.mul(&c, &c));
+            v = v.iter().map(|a| a * a).collect();
+        }
+        let cr = ctx.rotate(&c, 2).unwrap();
+        let want: Vec<f64> = (0..slots).map(|j| v[(j + 2) % slots]).collect();
+        let err = max_err(&ctx.decrypt(&cr), &want);
+        assert!(err < 1e-4, "low-level rot err {err}");
+    }
+
+    #[test]
+    fn missing_rotation_key_is_a_typed_error() {
+        let (ctx, mut rng) = setup(&[1]);
+        let x = rand_slots(&mut rng, ctx.slots());
+        let cx = ctx.encrypt_values(&x, DELTA, &mut rng);
+        let err = ctx.rotate(&cx, 5).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("no rotation key for step 5"), "{msg}");
+        assert!(msg.contains("[1]"), "should list available keys: {msg}");
+    }
+
+    #[test]
+    fn hoisted_rotations_match_sequential() {
+        let (ctx, mut rng) = setup(&[1, 2, 5]);
+        let slots = ctx.slots();
+        let x = rand_slots(&mut rng, slots);
+        let cx = ctx.encrypt_values(&x, DELTA, &mut rng);
+        let hoisted = ctx.rotate_hoisted(&cx, &[1, 2, 5]).unwrap();
+        for (ct, &steps) in hoisted.iter().zip(&[1usize, 2, 5]) {
+            // Bit-identical: rotate() is hoist + apply of the same digits.
+            let seq = ctx.rotate(&cx, steps).unwrap();
+            assert_eq!(ct.c0, seq.c0, "c0 differs for step {steps}");
+            assert_eq!(ct.c1, seq.c1, "c1 differs for step {steps}");
+            // And correct.
+            let want: Vec<f64> = (0..slots).map(|j| x[(j + steps) % slots]).collect();
+            assert!(max_err(&ctx.decrypt(ct), &want) < 1e-4);
+        }
+        // Missing keys error through the hoisted path too.
+        assert!(ctx.rotate_hoisted(&cx, &[1, 9]).is_err());
+    }
+
+    #[test]
+    fn drifted_scales_are_realigned_not_mislabeled() {
+        let (ctx, mut rng) = setup(&[]);
+        let x = rand_slots(&mut rng, ctx.slots());
+        let y = rand_slots(&mut rng, ctx.slots());
+        let cx = ctx.encrypt_values(&x, DELTA, &mut rng);
+        let cy = ctx.encrypt_values(&y, DELTA, &mut rng);
+        // Drift cy's scale: multiply by plaintext ones at Δ and rescale —
+        // scale becomes Δ²/q_top ≈ Δ·(1 ± 2^-15), a real drifted-rescale
+        // history relative to cx.
+        let ones = vec![1.0; ctx.slots()];
+        let cy_drift = ctx.rescale(&ctx.mul_plain(&cy, &ones, DELTA));
+        let drift = (cy_drift.scale - DELTA).abs() / DELTA;
+        assert!(drift > SCALE_ALIGN_RTOL, "test needs real drift, got {drift:.3e}");
+        let sum = ctx.add(&cx, &cy_drift);
+        let want: Vec<f64> = x.iter().zip(&y).map(|(a, b)| a + b).collect();
+        let err = max_err(&ctx.decrypt(&sum), &want);
+        // Without alignment the error would be ≈ drift·|y| ≈ 3e-5.
+        assert!(err < 1e-6, "aligned add err {err}");
+        assert_eq!(sum.level(), cy_drift.level() - 1, "alignment costs one level");
+        // And subtraction through the same path.
+        let dif = ctx.sub(&cx, &cy_drift);
+        let wantd: Vec<f64> = x.iter().zip(&y).map(|(a, b)| a - b).collect();
+        assert!(max_err(&ctx.decrypt(&dif), &wantd) < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "scale mismatch beyond repair")]
+    fn gross_scale_mismatch_panics_instead_of_overflowing() {
+        // Δ vs Δ² (a forgotten rescale) must not be silently "repaired" —
+        // the repair multiplication would wrap the modulus at low levels.
         let (ctx, mut rng) = setup(&[]);
         let x = rand_slots(&mut rng, ctx.slots());
         let cx = ctx.encrypt_values(&x, DELTA, &mut rng);
-        let _ = ctx.rotate(&cx, 1);
+        let cy = ctx.mul(&cx, &cx); // scale Δ², not rescaled
+        let _ = ctx.add(&cx, &cy);
+    }
+
+    #[test]
+    fn switch_key_memory_is_linear_in_levels() {
+        let (ctx, _) = setup(&[1]);
+        let top = ctx.max_level();
+        let n = ctx.params().n as u64;
+        // Per key: (L+1) digits × 2 polys × (L+2) rows × N × 8 bytes.
+        let per_key = (top as u64 + 1) * 2 * (top as u64 + 2) * n * 8;
+        assert_eq!(ctx.switch_key_bytes(), 2 * per_key); // relin + one rot key
+    }
+
+    #[test]
+    fn galois_inverse_inverts() {
+        for n in [8usize, 32, 1024] {
+            for steps in [1usize, 2, 3, 7] {
+                let g = galois_element(n, steps);
+                let gi = galois_inverse(g, n);
+                assert_eq!((g * gi) % (2 * n), 1, "n={n} steps={steps}");
+            }
+        }
     }
 
     #[test]

@@ -14,11 +14,14 @@
 //! * [`bfv`] — textbook FV/BFV over a single modulus: RLWE keygen,
 //!   encrypt/decrypt, add, plaintext ops, ciphertext multiplication with
 //!   base-2^w relinearization, and noise-budget tracking.
-//! * [`rns`] — the residue number system: NTT prime chains, [`rns::RnsPoly`]
-//!   ring elements in residue form, CRT compose/decompose, rescaling.
+//! * [`rns`] — the residue number system: NTT prime chains plus the
+//!   special prime P, [`rns::RnsPoly`] ring elements in residue form,
+//!   fast basis extension Q_l → Q_l·P and mod-down ([`rns::RnsPolyExt`]),
+//!   CRT compose/decompose, rescaling.
 //! * [`ckks`] — RNS-CKKS: canonical-embedding encoder, RLWE keygen with
-//!   relinearization + rotation keys (two-level RNS × base-2^w gadget),
-//!   add/mul/rescale/rotate — the substrate the real transcipher runs on.
+//!   hybrid special-modulus relinearization + rotation keys (one Q·P key
+//!   per target, per-prime digits), add/mul/rescale/rotate with hoisted
+//!   rotations — the substrate the real transcipher runs on.
 //! * [`transcipher`] — the RtF dataflow. The flagship path is
 //!   [`transcipher::CkksTranscipher`]: the server, holding only CKKS
 //!   encryptions of the HERA/Rubato key, homomorphically evaluates the
@@ -41,8 +44,8 @@ pub mod rns;
 pub mod transcipher;
 
 pub use bfv::{BfvParams, Ciphertext, KeyPair, SecretKeyHe};
-pub use ckks::{CkksContext, Complex, Encoder};
-pub use rns::{RnsBasis, RnsPoly};
+pub use ckks::{CkksContext, Complex, Encoder, HoistedDecomposition};
+pub use rns::{RnsBasis, RnsPoly, RnsPolyExt};
 pub use transcipher::{
     CkksCipherProfile, CkksTranscipher, ToyCipher, ToyParams, TranscipherServer,
 };

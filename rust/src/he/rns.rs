@@ -181,7 +181,15 @@ struct CrtTable {
     hat_inv: Vec<u64>,
 }
 
-/// The RNS basis: prime chain + per-prime NTT contexts + CRT tables.
+/// The RNS basis: prime chain + special prime + per-prime NTT contexts +
+/// CRT tables.
+///
+/// Besides the modulus chain q_0…q_L the basis carries one **special
+/// prime** P (strictly larger than every chain prime, also ≡ 1 mod 2N).
+/// Hybrid key switching holds switching keys over Q_L·P and divides the
+/// accumulated product by P ([`RnsPolyExt::mod_down`]), which shrinks the
+/// full-size digit noise below the working scale — the formulation Medha
+/// and the production CKKS libraries use.
 #[derive(Debug)]
 pub struct RnsBasis {
     /// Ring degree N.
@@ -190,6 +198,10 @@ pub struct RnsBasis {
     pub primes: Vec<u64>,
     /// NTT context for each prime.
     pub ctxs: Vec<Arc<NttContext>>,
+    /// The special prime P (> every chain prime, ≡ 1 mod 2N).
+    pub special: u64,
+    /// NTT context for P.
+    pub special_ctx: Arc<NttContext>,
     /// CRT composition tables, one per level.
     crt: Vec<CrtTable>,
 }
@@ -199,9 +211,11 @@ impl RnsBasis {
     /// `2^base_bits` and `levels` working primes just below `2^scale_bits`,
     /// all distinct, all ≡ 1 (mod 2N). Level ℓ of a ciphertext uses primes
     /// `0..=ℓ`; each rescale divides by the current top prime and drops it.
+    /// A special prime one bit wider than the base prime is generated
+    /// alongside for hybrid key switching.
     pub fn generate(n: usize, base_bits: u32, scale_bits: u32, levels: usize) -> Arc<RnsBasis> {
         assert!(n.is_power_of_two(), "N must be a power of two");
-        assert!(base_bits <= 61 && scale_bits <= 61, "primes must fit u64 NTT");
+        assert!(base_bits <= 60 && scale_bits <= 60, "primes must fit u64 NTT");
         assert!(base_bits >= scale_bits, "base prime should be the largest");
         let mut primes = find_ntt_primes(n, base_bits, 1, &[]);
         let working = find_ntt_primes(n, scale_bits, levels, &primes);
@@ -210,8 +224,18 @@ impl RnsBasis {
     }
 
     /// Build from an explicit prime chain (each ≡ 1 mod 2N, distinct).
+    /// The special prime is found one bit above the widest chain prime so
+    /// the digit-noise bound `|digit| < q_i ≤ P` always holds.
     pub fn from_primes(n: usize, primes: Vec<u64>) -> Arc<RnsBasis> {
         assert!(!primes.is_empty());
+        let max_bits = primes
+            .iter()
+            .map(|&q| 64 - q.leading_zeros())
+            .max()
+            .unwrap();
+        assert!(max_bits <= 60, "chain primes must leave room for P ≤ 2^61");
+        let special = find_ntt_primes(n, max_bits + 1, 1, &primes)[0];
+        let special_ctx = Arc::new(NttContext::new(special, n));
         let ctxs: Vec<Arc<NttContext>> = primes
             .iter()
             .map(|&q| Arc::new(NttContext::new(q, n)))
@@ -246,6 +270,8 @@ impl RnsBasis {
             n,
             primes,
             ctxs,
+            special,
+            special_ctx,
             crt,
         })
     }
@@ -265,8 +291,9 @@ impl RnsBasis {
         self.primes[..=level].iter().map(|&q| (q as f64).log2()).sum()
     }
 
-    /// `(Q_l / q_i) mod q_j` — key-switching keys are generated per level,
-    /// each with the RNS gadget of its own modulus Q_l.
+    /// `(Q_l / q_i) mod q_j` — the RNS gadget factor; hybrid key switching
+    /// evaluates it once at the top level (the gadget congruence holds
+    /// modulo each prime individually, so top-level keys serve every level).
     pub fn hat_mod_at(&self, level: usize, i: usize, j: usize) -> u64 {
         self.crt[level].hat[i].rem_u64(self.primes[j])
     }
@@ -274,6 +301,29 @@ impl RnsBasis {
     /// `(Q_l / q_i)^{-1} mod q_i`.
     pub fn hat_inv_at(&self, level: usize, i: usize) -> u64 {
         self.crt[level].hat_inv[i]
+    }
+
+    /// Fast (approximate) basis extension: given residues of x modulo the
+    /// chain prefix `q_0..q_l` (`rows`), compute a residue row modulo the
+    /// coprime modulus `m` of some lift `x + α·Q_l` with `0 ≤ α ≤ l+1` —
+    /// the HPS/Bajard approximate CRT lift, exact enough for key switching
+    /// because the α·Q_l slack is absorbed by the mod-P division. O(l·N)
+    /// u64 multiplies, no big integers on the per-coefficient path.
+    pub fn fast_basis_extend(&self, rows: &[Vec<u64>], m: u64) -> Vec<u64> {
+        let level = rows.len() - 1;
+        let tab = &self.crt[level];
+        // (Q_l / q_i) mod m, computed once per call (off the per-coeff path).
+        let hat_mod_m: Vec<u64> = tab.hat.iter().map(|h| h.rem_u64(m)).collect();
+        (0..self.n)
+            .map(|k| {
+                let mut acc = 0u64;
+                for i in 0..=level {
+                    let y = mod_mul64(rows[i][k], tab.hat_inv[i], self.primes[i]);
+                    acc = (acc + mod_mul64(y % m, hat_mod_m[i], m)) % m;
+                }
+                acc
+            })
+            .collect()
     }
 
     /// CRT-compose one coefficient (residue column `k` of `rows`) into its
@@ -312,6 +362,47 @@ fn find_ntt_primes(n: usize, bits: u32, count: usize, exclude: &[u64]) -> Vec<u6
             out.push(q);
         }
         q -= step;
+    }
+    out
+}
+
+// ---- row-wise primitives shared by RnsPoly and RnsPolyExt ----
+
+fn add_row(a: &[u64], b: &[u64], q: u64) -> Vec<u64> {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let s = x + y;
+            if s >= q {
+                s - q
+            } else {
+                s
+            }
+        })
+        .collect()
+}
+
+fn sub_row(a: &[u64], b: &[u64], q: u64) -> Vec<u64> {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| if x >= y { x - y } else { x + q - y })
+        .collect()
+}
+
+fn neg_row(a: &[u64], q: u64) -> Vec<u64> {
+    a.iter().map(|&x| if x == 0 { 0 } else { q - x }).collect()
+}
+
+/// Galois map X → X^g on one residue row (negacyclic sign rule).
+fn aut_row(a: &[u64], g: usize, q: u64, n: usize) -> Vec<u64> {
+    let mut out = vec![0u64; n];
+    for (i, &c) in a.iter().enumerate() {
+        let j = (i * g) % (2 * n);
+        if j < n {
+            out[j] = c;
+        } else {
+            out[j - n] = if c == 0 { 0 } else { q - c };
+        }
     }
     out
 }
@@ -412,19 +503,7 @@ impl RnsPoly {
             .iter()
             .zip(&other.rows)
             .zip(&self.basis.primes)
-            .map(|((a, b), &q)| {
-                a.iter()
-                    .zip(b)
-                    .map(|(&x, &y)| {
-                        let s = x + y;
-                        if s >= q {
-                            s - q
-                        } else {
-                            s
-                        }
-                    })
-                    .collect()
-            })
+            .map(|((a, b), &q)| add_row(a, b, q))
             .collect();
         RnsPoly {
             rows,
@@ -440,12 +519,7 @@ impl RnsPoly {
             .iter()
             .zip(&other.rows)
             .zip(&self.basis.primes)
-            .map(|((a, b), &q)| {
-                a.iter()
-                    .zip(b)
-                    .map(|(&x, &y)| if x >= y { x - y } else { x + q - y })
-                    .collect()
-            })
+            .map(|((a, b), &q)| sub_row(a, b, q))
             .collect();
         RnsPoly {
             rows,
@@ -459,11 +533,7 @@ impl RnsPoly {
             .rows
             .iter()
             .zip(&self.basis.primes)
-            .map(|(a, &q)| {
-                a.iter()
-                    .map(|&x| if x == 0 { 0 } else { q - x })
-                    .collect()
-            })
+            .map(|(a, &q)| neg_row(a, q))
             .collect();
         RnsPoly {
             rows,
@@ -514,18 +584,7 @@ impl RnsPoly {
             .rows
             .iter()
             .zip(&self.basis.primes)
-            .map(|(a, &q)| {
-                let mut out = vec![0u64; n];
-                for (i, &c) in a.iter().enumerate() {
-                    let j = (i * g) % (2 * n);
-                    if j < n {
-                        out[j] = c;
-                    } else {
-                        out[j - n] = if c == 0 { 0 } else { q - c };
-                    }
-                }
-                out
-            })
+            .map(|(a, &q)| aut_row(a, g, q, n))
             .collect();
         RnsPoly {
             rows,
@@ -578,6 +637,186 @@ impl RnsPoly {
                 .collect();
             rows.push(row);
         }
+        RnsPoly {
+            rows,
+            basis: Arc::clone(&self.basis),
+        }
+    }
+
+    /// Mod-up Q_l → Q_l·P: append a special-prime row via fast basis
+    /// extension. The result represents `x + α·Q_l` for some small α ≥ 0
+    /// (see [`RnsBasis::fast_basis_extend`]); `mod_down` after multiplying
+    /// by P-scaled key material removes the slack.
+    pub fn mod_up(&self) -> RnsPolyExt {
+        RnsPolyExt {
+            prow: self.basis.fast_basis_extend(&self.rows, self.basis.special),
+            rows: self.rows.clone(),
+            basis: Arc::clone(&self.basis),
+        }
+    }
+}
+
+/// A ring element of R_{Q_l·P}: chain rows plus one special-prime row.
+///
+/// This is the working representation of hybrid key switching: switching
+/// keys live over Q_L·P, the digit×key products are accumulated here, and
+/// [`RnsPolyExt::mod_down`] divides by P with centered rounding to return
+/// to R_{Q_l}.
+#[derive(Debug, Clone)]
+pub struct RnsPolyExt {
+    /// Chain residue rows `q_0..q_l` (canonical `[0, q_i)`).
+    pub rows: Vec<Vec<u64>>,
+    /// Residues modulo the special prime P.
+    pub prow: Vec<u64>,
+    /// Shared basis.
+    pub basis: Arc<RnsBasis>,
+}
+
+impl PartialEq for RnsPolyExt {
+    fn eq(&self, other: &Self) -> bool {
+        self.basis.primes == other.basis.primes
+            && self.basis.special == other.basis.special
+            && self.rows == other.rows
+            && self.prow == other.prow
+    }
+}
+
+impl Eq for RnsPolyExt {}
+
+impl RnsPolyExt {
+    /// Zero element at `level`.
+    pub fn zero(basis: &Arc<RnsBasis>, level: usize) -> RnsPolyExt {
+        RnsPolyExt {
+            rows: (0..=level).map(|_| vec![0u64; basis.n]).collect(),
+            prow: vec![0u64; basis.n],
+            basis: Arc::clone(basis),
+        }
+    }
+
+    /// Current level (chain rows − 1).
+    pub fn level(&self) -> usize {
+        self.rows.len() - 1
+    }
+
+    /// From signed integer coefficients (reduced into every row, P
+    /// included) — used for key material (s, e), which is small and exact.
+    pub fn from_i64_coeffs(basis: &Arc<RnsBasis>, coeffs: &[i64], level: usize) -> RnsPolyExt {
+        assert_eq!(coeffs.len(), basis.n);
+        let row_for = |q: u64| -> Vec<u64> {
+            coeffs.iter().map(|&c| c.rem_euclid(q as i64) as u64).collect()
+        };
+        RnsPolyExt {
+            rows: basis.primes[..=level].iter().map(|&q| row_for(q)).collect(),
+            prow: row_for(basis.special),
+            basis: Arc::clone(basis),
+        }
+    }
+
+    /// Uniformly random element of R_{Q_l·P}.
+    pub fn uniform(basis: &Arc<RnsBasis>, rng: &mut SplitMix64, level: usize) -> RnsPolyExt {
+        RnsPolyExt {
+            rows: basis.primes[..=level]
+                .iter()
+                .map(|&q| (0..basis.n).map(|_| rng.below(q)).collect())
+                .collect(),
+            prow: (0..basis.n).map(|_| rng.below(basis.special)).collect(),
+            basis: Arc::clone(basis),
+        }
+    }
+
+    /// `self + other` (matching levels).
+    pub fn add(&self, other: &RnsPolyExt) -> RnsPolyExt {
+        assert_eq!(self.level(), other.level(), "level mismatch in ext add");
+        RnsPolyExt {
+            rows: self
+                .rows
+                .iter()
+                .zip(&other.rows)
+                .zip(&self.basis.primes)
+                .map(|((a, b), &q)| add_row(a, b, q))
+                .collect(),
+            prow: add_row(&self.prow, &other.prow, self.basis.special),
+            basis: Arc::clone(&self.basis),
+        }
+    }
+
+    /// `-self`.
+    pub fn neg(&self) -> RnsPolyExt {
+        RnsPolyExt {
+            rows: self
+                .rows
+                .iter()
+                .zip(&self.basis.primes)
+                .map(|(a, &q)| neg_row(a, q))
+                .collect(),
+            prow: neg_row(&self.prow, self.basis.special),
+            basis: Arc::clone(&self.basis),
+        }
+    }
+
+    /// Negacyclic NTT product per row (matching levels).
+    pub fn mul(&self, other: &RnsPolyExt) -> RnsPolyExt {
+        assert_eq!(self.level(), other.level(), "level mismatch in ext mul");
+        RnsPolyExt {
+            rows: self
+                .rows
+                .iter()
+                .zip(&other.rows)
+                .zip(&self.basis.ctxs)
+                .map(|((a, b), ctx)| ctx.multiply(a, b))
+                .collect(),
+            prow: self.basis.special_ctx.multiply(&self.prow, &other.prow),
+            basis: Arc::clone(&self.basis),
+        }
+    }
+
+    /// Galois automorphism X → X^g on every row.
+    pub fn automorphism(&self, g: usize) -> RnsPolyExt {
+        let n = self.basis.n;
+        assert_eq!(g % 2, 1, "galois element must be odd");
+        RnsPolyExt {
+            rows: self
+                .rows
+                .iter()
+                .zip(&self.basis.primes)
+                .map(|(a, &q)| aut_row(a, g, q, n))
+                .collect(),
+            prow: aut_row(&self.prow, g, self.basis.special, n),
+            basis: Arc::clone(&self.basis),
+        }
+    }
+
+    /// Mod-down Q_l·P → Q_l: centered-rounding division by P, the exact
+    /// counterpart of [`RnsPoly::rescale_top`] with the special prime as
+    /// divisor. The result is within 1/2 (per coefficient) of x / P.
+    pub fn mod_down(&self) -> RnsPoly {
+        let p = self.basis.special;
+        let half = p / 2;
+        let rows = self
+            .rows
+            .iter()
+            .zip(&self.basis.primes)
+            .map(|(row, &qj)| {
+                let inv = mod_pow64(p % qj, qj - 2, qj);
+                row.iter()
+                    .zip(&self.prow)
+                    .map(|(&xj, &xp)| {
+                        let xc = if xp > half {
+                            let r = (p - xp) % qj;
+                            if r == 0 {
+                                0
+                            } else {
+                                qj - r
+                            }
+                        } else {
+                            xp % qj
+                        };
+                        let diff = if xj >= xc { xj - xc } else { xj + qj - xc };
+                        mod_mul64(diff, inv, qj)
+                    })
+                    .collect()
+            })
+            .collect();
         RnsPoly {
             rows,
             basis: Arc::clone(&self.basis),
@@ -774,6 +1013,143 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn special_prime_is_wider_distinct_and_ntt_friendly() {
+        let b = basis();
+        let p = b.special;
+        assert!(Zq::is_prime(p));
+        assert_eq!((p - 1) % (2 * b.n as u64), 0, "P must be ≡ 1 mod 2N");
+        assert!(!b.primes.contains(&p));
+        for &q in &b.primes {
+            assert!(p > q, "P must dominate every chain prime");
+        }
+    }
+
+    #[test]
+    fn fast_basis_extension_lifts_with_small_alpha() {
+        // FBE(x) ≡ x + α·Q_l (mod P) with 0 ≤ α ≤ l+1.
+        let b = basis();
+        let p = b.special;
+        let mut rng = SplitMix64::new(11);
+        for level in [1usize, b.max_level()] {
+            let coeffs: Vec<i64> = (0..b.n)
+                .map(|_| rng.next_u64() as i64 >> 8) // ~±2^55, spans the chain
+                .collect();
+            let x = RnsPoly::from_i64_coeffs(&b, &coeffs, level);
+            let lifted = b.fast_basis_extend(&x.rows, p);
+            let ql_mod_p = b.modulus_at(level).rem_u64(p);
+            for (k, &c) in coeffs.iter().enumerate() {
+                let x_mod_p = c.rem_euclid(p as i64) as u64;
+                let diff = (lifted[k] + p - x_mod_p) % p;
+                // Negative x adds one extra Q_l to reach the canonical
+                // [0, Q_l) representative before the α ≤ l+1 lift slack.
+                let alpha_ok = (0..=level as u64 + 2)
+                    .any(|alpha| diff == mod_mul64(alpha, ql_mod_p, p));
+                assert!(alpha_ok, "coeff {k}: lift slack is not a small α·Q_l");
+            }
+        }
+    }
+
+    #[test]
+    fn mod_up_lifts_consistently() {
+        // mod_up keeps the chain rows and computes the FBE prow; the lifted
+        // element is ≡ x (mod Q_l) by construction, and scaling it by P
+        // then mod-downing recovers the lift exactly (x + α·Q_l ≡ x mod Q_l).
+        let b = basis();
+        let level = b.max_level();
+        let mut rng = SplitMix64::new(15);
+        let coeffs: Vec<i64> = (0..b.n)
+            .map(|_| (rng.below(1 << 45) as i64) - (1 << 44))
+            .collect();
+        let x = RnsPoly::from_i64_coeffs(&b, &coeffs, level);
+        let up = x.mod_up();
+        assert_eq!(up.rows, x.rows, "mod_up must not disturb the chain rows");
+        assert_eq!(up.prow, b.fast_basis_extend(&x.rows, b.special));
+        // Multiply the lift by P across the extended basis and mod-down:
+        // round((x + α·Q_l)·P / P) ≡ x (mod Q_l).
+        let p = b.special;
+        let scaled = RnsPolyExt {
+            rows: up
+                .rows
+                .iter()
+                .zip(&b.primes)
+                .map(|(row, &q)| row.iter().map(|&v| mod_mul64(v, p % q, q)).collect())
+                .collect(),
+            prow: vec![0u64; b.n],
+            basis: Arc::clone(&b),
+        };
+        assert_eq!(scaled.mod_down(), x);
+    }
+
+    #[test]
+    fn mod_down_inverts_multiplication_by_p() {
+        // x·P over the extended basis (prow ≡ 0) mod-downs to exactly x.
+        let b = basis();
+        let level = b.max_level();
+        let p = b.special;
+        let mut rng = SplitMix64::new(12);
+        let coeffs: Vec<i64> = (0..b.n)
+            .map(|_| (rng.below(1 << 40) as i64) - (1 << 39))
+            .collect();
+        let x = RnsPoly::from_i64_coeffs(&b, &coeffs, level);
+        let xp = RnsPolyExt {
+            rows: x
+                .rows
+                .iter()
+                .zip(&b.primes)
+                .map(|(row, &q)| row.iter().map(|&v| mod_mul64(v, p % q, q)).collect())
+                .collect(),
+            prow: vec![0u64; b.n],
+            basis: Arc::clone(&b),
+        };
+        assert_eq!(xp.mod_down(), x);
+    }
+
+    #[test]
+    fn mod_down_rounds_to_nearest() {
+        // For an exact x over Q·P, mod_down lands within 1/2 of x / P.
+        let b = basis();
+        let level = b.max_level();
+        let p = b.special as f64;
+        let mut rng = SplitMix64::new(13);
+        let coeffs: Vec<i64> = (0..b.n)
+            .map(|_| rng.next_u64() as i64 >> 2) // ~±2^61
+            .collect();
+        let x = RnsPolyExt::from_i64_coeffs(&b, &coeffs, level);
+        let down = x.mod_down().centered_f64();
+        for (k, &c) in coeffs.iter().enumerate() {
+            let exact = c as f64 / p;
+            assert!(
+                (down[k] - exact).abs() <= 0.5 + 1e-6,
+                "coeff {k}: {} vs {exact}",
+                down[k]
+            );
+        }
+    }
+
+    #[test]
+    fn ext_ring_ops_and_automorphism_match_plain() {
+        let b = basis();
+        let mut rng = SplitMix64::new(14);
+        let level = 2;
+        let pa = RnsPolyExt::uniform(&b, &mut rng, level);
+        let pb = RnsPolyExt::uniform(&b, &mut rng, level);
+        let sum = pa.add(&pb);
+        assert_eq!(sum.level(), level);
+        assert_eq!(pa.add(&pb.neg()).add(&pb), sum);
+        // Chain rows of ext mul agree with RnsPoly::mul on the same rows.
+        let qa = RnsPoly {
+            rows: pa.rows.clone(),
+            basis: Arc::clone(&b),
+        };
+        let qb = RnsPoly {
+            rows: pb.rows.clone(),
+            basis: Arc::clone(&b),
+        };
+        assert_eq!(pa.mul(&pb).rows, qa.mul(&qb).rows);
+        assert_eq!(pa.automorphism(5).rows, qa.automorphism(5).rows);
     }
 
     #[test]

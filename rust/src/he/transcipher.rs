@@ -27,8 +27,10 @@
 
 use super::bfv::{Ciphertext, SecretKeyHe};
 use super::ckks::{self, CkksContext};
+use crate::bail;
 use crate::params::{ParamSet, Scheme, RUBATO_SIGMA};
 use crate::sampler::{DiscreteGaussian, RejectionSampler};
+use crate::util::error::Result;
 use crate::util::rng::SplitMix64;
 use crate::xof::{Xof, XofKind};
 
@@ -706,6 +708,50 @@ impl CkksTranscipher {
         ks
     }
 
+    /// Multi-rotation slot linear layer on a transciphered output:
+    /// `out = Σ_(step, diag) diag ⊙ rot(ct, step)` — the cross-block
+    /// post-processing map (windowed aggregation, pooling, any diagonal
+    /// matrix-vector product over the slot/batch dimension).
+    ///
+    /// All nonzero rotation steps share **one hoisted decomposition** of
+    /// the input ([`CkksContext::rotate_hoisted`]): the digit
+    /// decomposition + forward NTTs are paid once, each additional
+    /// rotation is pointwise multiply-accumulate + mod-down. Diagonal
+    /// weights are applied at the dropping prime's scale and the sum is
+    /// rescaled once, so the layer costs one level and returns near the
+    /// input scale. A rotation step with no registered key surfaces as a
+    /// typed error, not a panic.
+    pub fn slot_linear(
+        &self,
+        ctx: &CkksContext,
+        ct: &ckks::Ciphertext,
+        diags: &[(usize, Vec<f64>)],
+    ) -> Result<ckks::Ciphertext> {
+        if diags.is_empty() {
+            bail!("slot_linear needs at least one diagonal");
+        }
+        if ct.level() == 0 {
+            bail!("slot_linear needs one level for the diagonal rescale");
+        }
+        let sigma = ctx.prime_at(ct.level()) as f64;
+        let steps: Vec<usize> = diags.iter().map(|&(s, _)| s).filter(|&s| s != 0).collect();
+        let mut rot_iter = ctx.rotate_hoisted(ct, &steps)?.into_iter();
+        let mut acc: Option<ckks::Ciphertext> = None;
+        for (step, diag) in diags {
+            let src = if *step == 0 {
+                ct.clone()
+            } else {
+                rot_iter.next().expect("one rotation per nonzero step")
+            };
+            let term = ctx.mul_plain(&src, diag, sigma);
+            acc = Some(match acc {
+                None => term,
+                Some(a) => ctx.add(&a, &term),
+            });
+        }
+        Ok(ctx.rescale(&acc.expect("diags nonempty")))
+    }
+
     /// Transcipher a batch: symmetric ciphertexts in, CKKS ciphertexts
     /// out. `sym_blocks[b]` is block b's symmetric ciphertext (l values);
     /// output ciphertext i holds message element i of every block in its
@@ -905,6 +951,37 @@ mod tests {
         // Rubato AGN is nonzero and counter-dependent; HERA's is zero.
         assert!(h.agn_noise(1, 2).iter().all(|&x| x == 0.0));
         assert!(r.agn_noise(1, 2).iter().any(|&x| x != 0.0) || r.agn_noise(1, 3).iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn slot_linear_matches_plain_and_errors_on_missing_key() {
+        let p = CkksCipherProfile::from_params(&ParamSet::rubato_128s(), 1);
+        let ctx = CkksContext::generate(CkksParams::with_shape(32, 3), 17, &[1, 2]);
+        let mut rng = SplitMix64::new(8);
+        let key = p.sample_key(4);
+        let server = CkksTranscipher::setup(p, &ctx, &key, &mut rng);
+        let slots = ctx.slots();
+        let x: Vec<f64> = (0..slots).map(|_| rng.next_f64() - 0.5).collect();
+        let ct = ctx.encrypt_values(&x, ctx.params().delta(), &mut rng);
+        let diags: Vec<(usize, Vec<f64>)> = [0usize, 1, 2]
+            .iter()
+            .map(|&s| (s, (0..slots).map(|_| rng.next_f64() - 0.5).collect()))
+            .collect();
+        let out = server.slot_linear(&ctx, &ct, &diags).unwrap();
+        assert_eq!(out.level(), ct.level() - 1);
+        let got = ctx.decrypt_real(&out);
+        for j in 0..slots {
+            let want: f64 = diags
+                .iter()
+                .map(|(s, w)| w[j] * x[(j + s) % slots])
+                .sum();
+            assert!((got[j] - want).abs() < 1e-4, "slot {j}: {} vs {want}", got[j]);
+        }
+        // A step without a key is a typed error through the serving path.
+        let err = server
+            .slot_linear(&ctx, &ct, &[(5, vec![1.0; slots])])
+            .unwrap_err();
+        assert!(err.to_string().contains("no rotation key"), "{err}");
     }
 
     #[test]

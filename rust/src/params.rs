@@ -171,7 +171,9 @@ impl ParamSet {
 ///
 /// The ciphertext modulus is a chain of NTT primes: one `base_bits` prime
 /// for decryption headroom plus `levels` working primes of `scale_bits`
-/// each, one consumed per rescale. `log2 Q ≈ base_bits + levels·scale_bits`
+/// each, one consumed per rescale, plus a key-switching special prime P
+/// one bit above the base prime (generated by the RNS basis, not listed
+/// here). `log2 Q ≈ base_bits + levels·scale_bits`
 /// is the depth budget; the transcipher profiles in
 /// [`crate::he::transcipher`] state how many levels each round consumes
 /// (HERA: 3 per round, Rubato: 2, plus one for the initial ARK).
@@ -187,9 +189,6 @@ pub struct CkksParams {
     pub levels: usize,
     /// RLWE error standard deviation.
     pub sigma: f64,
-    /// Digit width of the key-switching gadget's second (base-2^w)
-    /// decomposition. Smaller ⇒ less key-switching noise, more keys.
-    pub ksk_digit_bits: u32,
 }
 
 impl CkksParams {
@@ -202,7 +201,6 @@ impl CkksParams {
             scale_bits: 40,
             levels: 7,
             sigma: 3.2,
-            ksk_digit_bits: 12,
         }
     }
 
@@ -214,7 +212,6 @@ impl CkksParams {
             scale_bits: 40,
             levels: 7,
             sigma: 3.2,
-            ksk_digit_bits: 12,
         }
     }
 

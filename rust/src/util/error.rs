@@ -43,6 +43,13 @@ impl fmt::Debug for Error {
 
 impl std::error::Error for Error {}
 
+#[cfg(feature = "xla")]
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Error {
+        Error::msg(e)
+    }
+}
+
 /// Crate-wide result alias (mirrors `anyhow::Result`).
 pub type Result<T, E = Error> = std::result::Result<T, E>;
 

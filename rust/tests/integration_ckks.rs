@@ -7,7 +7,7 @@
 use presto::coordinator::{TranscipherConfig, TranscipherService};
 use presto::he::ckks::CkksContext;
 use presto::he::ntt::NttContext;
-use presto::he::rns::RnsBasis;
+use presto::he::rns::{RnsBasis, RnsPoly, RnsPolyExt};
 use presto::he::transcipher::{CkksCipherProfile, CkksTranscipher};
 use presto::params::CkksParams;
 use presto::rtf::CkksRtfCodec;
@@ -116,11 +116,116 @@ fn ckks_mul_and_rotate_integration() {
     let cy = ctx.encrypt_values(&y, DELTA, &mut rng);
     // (x·y) rotated by 2 slots.
     let prod = ctx.rescale(&ctx.mul(&cx, &cy));
-    let rot = ctx.rotate(&prod, 2);
+    let rot = ctx.rotate(&prod, 2).expect("rotation key for step 2");
     let d = ctx.decrypt_real(&rot);
     for j in 0..slots {
         let want = x[(j + 2) % slots] * y[(j + 2) % slots];
         assert!((d[j] - want).abs() < 1e-4, "slot {j}: {} vs {want}", d[j]);
+    }
+}
+
+#[test]
+fn property_basis_extension_and_mod_down_bounds() {
+    // The hybrid key-switching primitives, as properties over random ring
+    // elements:
+    //  * mod-down error bound — for an exact x over Q·P, mod_down(x) is
+    //    within 1/2 of x/P per coefficient;
+    //  * basis-extension round-trip — multiplying the chain rows by P
+    //    (prow ≡ 0) and mod-downing returns x exactly, and the FBE lift
+    //    agrees with x modulo every chain prime (the slack is a multiple
+    //    of Q_l, invisible in the chain basis).
+    let basis = RnsBasis::generate(64, 50, 40, 4);
+    let level = basis.max_level();
+    let p = basis.special;
+    struct CoeffVec {
+        len: usize,
+    }
+    impl Gen for CoeffVec {
+        type Value = Vec<i64>;
+        fn generate(&self, rng: &mut SplitMix64) -> Vec<i64> {
+            (0..self.len).map(|_| rng.next_u64() as i64 >> 4).collect()
+        }
+    }
+    check(
+        Config {
+            cases: 24,
+            ..Config::default()
+        },
+        &CoeffVec { len: basis.n },
+        |coeffs| {
+            // mod-down error bound.
+            let xext = RnsPolyExt::from_i64_coeffs(&basis, coeffs, level);
+            let down = xext.mod_down().centered_f64();
+            let bound_ok = coeffs
+                .iter()
+                .zip(&down)
+                .all(|(&c, &d)| (d - c as f64 / p as f64).abs() <= 0.5 + 1e-6);
+            // round-trip: P·x mod-downs back to x exactly.
+            let x = RnsPoly::from_i64_coeffs(&basis, coeffs, level);
+            let px = RnsPolyExt {
+                rows: x
+                    .rows
+                    .iter()
+                    .zip(&basis.primes)
+                    .map(|(row, &q)| {
+                        let pm = p % q;
+                        row.iter()
+                            .map(|&v| ((v as u128 * pm as u128) % q as u128) as u64)
+                            .collect()
+                    })
+                    .collect(),
+                prow: vec![0u64; basis.n],
+                basis: basis.clone(),
+            };
+            let roundtrip_ok = px.mod_down() == x;
+            // FBE lift is ≡ x mod P up to a multiple of Q_l.
+            let lifted = basis.fast_basis_extend(&x.rows, p);
+            let ql_mod_p = {
+                let mut m = 1u128;
+                for &q in &basis.primes[..=level] {
+                    m = m * q as u128 % p as u128;
+                }
+                m as u64
+            };
+            let fbe_ok = coeffs.iter().zip(&lifted).all(|(&c, &l2)| {
+                let xr = c.rem_euclid(p as i64) as u64;
+                let diff = (l2 + p - xr) % p;
+                (0..=level as u128 + 2)
+                    .any(|a| diff as u128 == a * ql_mod_p as u128 % p as u128)
+            });
+            bound_ok && roundtrip_ok && fbe_ok
+        },
+    );
+}
+
+#[test]
+fn hoisted_rotations_equal_sequential_and_compose() {
+    // One hoisted decomposition must reproduce each sequential rotation
+    // bit-for-bit, at top level and after rescales.
+    let ctx = CkksContext::generate(CkksParams::with_shape(64, 4), 31, &[1, 3, 7]);
+    let mut rng = SplitMix64::new(12);
+    let slots = ctx.slots();
+    let x: Vec<f64> = (0..slots).map(|_| rng.next_f64() - 0.5).collect();
+    let cx = ctx.encrypt_values(&x, DELTA, &mut rng);
+    let low = ctx.rescale(&ctx.mul(&cx, &cx)); // level top−1, scale ≈ Δ
+    for ct in [&cx, &low] {
+        let steps = [1usize, 3, 7];
+        let hoisted = ctx.rotate_hoisted(ct, &steps).expect("keys registered");
+        for (h, &s) in hoisted.iter().zip(&steps) {
+            let seq = ctx.rotate(ct, s).expect("keys registered");
+            assert_eq!(h.c0, seq.c0, "hoisted c0 differs at step {s}");
+            assert_eq!(h.c1, seq.c1, "hoisted c1 differs at step {s}");
+        }
+    }
+    // Numerical correctness of the hoisted results at the low level.
+    let v: Vec<f64> = x.iter().map(|a| a * a).collect();
+    for &s in &[1usize, 3, 7] {
+        let rot = ctx.rotate(&low, s).unwrap();
+        let d = ctx.decrypt_real(&rot);
+        for j in 0..slots {
+            let want = v[(j + s) % slots];
+            assert!((d[j] - want).abs() < 1e-4, "step {s} slot {j}");
+        }
     }
 }
 
@@ -189,6 +294,7 @@ fn transcipher_service_full_flow_with_codec() {
         ckks: CkksParams::with_shape(64, levels),
         seed: 4,
         nonce: 9,
+        rotations: vec![],
     })
     .unwrap();
     let codec = CkksRtfCodec::new(25.0, svc.profile().error_bound());

@@ -47,12 +47,14 @@ fn end_to_end_roundtrip_through_xla_engine() {
     let server = xla_server(p, 2);
     let codec = server.codec();
     let msg: Vec<f64> = (0..p.l).map(|i| (i as f64 - 30.0) / 4.0).collect();
-    let resp = server.encrypt(Request {
-        id: 1,
-        session: 1,
-        arrival_s: 0.0,
-        message: msg.clone(),
-    });
+    let resp = server
+        .encrypt(Request {
+            id: 1,
+            session: 1,
+            arrival_s: 0.0,
+            message: msg.clone(),
+        })
+        .expect("encrypt");
     let decoded = decrypt(p, &resp, msg.len());
     for (a, b) in msg.iter().zip(&decoded) {
         assert!((a - b).abs() <= codec.quantization_bound() + 1e-9, "{a} vs {b}");
@@ -72,7 +74,10 @@ fn concurrent_workload_is_lossless_and_correct() {
         reqs.iter().map(|r| (r.id, r.message.clone())).collect();
 
     // Submit all, then collect.
-    let rxs: Vec<_> = reqs.into_iter().map(|r| (r.id, server.submit(r))).collect();
+    let rxs: Vec<_> = reqs
+        .into_iter()
+        .map(|r| (r.id, server.submit(r).expect("submit")))
+        .collect();
     let codec = server.codec();
     for ((id, rx), (oid, msg)) in rxs.into_iter().zip(&originals) {
         assert_eq!(id, *oid);
@@ -96,12 +101,14 @@ fn per_session_counters_never_repeat() {
     let server = xla_server(p, 1);
     let mut seen = std::collections::HashSet::new();
     for i in 0..24 {
-        let resp = server.encrypt(Request {
-            id: i,
-            session: 0,
-            arrival_s: 0.0,
-            message: vec![0.25; 4],
-        });
+        let resp = server
+            .encrypt(Request {
+                id: i,
+                session: 0,
+                arrival_s: 0.0,
+                message: vec![0.25; 4],
+            })
+            .expect("encrypt");
         assert!(
             seen.insert((resp.nonce, resp.counter)),
             "keystream block reuse: ({}, {})",

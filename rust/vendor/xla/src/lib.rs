@@ -1,0 +1,177 @@
+//! API-surface stub of the `xla` PJRT bindings.
+//!
+//! Mirrors exactly the types and signatures `presto::runtime` calls so the
+//! `xla` cargo feature compiles without the real (unvendored) bindings:
+//! the PJRT client constructs, but loading/compiling/executing returns a
+//! typed error directing the operator to vendor the real crate. This keeps
+//! the feature-gated code path building in CI — API drift in
+//! `runtime/mod.rs` fails the `cargo check --features xla` job instead of
+//! rotting silently.
+
+use std::fmt;
+
+/// Stub error: every fallible entry point returns this.
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn stub(what: &str) -> Error {
+        Error {
+            msg: format!(
+                "{what}: xla stub build — vendor the real PJRT bindings in \
+                 rust/vendor/xla to execute artifacts"
+            ),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result alias (mirrors the bindings crate).
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// A host literal (dense array) — carries real data so pack/reshape code
+/// paths type-check and run up to the execute boundary.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Vec<u64>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from u64 values.
+    pub fn vec1(v: &[u64]) -> Literal {
+        Literal {
+            data: v.to_vec(),
+            dims: vec![v.len() as i64],
+        }
+    }
+
+    /// Reshape to the given dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let count: i64 = dims.iter().product();
+        if count != self.data.len() as i64 {
+            return Err(Error::stub("reshape: element count mismatch"));
+        }
+        Ok(Literal {
+            data: self.data.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    /// Unwrap a 1-tuple result literal.
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Ok(self)
+    }
+
+    /// Copy out the values.
+    pub fn to_vec<T: From<u64>>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&x| T::from(x)).collect())
+    }
+
+    /// Dimensions.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module (stub: never constructs).
+#[derive(Debug)]
+pub struct HloModuleProto {}
+
+impl HloModuleProto {
+    /// Parse an HLO text file — always fails in the stub.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(Error::stub(&format!("parsing HLO text {path}")))
+    }
+}
+
+/// An XLA computation wrapping a parsed module.
+#[derive(Debug)]
+pub struct XlaComputation {}
+
+impl XlaComputation {
+    /// Wrap a module proto.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {}
+    }
+}
+
+/// A device buffer returned by execution (stub: never constructs).
+#[derive(Debug)]
+pub struct PjRtBuffer {}
+
+impl PjRtBuffer {
+    /// Fetch the buffer to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::stub("fetching result literal"))
+    }
+}
+
+/// A compiled executable (stub: never constructs).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments — unreachable in the stub (no
+    /// executable can be compiled), kept for signature parity.
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::stub("executing"))
+    }
+}
+
+/// The PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient {}
+
+impl PjRtClient {
+    /// CPU client — constructs in the stub so startup-path code runs up to
+    /// the first artifact load, which then fails with a clear message.
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient {})
+    }
+
+    /// Platform name.
+    pub fn platform_name(&self) -> String {
+        "stub-pjrt".to_string()
+    }
+
+    /// Compile a computation — always fails in the stub.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::stub("compiling"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_pack_reshape_roundtrip() {
+        let l = Literal::vec1(&[1, 2, 3, 4, 5, 6]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.dims(), &[2, 3]);
+        assert!(l.reshape(&[4, 4]).is_err());
+        let v: Vec<u64> = r.to_vec().unwrap();
+        assert_eq!(v, vec![1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn runtime_entry_points_error_clearly() {
+        assert!(HloModuleProto::from_text_file("x.hlo.txt")
+            .unwrap_err()
+            .to_string()
+            .contains("stub"));
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.platform_name(), "stub-pjrt");
+        assert!(client.compile(&XlaComputation {}).is_err());
+    }
+}
