@@ -8,6 +8,11 @@
 //! decrypting it, and reports latency/throughput.
 //!
 //! Run with: `make artifacts && cargo run --release --example serve_e2e`
+//!
+//! Besides the round-trip validation and the metrics report, this driver
+//! enables the span profiler and prints the per-operation breakdown table,
+//! the Prometheus text exposition, and the JSON metrics snapshot (queue
+//! wait, queue depth, rejected requests, remaining-level gauges included).
 
 use presto::cipher::{build_cipher, SecretKey};
 use presto::coordinator::{BatchPolicy, EncryptServer, ServerConfig};
@@ -33,6 +38,8 @@ fn main() {
         artifact_dir: Some("artifacts".into()),
     };
     let server = EncryptServer::start(cfg).expect("run `make artifacts` first");
+    presto::obs::set_enabled(true);
+    presto::obs::reset();
     println!("encryption service up: {} via PJRT, {} sessions", params.name, sessions);
 
     // Poisson arrivals of normalized feature vectors.
@@ -67,6 +74,10 @@ fn main() {
         checked += 1;
     }
     println!("validated {checked}/{requests} responses (exact round trips)");
-    println!("{}", server.metrics().snapshot().report(wall));
+    let snap = server.metrics().snapshot();
+    println!("{}", snap.report(wall));
+    println!("\n{}", presto::obs::report());
+    println!("--- prometheus ---\n{}", snap.prometheus());
+    println!("--- json snapshot ---\n{}", snap.to_json());
     server.shutdown();
 }

@@ -1,0 +1,217 @@
+#!/usr/bin/env python3
+"""Toolchain-free validation mirror for the observability PR (see
+.claude/skills/verify/SKILL.md, fallback protocol).
+
+Mirrors, line-by-line, the algorithmic pieces the PR touches:
+  1. LatencyHistogram record/percentile (util/stats.rs) -- the exact u64
+     bucket logic, fuzzed for monotonicity and single-sample coverage,
+     plus the specific assertions the new Rust tests make.
+  2. Summary nearest-rank percentile (util/stats.rs) single-sample case.
+  3. The span profiler's self-time attribution (obs/mod.rs): nested spans
+     must attribute each nanosecond to exactly one op's self time.
+
+Run: python3 python/validate_obs.py
+"""
+
+import random
+import sys
+
+FAILURES = []
+
+
+def check(cond, msg):
+    if not cond:
+        FAILURES.append(msg)
+        print(f"FAIL: {msg}")
+    else:
+        print(f"ok:   {msg}")
+
+
+# ---------------------------------------------------------------- histogram
+
+U64_MAX = (1 << 64) - 1
+
+
+class Hist:
+    """Line-by-line mirror of LatencyHistogram (util/stats.rs)."""
+
+    def __init__(self):
+        self.buckets = [0] * 64
+        self.count = 0
+        self.sum_ns = 0
+
+    def record(self, ns):
+        assert 0 <= ns <= U64_MAX
+        # Rust: let idx = 63 - ns.max(1).leading_zeros() as usize;
+        idx = max(ns, 1).bit_length() - 1
+        self.buckets[idx] += 1
+        self.count += 1
+        self.sum_ns += ns
+
+    def mean_ns(self):
+        return 0.0 if self.count == 0 else self.sum_ns / self.count
+
+    def percentile_ns(self, p):
+        if self.count == 0:
+            return 0
+        # Rust: ((p / 100.0) * self.count as f64).ceil() as u64
+        import math
+
+        target = int(math.ceil((p / 100.0) * self.count))
+        seen = 0
+        for i, c in enumerate(self.buckets):
+            seen += c
+            if seen >= max(target, 1):
+                return 1 << min(i + 1, 63)
+        return U64_MAX
+
+
+# Mirror of the new Rust test: histogram_empty_is_safe
+h = Hist()
+check(h.count == 0 and h.mean_ns() == 0.0 and h.percentile_ns(50.0) == 0,
+      "empty histogram: count 0, mean 0, p50 0")
+check(h.percentile_ns(99.0) == 0, "empty histogram: p99 0")
+
+# Mirror of histogram_single_sample
+h = Hist()
+h.record(1500)
+p50, p99 = h.percentile_ns(50.0), h.percentile_ns(99.0)
+check(h.count == 1 and h.mean_ns() == 1500.0, "single sample: count 1, mean 1500")
+check(p50 >= 1500, f"single sample: p50 upper bound covers sample (p50={p50})")
+check(p50 == p99, "single sample: p50 == p99")
+
+# Mirror of histogram_percentiles_are_monotonic
+h = Hist()
+for i in range(1, 1001):
+    h.record(i * 97)
+p = [h.percentile_ns(q) for q in (50.0, 90.0, 99.0)]
+check(p[0] <= p[1] <= p[2], f"1000-sample monotonicity: {p}")
+
+# Fuzz beyond the Rust tests: random sample sets, full percentile sweep.
+rng = random.Random(7)
+for trial in range(500):
+    h = Hist()
+    samples = [rng.randrange(0, 1 << rng.randrange(1, 50)) for _ in range(rng.randrange(1, 200))]
+    for s in samples:
+        h.record(s)
+    prev = 0
+    mono = True
+    for q in range(0, 101):
+        v = h.percentile_ns(float(q))
+        if v < prev:
+            mono = False
+        prev = v
+    if not mono:
+        check(False, f"fuzz trial {trial}: percentile sweep not monotone")
+        break
+    # Upper-bound property: p100 bucket bound covers the max sample
+    # (saturates at 2^63 for samples >= 2^63, which our draws never hit).
+    if h.percentile_ns(100.0) < max(max(samples), 1):
+        check(False, f"fuzz trial {trial}: p100 below max sample")
+        break
+else:
+    check(True, "500-trial fuzz: percentile sweep monotone, p100 covers max")
+
+# record(0) must not panic (ns.max(1)) and lands in bucket 0.
+h = Hist()
+h.record(0)
+check(h.percentile_ns(50.0) == 2, "record(0): bucket 0, upper bound 2ns")
+
+# u64::MAX lands in bucket 63; upper bound saturates via .min(63).
+h = Hist()
+h.record(U64_MAX)
+check(h.percentile_ns(50.0) == 1 << 63, "record(u64::MAX): saturated upper bound 2^63")
+
+# ------------------------------------------------------------------ summary
+
+# Mirror of summary_single_sample_percentiles: nearest-rank with a single
+# sample must return it at every percentile.
+samples = [42.0]
+n = len(samples)
+for q in (0.0, 50.0, 99.0, 100.0):
+    rank = int(round((q / 100.0) * (n - 1)))
+    v = samples[min(rank, n - 1)]
+    check(v == 42.0, f"summary single sample: percentile({q}) == 42.0")
+
+# ------------------------------------------------------- span self-time math
+
+class Obs:
+    """Mirror of obs/mod.rs: thread-local frame stack + registry.
+
+    Frames carry (name, start, child_ns); on drop, dur = now - start,
+    parent.child_ns += dur, and the op records self = dur - child_ns.
+    """
+
+    def __init__(self):
+        self.stack = []
+        self.stats = {}  # name -> [calls, total_ns, self_ns]
+
+    def enter(self, name, now):
+        self.stack.append([name, now, 0])
+
+    def exit(self, now):
+        name, start, child_ns = self.stack.pop()
+        dur = now - start
+        if self.stack:
+            self.stack[-1][2] += dur
+        st = self.stats.setdefault(name, [0, 0, 0])
+        st[0] += 1
+        st[1] += dur
+        st[2] += dur - child_ns
+
+
+# Deterministic nesting: outer(100) { a(30) { leaf(10) } a(20) }.
+o = Obs()
+o.enter("outer", 0)
+o.enter("a", 10)
+o.enter("leaf", 20)
+o.exit(30)   # leaf: dur 10, self 10
+o.exit(40)   # a: dur 30, self 20
+o.enter("a", 50)
+o.exit(70)   # a: dur 20, self 20
+o.exit(100)  # outer: dur 100, child 50, self 50
+check(o.stats["leaf"] == [1, 10, 10], "nesting: leaf self == total")
+check(o.stats["a"] == [2, 50, 40], "nesting: sibling re-entry accumulates (2 calls, child excluded once)")
+check(o.stats["outer"] == [1, 100, 50], "nesting: outer self = total - direct children")
+total_self = sum(s[2] for s in o.stats.values())
+check(total_self == 100, f"nesting: self times partition wall time exactly ({total_self})")
+
+# Fuzz: random well-nested traces; self times must always partition the
+# root's wall time, and each op's self <= total.
+rng = random.Random(11)
+for trial in range(300):
+    o = Obs()
+    now = 0
+    o.enter("root", now)
+    depth = 1
+    for _ in range(rng.randrange(1, 60)):
+        now += rng.randrange(1, 100)
+        if depth > 1 and rng.random() < 0.5:
+            o.exit(now)
+            depth -= 1
+        else:
+            o.enter(f"op{rng.randrange(4)}", now)
+            depth += 1
+    while depth > 1:
+        now += rng.randrange(1, 100)
+        o.exit(now)
+        depth -= 1
+    now += rng.randrange(1, 100)
+    root_total = now
+    o.exit(now)
+    partition = sum(s[2] for s in o.stats.values())
+    if partition != root_total:
+        check(False, f"span fuzz trial {trial}: self-time partition {partition} != {root_total}")
+        break
+    if any(s[2] > s[1] for s in o.stats.values()):
+        check(False, f"span fuzz trial {trial}: self > total")
+        break
+else:
+    check(True, "300-trial span fuzz: self times partition wall time, self <= total")
+
+# ---------------------------------------------------------------------------
+
+if FAILURES:
+    print(f"\n{len(FAILURES)} FAILURE(S)")
+    sys.exit(1)
+print("\nall observability mirrors pass")

@@ -10,6 +10,13 @@
 //!
 //! The interesting quantity is blocks/s: CKKS evaluations are orders of
 //! magnitude slower per call but amortize across the slot batch.
+//!
+//! Besides the console tables, every run writes **`BENCH_table5.json`** —
+//! the machine-readable perf trajectory: per-row latency stats, block
+//! throughput, switching-key memory, and the span profiler's per-stage
+//! breakdown (NTT / basis extension / key switch / cipher rounds). CI runs
+//! this in quick mode (`PRESTO_BENCH_QUICK=1`: N=256) and archives the
+//! JSON; the full run uses the paper-scale ring N=2^13.
 
 use presto::bench::bench;
 use presto::he::bfv::{BfvParams, SecretKeyHe};
@@ -18,9 +25,25 @@ use presto::he::transcipher::{
     CkksCipherProfile, CkksTranscipher, ToyCipher, ToyParams, TranscipherServer,
 };
 use presto::params::CkksParams;
+use presto::util::json::Json;
 use presto::util::rng::SplitMix64;
+use std::collections::BTreeMap;
 
-fn bench_ckks(name: &str, profile: CkksCipherProfile, ring: usize, iters: usize) {
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn latency_json(ns: &presto::bench::SummaryView) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("mean".into(), num(ns.mean));
+    o.insert("median".into(), num(ns.median));
+    o.insert("p95".into(), num(ns.p95));
+    o.insert("min".into(), num(ns.min));
+    o.insert("max".into(), num(ns.max));
+    Json::Obj(o)
+}
+
+fn bench_ckks(name: &str, profile: CkksCipherProfile, ring: usize, iters: usize) -> Json {
     let params = CkksParams::with_shape(ring, profile.required_levels());
     // One rotation key: enough to measure hybrid key-switch time (every
     // Galois element adds the same O(L) single Q·P key).
@@ -34,16 +57,24 @@ fn bench_ckks(name: &str, profile: CkksCipherProfile, ring: usize, iters: usize)
         .iter()
         .map(|&c| profile.encrypt_block(&key, 1, c, &vec![0.5; profile.l]))
         .collect();
+
+    // Profile the transcipher evaluation itself: the span registry is
+    // reset before the timed loop, then snapshotted into the JSON row.
+    presto::obs::set_enabled(true);
+    presto::obs::reset();
     let r = bench(name, iters, || {
         let out = server.transcipher(&ctx, 1, &counters, &blocks);
         std::hint::black_box(&out);
     });
+    let stages = presto::obs::snapshot();
     println!(
         "{}  ({} blocks/eval, {:.1} blocks/s)",
         r.report(),
         batch,
         r.throughput(batch as f64)
     );
+    println!("{}", presto::obs::report());
+    presto::obs::set_enabled(false);
 
     // Key-switch microbenchmarks at the top level: one full rotation
     // (decompose + accumulate + mod-down + automorphism) vs the hoisted
@@ -69,10 +100,44 @@ fn bench_ckks(name: &str, profile: CkksCipherProfile, ring: usize, iters: usize)
         "switching-key memory: {:.1} KiB total (relin + 1 rotation; single Q·P key per target, O(L) digits)",
         ctx.switch_key_bytes() as f64 / 1024.0
     );
+
+    let stage_rows: Vec<Json> = stages
+        .iter()
+        .map(|s| {
+            let mut o = BTreeMap::new();
+            o.insert("op".into(), Json::Str(s.name.to_string()));
+            o.insert("calls".into(), num(s.calls as f64));
+            o.insert("total_ns".into(), num(s.total_ns as f64));
+            o.insert("self_ns".into(), num(s.self_ns as f64));
+            o.insert("mean_ns".into(), num(s.mean_ns));
+            Json::Obj(o)
+        })
+        .collect();
+    let mut row = BTreeMap::new();
+    row.insert("name".into(), Json::Str(name.to_string()));
+    let scheme = format!("{:?}", profile.scheme).to_lowercase();
+    row.insert("scheme".into(), Json::Str(scheme));
+    row.insert("rounds".into(), num(profile.rounds as f64));
+    row.insert("levels".into(), num(profile.required_levels() as f64));
+    row.insert("ring".into(), num(ring as f64));
+    row.insert("blocks_per_eval".into(), num(batch as f64));
+    row.insert("latency_ns".into(), latency_json(&r.ns));
+    row.insert("throughput_blocks_per_s".into(), num(r.throughput(batch as f64)));
+    row.insert("key_memory_bytes".into(), num(ctx.switch_key_bytes() as f64));
+    row.insert("stages".into(), Json::Arr(stage_rows));
+    Json::Obj(row)
 }
 
 fn main() {
-    println!("Table V — Transciphering: toy-BFV baseline vs RNS-CKKS HERA/Rubato\n");
+    let quick = std::env::var("PRESTO_BENCH_QUICK").is_ok();
+    // Quick mode (CI): toy ring, enough for schema + trend checks. Full
+    // mode: the paper-scale N=2^13 ring.
+    let ring = if quick { 256 } else { 8192 };
+    let iters = 8;
+    println!(
+        "Table V — Transciphering: toy-BFV baseline vs RNS-CKKS HERA/Rubato ({} mode, N={ring})\n",
+        if quick { "quick" } else { "full" }
+    );
 
     // toy-BFV baseline: one 4-element block per evaluation, depth 1.
     let he = SecretKeyHe::generate(BfvParams::test_small(), 5);
@@ -89,17 +154,29 @@ fn main() {
     });
     println!("{}  (1 block/eval, {:.1} blocks/s)", r.report(), r.throughput(1.0));
 
-    // RNS-CKKS: slot-batched HERA and Rubato profiles.
-    bench_ckks(
-        "RNS-CKKS HERA r=2 (N=256, 7 levels)",
-        CkksCipherProfile::hera_toy(),
-        256,
-        8,
-    );
-    bench_ckks(
-        "RNS-CKKS Rubato r=2 (N=256, 5 levels)",
-        CkksCipherProfile::rubato_toy(),
-        256,
-        8,
-    );
+    // RNS-CKKS: slot-batched HERA and Rubato profiles. HERA at r=2
+    // (7 levels); Rubato's toy profile r=2 is its full depth (5 levels).
+    let rows = vec![
+        bench_ckks(
+            &format!("RNS-CKKS HERA r=2 (N={ring}, 7 levels)"),
+            CkksCipherProfile::hera_toy(),
+            ring,
+            iters,
+        ),
+        bench_ckks(
+            &format!("RNS-CKKS Rubato r=2 (N={ring}, 5 levels)"),
+            CkksCipherProfile::rubato_toy(),
+            ring,
+            iters,
+        ),
+    ];
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Json::Str("table5_transcipher".into()));
+    doc.insert("quick".into(), Json::Bool(quick));
+    doc.insert("rows".into(), Json::Arr(rows));
+    let path = "BENCH_table5.json";
+    std::fs::write(path, format!("{}\n", Json::Obj(doc)))
+        .unwrap_or_else(|e| panic!("writing {path}: {e}"));
+    println!("\nwrote {path}");
 }

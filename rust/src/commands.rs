@@ -21,10 +21,15 @@ COMMANDS:
     encrypt    --params <set> [--seed N] [--nonce N] [--counter N] --values a,b,c
                  RtF-encode and encrypt a real-valued vector.
     transcipher --params <set> [--rounds N] [--ring N] [--blocks N] [--seed N]
+                 [--breakdown] [--prometheus] [--metrics PATH]
                  RNS-CKKS transcipher-serving demo (client blocks in,
                  CKKS ciphertexts out, decrypt-checked).
     serve      --params <set> [--batch B] [--rate R] [--requests N] [--artifact PATH]
+                 [--breakdown] [--prometheus] [--metrics PATH]
                  Run the client-side encryption service (L3 coordinator).
+                 --breakdown prints the span profiler's per-operation table;
+                 --prometheus prints the metrics in Prometheus text format;
+                 --metrics writes a JSON metrics snapshot to PATH.
     simulate   --params <set> [--design d1|d2|d3] [--blocks N] [--trace]
                  Run the cycle-accurate accelerator simulator.
     tables     [--table 1|2|3|4] [--figure 2|3] [--ablation fifo|xof|mechanisms]
@@ -189,6 +194,10 @@ pub fn transcipher(args: &Args) -> i32 {
         Ok(s) => s,
         Err(e) => return fail(e),
     };
+    if args.flag("breakdown") {
+        presto::obs::set_enabled(true);
+        presto::obs::reset();
+    }
     let l = svc.profile().l;
     let blocks = blocks.min(svc.batch_capacity());
     let mut rng = SplitMix64::new(9);
@@ -220,6 +229,17 @@ pub fn transcipher(args: &Args) -> i32 {
         svc.profile().error_bound(),
         snap.exec_mean_ns / 1e6,
     );
+    if args.flag("breakdown") {
+        println!("{}", presto::obs::report());
+    }
+    if args.flag("prometheus") {
+        println!("{}", snap.prometheus());
+    }
+    if let Some(path) = args.get("metrics") {
+        if let Err(e) = std::fs::write(path, format!("{}\n", snap.to_json())) {
+            return fail(format!("writing metrics snapshot to {path}: {e}"));
+        }
+    }
     if max_err < svc.profile().error_bound() {
         0
     } else {

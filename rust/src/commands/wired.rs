@@ -53,6 +53,10 @@ pub fn serve_impl(args: &Args) -> i32 {
         Ok(s) => s,
         Err(e) => return fail(e),
     };
+    if args.flag("breakdown") {
+        presto::obs::set_enabled(true);
+        presto::obs::reset();
+    }
     println!("serving {} ({} sessions, batch {batch})", p.name, sessions);
 
     let mut wl = WorkloadGen::new(&p, rate, sessions, 1);
@@ -68,7 +72,19 @@ pub fn serve_impl(args: &Args) -> i32 {
         let _ = rx.recv();
     }
     let wall = t0.elapsed().as_secs_f64();
-    println!("{}", server.metrics().snapshot().report(wall));
+    let snap = server.metrics().snapshot();
+    println!("{}", snap.report(wall));
+    if args.flag("breakdown") {
+        println!("{}", presto::obs::report());
+    }
+    if args.flag("prometheus") {
+        println!("{}", snap.prometheus());
+    }
+    if let Some(path) = args.get("metrics") {
+        if let Err(e) = std::fs::write(path, format!("{}\n", snap.to_json())) {
+            return fail(format!("writing metrics snapshot to {path}: {e}"));
+        }
+    }
     server.shutdown();
     0
 }

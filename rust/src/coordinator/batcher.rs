@@ -32,8 +32,19 @@ impl Default for BatchPolicy {
     }
 }
 
+/// A request together with the instant it entered the queue. The enqueue
+/// timestamp travels with the request so the executor can report true
+/// end-to-end latency (queue wait included) instead of restarting the clock
+/// at batch-execution time.
+pub struct Queued {
+    /// The client request.
+    pub req: Request,
+    /// When `submit` accepted it.
+    pub enqueued_at: Instant,
+}
+
 struct Inner {
-    queue: VecDeque<(Request, Instant)>,
+    queue: VecDeque<Queued>,
     closed: bool,
 }
 
@@ -73,7 +84,10 @@ impl Batcher {
         if inner.closed {
             bail!("batcher closed: request {} rejected during shutdown", req.id);
         }
-        inner.queue.push_back((req, Instant::now()));
+        inner.queue.push_back(Queued {
+            req,
+            enqueued_at: Instant::now(),
+        });
         self.cv.notify_one();
         Ok(())
     }
@@ -88,15 +102,15 @@ impl Batcher {
     /// Collect the next batch: blocks until `batch_size` requests are
     /// queued, the oldest has waited `max_wait`, or the batcher is closed.
     /// Returns `None` when closed and drained. Order is FIFO; requests are
-    /// never dropped or duplicated.
-    pub fn next_batch(&self) -> Option<Vec<Request>> {
+    /// never dropped or duplicated. Each entry carries its enqueue instant.
+    pub fn next_batch(&self) -> Option<Vec<Queued>> {
         let mut inner = self.inner.lock().unwrap();
         loop {
             if inner.queue.len() >= self.policy.batch_size {
                 return Some(self.drain(&mut inner));
             }
             if !inner.queue.is_empty() {
-                let oldest = inner.queue.front().unwrap().1;
+                let oldest = inner.queue.front().unwrap().enqueued_at;
                 let waited = oldest.elapsed();
                 if waited >= self.policy.max_wait || inner.closed {
                     return Some(self.drain(&mut inner));
@@ -112,9 +126,9 @@ impl Batcher {
         }
     }
 
-    fn drain(&self, inner: &mut Inner) -> Vec<Request> {
+    fn drain(&self, inner: &mut Inner) -> Vec<Queued> {
         let take = inner.queue.len().min(self.policy.batch_size);
-        inner.queue.drain(..take).map(|(r, _)| r).collect()
+        inner.queue.drain(..take).collect()
     }
 
     /// Current queue depth (for metrics).
@@ -147,7 +161,10 @@ mod tests {
             b.submit(req(i)).unwrap();
         }
         let batch = b.next_batch().unwrap();
-        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), [0, 1, 2, 3]);
+        assert_eq!(
+            batch.iter().map(|q| q.req.id).collect::<Vec<_>>(),
+            [0, 1, 2, 3]
+        );
     }
 
     #[test]
@@ -214,7 +231,7 @@ mod tests {
             };
             let mut seen = Vec::new();
             while let Some(batch) = b.next_batch() {
-                seen.extend(batch.iter().map(|r| r.id));
+                seen.extend(batch.iter().map(|q| q.req.id));
             }
             for h in submitters {
                 h.join().expect("submitter must not panic");
@@ -247,7 +264,7 @@ mod tests {
         let mut seen = Vec::new();
         while let Some(batch) = b.next_batch() {
             assert!(batch.len() <= 8);
-            seen.extend(batch.iter().map(|r| r.id));
+            seen.extend(batch.iter().map(|q| q.req.id));
         }
         producer.join().unwrap();
         // FIFO within the stream, no loss, no duplicates.

@@ -1,7 +1,15 @@
 //! Serving metrics: counters + latency histograms, merged across threads.
+//!
+//! The registry is a single mutex-guarded struct. Locking is
+//! poison-tolerant (a panicking recorder thread must not take the metrics
+//! — and with them the shutdown report — down with it), and `snapshot()`
+//! summarizes the histograms *under* the lock instead of cloning them out,
+//! so the critical section stays O(buckets) rather than O(allocations).
 
+use crate::util::json::Json;
 use crate::util::stats::LatencyHistogram;
-use std::sync::Mutex;
+use std::collections::BTreeMap;
+use std::sync::{Mutex, MutexGuard};
 
 /// Shared metrics registry.
 #[derive(Debug, Default)]
@@ -12,12 +20,45 @@ pub struct Metrics {
 #[derive(Debug, Default)]
 struct Inner {
     requests: u64,
+    rejected: u64,
     batches: u64,
     partial_batches: u64,
     keystream_elems: u64,
     key_bytes: u64,
+    queue_depth: u64,
+    output_level: u64,
+    levels_total: u64,
+    budget_warnings: u64,
     e2e_latency: Option<LatencyHistogram>,
     exec_latency: Option<LatencyHistogram>,
+    queue_wait: Option<LatencyHistogram>,
+}
+
+/// Summary of one latency series (computed under the registry lock).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LatencySummary {
+    /// Samples recorded.
+    pub count: u64,
+    /// Mean, ns.
+    pub mean_ns: f64,
+    /// p50 upper bound, ns.
+    pub p50_ns: u64,
+    /// p99 upper bound, ns.
+    pub p99_ns: u64,
+}
+
+impl LatencySummary {
+    fn of(h: Option<&LatencyHistogram>) -> LatencySummary {
+        match h {
+            None => LatencySummary::default(),
+            Some(h) => LatencySummary {
+                count: h.count(),
+                mean_ns: h.mean_ns(),
+                p50_ns: h.percentile_ns(50.0),
+                p99_ns: h.percentile_ns(99.0),
+            },
+        }
+    }
 }
 
 /// A point-in-time snapshot of the registry.
@@ -25,6 +66,8 @@ struct Inner {
 pub struct MetricsSnapshot {
     /// Requests completed.
     pub requests: u64,
+    /// Requests rejected at submission (e.g. racing shutdown).
+    pub rejected: u64,
     /// Batches executed.
     pub batches: u64,
     /// Batches released before reaching full size.
@@ -33,6 +76,20 @@ pub struct MetricsSnapshot {
     pub keystream_elems: u64,
     /// Resident evaluation-key memory (relin + rotation keys), bytes.
     pub key_bytes: u64,
+    /// Queue depth observed at the last batch pickup.
+    pub queue_depth: u64,
+    /// CKKS level remaining on the most recent transcipher output.
+    pub output_level: u64,
+    /// Total levels in the modulus chain (0 when not on a CKKS path).
+    pub levels_total: u64,
+    /// Times the remaining-level budget dropped to the warning threshold.
+    pub budget_warnings: u64,
+    /// End-to-end request latency (enqueue → response).
+    pub e2e: LatencySummary,
+    /// Executor (keystream+encrypt) latency per batch.
+    pub exec: LatencySummary,
+    /// Time spent queued before batch execution began.
+    pub queue_wait: LatencySummary,
     /// End-to-end request latency, mean ns.
     pub e2e_mean_ns: f64,
     /// End-to-end p50 upper bound, ns.
@@ -49,9 +106,16 @@ impl Metrics {
         Metrics::default()
     }
 
+    /// Poison-tolerant lock: a panic in another recorder leaves counters in
+    /// a consistent state (every method completes its updates before
+    /// releasing), so we keep serving metrics instead of propagating.
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     /// Record one executed batch.
     pub fn record_batch(&self, size: usize, full_size: usize, elems: u64, exec_ns: u64) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.lock();
         m.batches += 1;
         if size < full_size {
             m.partial_batches += 1;
@@ -64,13 +128,13 @@ impl Metrics {
 
     /// Set the resident evaluation-key memory gauge (bytes).
     pub fn set_key_bytes(&self, bytes: u64) {
-        self.inner.lock().unwrap().key_bytes = bytes;
+        self.lock().key_bytes = bytes;
     }
 
     /// Record executor-only work (e.g. a post-processing pass on an
     /// already-counted batch) without incrementing the batch counters.
     pub fn record_exec(&self, exec_ns: u64) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.lock();
         m.exec_latency
             .get_or_insert_with(LatencyHistogram::new)
             .record(exec_ns);
@@ -78,28 +142,71 @@ impl Metrics {
 
     /// Record one completed request with its end-to-end latency.
     pub fn record_request(&self, e2e_ns: u64) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.lock();
         m.requests += 1;
         m.e2e_latency
             .get_or_insert_with(LatencyHistogram::new)
             .record(e2e_ns);
     }
 
-    /// Snapshot for reporting.
+    /// Record a request rejected at submission (shutdown race, over
+    /// capacity): it never reaches the latency histograms, but it must
+    /// still be visible in the series.
+    pub fn record_rejected(&self) {
+        self.lock().rejected += 1;
+    }
+
+    /// Record the time one request spent queued before its batch started.
+    pub fn record_queue_wait(&self, wait_ns: u64) {
+        let mut m = self.lock();
+        m.queue_wait
+            .get_or_insert_with(LatencyHistogram::new)
+            .record(wait_ns);
+    }
+
+    /// Observe the batcher queue depth (gauge; last observation wins).
+    pub fn observe_queue_depth(&self, depth: usize) {
+        self.lock().queue_depth = depth as u64;
+    }
+
+    /// Set the noise-budget gauges: level remaining on the latest output
+    /// ciphertext and the total chain length.
+    pub fn set_level_budget(&self, output_level: usize, levels_total: usize) {
+        let mut m = self.lock();
+        m.output_level = output_level as u64;
+        m.levels_total = levels_total as u64;
+    }
+
+    /// Count one "budget nearly exhausted" warning.
+    pub fn record_budget_warning(&self) {
+        self.lock().budget_warnings += 1;
+    }
+
+    /// Snapshot for reporting. Histograms are summarized in place — the
+    /// lock is held for a fixed-size bucket scan, never an allocation.
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let m = self.inner.lock().unwrap();
-        let e2e = m.e2e_latency.clone().unwrap_or_default();
-        let exec = m.exec_latency.clone().unwrap_or_default();
+        let m = self.lock();
+        let e2e = LatencySummary::of(m.e2e_latency.as_ref());
+        let exec = LatencySummary::of(m.exec_latency.as_ref());
+        let queue_wait = LatencySummary::of(m.queue_wait.as_ref());
         MetricsSnapshot {
             requests: m.requests,
+            rejected: m.rejected,
             batches: m.batches,
             partial_batches: m.partial_batches,
             keystream_elems: m.keystream_elems,
             key_bytes: m.key_bytes,
-            e2e_mean_ns: e2e.mean_ns(),
-            e2e_p50_ns: e2e.percentile_ns(50.0),
-            e2e_p99_ns: e2e.percentile_ns(99.0),
-            exec_mean_ns: exec.mean_ns(),
+            queue_depth: m.queue_depth,
+            output_level: m.output_level,
+            levels_total: m.levels_total,
+            budget_warnings: m.budget_warnings,
+            e2e,
+            exec,
+            queue_wait,
+            e2e_mean_ns: e2e.mean_ns,
+            e2e_p50_ns: e2e.p50_ns,
+            e2e_p99_ns: e2e.p99_ns,
+            exec_mean_ns: exec.mean_ns,
         }
     }
 }
@@ -107,26 +214,154 @@ impl Metrics {
 impl MetricsSnapshot {
     /// Human-readable report.
     pub fn report(&self, wall_s: f64) -> String {
-        format!(
-            "requests        {}\n\
+        let mut s = format!(
+            "requests        {} ({} rejected)\n\
              batches         {} ({} partial)\n\
              ks elements     {}\n\
              key memory      {:.1} KiB\n\
              throughput      {:.1} req/s, {:.2} Melem/s\n\
              e2e latency     mean {:.1} µs, p50 ≤ {:.1} µs, p99 ≤ {:.1} µs\n\
+             queue wait      mean {:.1} µs, p99 ≤ {:.1} µs (depth {})\n\
              exec latency    mean {:.1} µs/batch",
             self.requests,
+            self.rejected,
             self.batches,
             self.partial_batches,
             self.keystream_elems,
             self.key_bytes as f64 / 1024.0,
             self.requests as f64 / wall_s.max(1e-9),
             self.keystream_elems as f64 / wall_s.max(1e-9) / 1e6,
-            self.e2e_mean_ns / 1e3,
-            self.e2e_p50_ns as f64 / 1e3,
-            self.e2e_p99_ns as f64 / 1e3,
-            self.exec_mean_ns / 1e3,
-        )
+            self.e2e.mean_ns / 1e3,
+            self.e2e.p50_ns as f64 / 1e3,
+            self.e2e.p99_ns as f64 / 1e3,
+            self.queue_wait.mean_ns / 1e3,
+            self.queue_wait.p99_ns as f64 / 1e3,
+            self.queue_depth,
+        );
+        if self.levels_total > 0 {
+            s.push_str(&format!(
+                "\nnoise budget    {}/{} levels remaining ({} warnings)",
+                self.output_level, self.levels_total, self.budget_warnings
+            ));
+        }
+        s
+    }
+
+    /// Prometheus text exposition (version 0.0.4) of every series.
+    pub fn prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut counter = |name: &str, help: &str, v: u64| {
+            out.push_str(&format!(
+                "# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"
+            ));
+        };
+        counter(
+            "presto_requests_total",
+            "Requests completed end-to-end.",
+            self.requests,
+        );
+        counter(
+            "presto_rejected_requests_total",
+            "Requests rejected at submission.",
+            self.rejected,
+        );
+        counter("presto_batches_total", "Batches executed.", self.batches);
+        counter(
+            "presto_partial_batches_total",
+            "Batches released before reaching full size.",
+            self.partial_batches,
+        );
+        counter(
+            "presto_keystream_elements_total",
+            "Keystream elements produced.",
+            self.keystream_elems,
+        );
+        counter(
+            "presto_budget_warnings_total",
+            "Times the remaining-level budget hit the warning threshold.",
+            self.budget_warnings,
+        );
+        let mut gauge = |name: &str, help: &str, v: u64| {
+            out.push_str(&format!(
+                "# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}\n"
+            ));
+        };
+        gauge(
+            "presto_key_memory_bytes",
+            "Resident evaluation-key memory.",
+            self.key_bytes,
+        );
+        gauge(
+            "presto_queue_depth",
+            "Batcher queue depth at last batch pickup.",
+            self.queue_depth,
+        );
+        gauge(
+            "presto_remaining_levels",
+            "CKKS levels remaining on the latest transcipher output.",
+            self.output_level,
+        );
+        gauge(
+            "presto_levels_total",
+            "Total levels in the CKKS modulus chain.",
+            self.levels_total,
+        );
+        let mut latency = |name: &str, help: &str, s: &LatencySummary| {
+            out.push_str(&format!("# HELP {name}_ns {help}\n# TYPE {name}_ns summary\n"));
+            out.push_str(&format!("{name}_ns{{quantile=\"0.5\"}} {}\n", s.p50_ns));
+            out.push_str(&format!("{name}_ns{{quantile=\"0.99\"}} {}\n", s.p99_ns));
+            out.push_str(&format!(
+                "{name}_ns_sum {}\n{name}_ns_count {}\n",
+                (s.mean_ns * s.count as f64).round() as u64,
+                s.count
+            ));
+        };
+        latency(
+            "presto_e2e_latency",
+            "End-to-end request latency (enqueue to response).",
+            &self.e2e,
+        );
+        latency(
+            "presto_queue_wait",
+            "Time requests spent queued before batch execution.",
+            &self.queue_wait,
+        );
+        latency(
+            "presto_exec_latency",
+            "Executor latency per batch.",
+            &self.exec,
+        );
+        out
+    }
+
+    /// Machine-readable snapshot for `--metrics <path>` style dumps.
+    pub fn to_json(&self) -> Json {
+        fn num(v: f64) -> Json {
+            Json::Num(v)
+        }
+        fn latency(s: &LatencySummary) -> Json {
+            let mut o = BTreeMap::new();
+            o.insert("count".into(), num(s.count as f64));
+            o.insert("mean_ns".into(), num(s.mean_ns));
+            o.insert("p50_ns".into(), num(s.p50_ns as f64));
+            o.insert("p99_ns".into(), num(s.p99_ns as f64));
+            Json::Obj(o)
+        }
+        let mut o = BTreeMap::new();
+        o.insert("requests".into(), num(self.requests as f64));
+        o.insert("rejected".into(), num(self.rejected as f64));
+        o.insert("batches".into(), num(self.batches as f64));
+        o.insert("partial_batches".into(), num(self.partial_batches as f64));
+        o.insert("keystream_elems".into(), num(self.keystream_elems as f64));
+        o.insert("key_bytes".into(), num(self.key_bytes as f64));
+        o.insert("queue_depth".into(), num(self.queue_depth as f64));
+        o.insert("output_level".into(), num(self.output_level as f64));
+        o.insert("levels_total".into(), num(self.levels_total as f64));
+        o.insert("budget_warnings".into(), num(self.budget_warnings as f64));
+        o.insert("e2e_latency".into(), latency(&self.e2e));
+        o.insert("queue_wait".into(), latency(&self.queue_wait));
+        o.insert("exec_latency".into(), latency(&self.exec));
+        Json::Obj(o)
     }
 }
 
@@ -158,5 +393,77 @@ mod tests {
         let r = m.snapshot().report(1.0);
         assert!(r.contains("requests"));
         assert!(r.contains("throughput"));
+        assert!(r.contains("queue wait"));
+    }
+
+    #[test]
+    fn queue_and_budget_series() {
+        let m = Metrics::new();
+        m.record_queue_wait(1_000_000);
+        m.record_queue_wait(3_000_000);
+        m.observe_queue_depth(7);
+        m.record_rejected();
+        m.set_level_budget(1, 7);
+        m.record_budget_warning();
+        let s = m.snapshot();
+        assert_eq!(s.queue_wait.count, 2);
+        assert!(s.queue_wait.mean_ns >= 1_000_000.0);
+        assert_eq!(s.queue_depth, 7);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.output_level, 1);
+        assert_eq!(s.levels_total, 7);
+        assert_eq!(s.budget_warnings, 1);
+        assert!(s.report(1.0).contains("noise budget    1/7 levels"));
+    }
+
+    #[test]
+    fn prometheus_exposition_names_every_series() {
+        let m = Metrics::new();
+        m.record_request(1500);
+        m.record_queue_wait(700);
+        m.set_level_budget(3, 7);
+        let text = m.snapshot().prometheus();
+        for name in [
+            "presto_requests_total",
+            "presto_rejected_requests_total",
+            "presto_queue_depth",
+            "presto_queue_wait_ns",
+            "presto_remaining_levels",
+            "presto_e2e_latency_ns",
+            "presto_key_memory_bytes",
+        ] {
+            assert!(text.contains(name), "missing series {name}");
+        }
+        assert!(text.contains("# TYPE presto_requests_total counter"));
+        assert!(text.contains("# TYPE presto_queue_depth gauge"));
+        assert!(text.contains("presto_queue_wait_ns{quantile=\"0.5\"}"));
+    }
+
+    #[test]
+    fn json_snapshot_roundtrips() {
+        let m = Metrics::new();
+        m.record_request(1500);
+        m.set_level_budget(3, 7);
+        let text = m.snapshot().to_json().to_string();
+        let back = Json::parse(&text).expect("snapshot JSON must parse");
+        assert_eq!(back.get("requests").and_then(Json::as_u64), Some(1));
+        assert_eq!(back.get("output_level").and_then(Json::as_u64), Some(3));
+        assert!(back.get("e2e_latency").and_then(|j| j.get("mean_ns")).is_some());
+    }
+
+    #[test]
+    fn poisoned_lock_keeps_serving() {
+        use std::sync::Arc;
+        let m = Arc::new(Metrics::new());
+        m.record_request(100);
+        let m2 = Arc::clone(&m);
+        // Poison the mutex by panicking while holding it.
+        let _ = std::thread::spawn(move || {
+            let _guard = m2.inner.lock().unwrap();
+            panic!("poison");
+        })
+        .join();
+        m.record_request(200); // must not panic
+        assert_eq!(m.snapshot().requests, 2);
     }
 }

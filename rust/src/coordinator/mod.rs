@@ -24,8 +24,8 @@ pub mod metrics;
 pub mod rngpool;
 pub mod server;
 
-pub use batcher::{BatchPolicy, Batcher};
-pub use metrics::Metrics;
+pub use batcher::{BatchPolicy, Batcher, Queued};
+pub use metrics::{Metrics, MetricsSnapshot};
 pub use rngpool::{RandomnessBundle, RngPool};
 pub use server::{
     EncryptServer, Engine, Response, ServerConfig, TranscipherBlock, TranscipherConfig,

@@ -217,6 +217,7 @@ impl EncryptServer {
         self.pending.lock().unwrap().insert(id, tx);
         if let Err(e) = self.batcher.submit(req) {
             self.pending.lock().unwrap().remove(&id);
+            self.metrics.record_rejected();
             return Err(e.wrap("submit rejected"));
         }
         Ok(rx)
@@ -278,54 +279,67 @@ fn executor_loop(
     let _ = engine.name();
     while let Some(batch) = batcher.next_batch() {
         let t0 = Instant::now();
-        let arrival: Vec<Instant> = batch.iter().map(|_| t0).collect();
+        metrics.observe_queue_depth(batcher.depth());
+        for q in &batch {
+            let wait = t0.saturating_duration_since(q.enqueued_at);
+            metrics.record_queue_wait(wait.as_nanos() as u64);
+        }
 
         // Pull randomness + keys per request lane.
         let mut keys: Vec<Vec<Elem>> = Vec::with_capacity(full);
         let mut rcs: Vec<Vec<Elem>> = Vec::with_capacity(full);
         let mut noises: Vec<Vec<i64>> = Vec::with_capacity(full);
         let mut lane_meta: Vec<(u64, u64, u64)> = Vec::with_capacity(full); // (id, nonce, counter)
-        for req in &batch {
-            let sess = sessions
-                .get_mut(&req.session)
-                .expect("unknown session (workload sessions must match config)");
-            let bundle = sess.pool.next();
-            keys.push(sess.key.k.clone());
-            rcs.push(bundle.rc);
-            noises.push(bundle.noise);
-            lane_meta.push((req.id, sess.nonce, bundle.counter));
-        }
-        // Pad partial batches to the executor width by repeating lane 0
-        // (padding lanes are discarded after execution).
-        let real = batch.len();
-        while keys.len() < full {
-            keys.push(keys[0].clone());
-            rcs.push(rcs[0].clone());
-            noises.push(noises[0].clone());
-        }
-
-        let keystreams: Vec<Vec<Elem>> = match &engine {
-            Engine::Xla(exe) => {
-                let noise_arg = if p.has_noise() { &noises[..] } else { &[] };
-                exe.run(&keys, &rcs, noise_arg)
-                    .expect("keystream execution failed")
+        {
+            let _span = crate::obs::span("serve/batch_assemble");
+            for q in &batch {
+                let sess = sessions
+                    .get_mut(&q.req.session)
+                    .expect("unknown session (workload sessions must match config)");
+                let bundle = sess.pool.next();
+                keys.push(sess.key.k.clone());
+                rcs.push(bundle.rc);
+                noises.push(bundle.noise);
+                lane_meta.push((q.req.id, sess.nonce, bundle.counter));
             }
-            Engine::Software(cipher) => lane_meta
-                .iter()
-                .enumerate()
-                .map(|(i, &(_, nonce, counter))| {
-                    let key = SecretKey { k: keys[i].clone() };
-                    cipher.keystream(&key, nonce, counter).ks
-                })
-                .collect(),
+            // Pad partial batches to the executor width by repeating lane 0
+            // (padding lanes are discarded after execution).
+            while keys.len() < full {
+                keys.push(keys[0].clone());
+                rcs.push(rcs[0].clone());
+                noises.push(noises[0].clone());
+            }
+        }
+        let real = batch.len();
+
+        let keystreams: Vec<Vec<Elem>> = {
+            let _span = crate::obs::span("serve/execute");
+            match &engine {
+                Engine::Xla(exe) => {
+                    let noise_arg = if p.has_noise() { &noises[..] } else { &[] };
+                    exe.run(&keys, &rcs, noise_arg)
+                        .expect("keystream execution failed")
+                }
+                Engine::Software(cipher) => lane_meta
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &(_, nonce, counter))| {
+                        let key = SecretKey { k: keys[i].clone() };
+                        cipher.keystream(&key, nonce, counter).ks
+                    })
+                    .collect(),
+            }
         };
         let exec_ns = t0.elapsed().as_nanos() as u64;
 
-        // Encrypt + respond.
+        // Encrypt + respond. End-to-end latency is measured from the
+        // *enqueue* instant, so queue wait is included (a batch that sat at
+        // the deadline reports the wait, not just the execute time).
+        let _span = crate::obs::span("serve/post_process");
         let mut elems = 0u64;
-        for (i, req) in batch.iter().enumerate() {
+        for (i, q) in batch.iter().enumerate() {
             let ks = &keystreams[i];
-            let m = codec.encode_vec(&req.message);
+            let m = codec.encode_vec(&q.req.message);
             assert!(m.len() <= ks.len(), "message longer than keystream");
             let ciphertext: Vec<Elem> = m
                 .iter()
@@ -334,13 +348,13 @@ fn executor_loop(
                 .collect();
             elems += ciphertext.len() as u64;
             let (id, nonce, counter) = lane_meta[i];
-            let latency_ns = arrival[i].elapsed().as_nanos() as u64;
+            let latency_ns = q.enqueued_at.elapsed().as_nanos() as u64;
             metrics.record_request(latency_ns);
             let tx = pending.lock().unwrap().remove(&id);
             if let Some(tx) = tx {
                 let _ = tx.send(Response {
                     id,
-                    session: req.session,
+                    session: q.req.session,
                     nonce,
                     counter,
                     ciphertext,
@@ -529,6 +543,23 @@ impl TranscipherService {
             .server
             .transcipher(&self.ctx, self.cfg.nonce, &counters, &sym);
         let dt = t0.elapsed().as_nanos() as u64;
+        // Noise-budget telemetry: gauge the level remaining on the output
+        // and warn loudly when the chain is nearly spent — a downstream
+        // consumer expecting even one more multiplication will fail.
+        let remaining = out[0].level();
+        self.metrics.set_level_budget(remaining, self.cfg.ckks.levels);
+        if remaining <= 1 {
+            self.metrics.record_budget_warning();
+            eprintln!(
+                "WARNING: transcipher noise budget nearly exhausted: \
+                 {remaining}/{} levels remain on the output ciphertext \
+                 (profile {:?}, rounds {}); downstream evaluation depth is {}",
+                self.cfg.ckks.levels,
+                self.cfg.profile.scheme,
+                self.cfg.profile.rounds,
+                remaining,
+            );
+        }
         for _ in blocks {
             self.metrics.record_request(dt);
         }
@@ -672,6 +703,49 @@ mod tests {
         server.shutdown();
     }
 
+    #[test]
+    fn e2e_latency_includes_queue_wait_for_delayed_batch() {
+        // Regression: e2e latency used to be clocked from batch-execution
+        // start, so a request that sat at the batching deadline reported
+        // near-zero latency. With enqueue timestamps propagated through the
+        // batcher, e2e must cover the full queue wait.
+        let cfg = ServerConfig {
+            params: ParamSet::rubato_128s(),
+            sessions: 1,
+            artifact_dir: None,
+            policy: BatchPolicy {
+                batch_size: 4,
+                max_wait: std::time::Duration::from_millis(50),
+            },
+            ..ServerConfig::default()
+        };
+        let server = EncryptServer::start(cfg).unwrap();
+        // A single request into a 4-wide batch is released only at the
+        // 50 ms deadline; almost all of its latency is queue wait.
+        let resp = server
+            .encrypt(Request {
+                id: 1,
+                session: 0,
+                arrival_s: 0.0,
+                message: vec![0.5],
+            })
+            .unwrap();
+        assert!(
+            resp.latency_ns >= 40_000_000,
+            "e2e latency {} ns must include the ~50 ms queue wait",
+            resp.latency_ns
+        );
+        let snap = server.metrics().snapshot();
+        assert!(snap.queue_wait.count >= 1);
+        assert!(
+            snap.e2e.mean_ns >= snap.queue_wait.mean_ns,
+            "e2e mean {} ns < queue-wait mean {} ns",
+            snap.e2e.mean_ns,
+            snap.queue_wait.mean_ns
+        );
+        server.shutdown();
+    }
+
     fn small_transcipher_service() -> TranscipherService {
         let profile = CkksCipherProfile::rubato_toy();
         let levels = profile.required_levels();
@@ -715,6 +789,10 @@ mod tests {
         assert_eq!(snap.batches, 1);
         assert_eq!(snap.partial_batches, 1); // 4 blocks < 16-slot capacity
         assert_eq!(snap.keystream_elems, (4 * l) as u64);
+        // Noise-budget gauges track the output ciphertext.
+        assert_eq!(snap.levels_total, svc.profile().required_levels() as u64);
+        assert_eq!(snap.output_level, out[0].level() as u64);
+        assert!(snap.output_level < snap.levels_total);
     }
 
     #[test]
@@ -753,8 +831,10 @@ mod tests {
             })
             .unwrap_err();
         assert!(err.to_string().contains("rejected"), "{err}");
-        // The pending-table entry was rolled back (no response-channel leak).
+        // The pending-table entry was rolled back (no response-channel leak)
+        // and the rejection is visible in the metrics series.
         assert!(server.pending.lock().unwrap().is_empty());
+        assert_eq!(server.metrics().snapshot().rejected, 1);
         server.shutdown();
     }
 

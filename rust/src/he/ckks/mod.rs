@@ -581,7 +581,10 @@ impl CkksContext {
         let d0 = a.c0.mul(&b.c0);
         let d1 = a.c0.mul(&b.c1).add(&a.c1.mul(&b.c0));
         let d2 = a.c1.mul(&b.c1);
-        let (k0, k1) = self.key_switch(&d2, &self.relin);
+        let (k0, k1) = {
+            let _span = crate::obs::span("ckks/relin");
+            self.key_switch(&d2, &self.relin)
+        };
         Ciphertext {
             c0: d0.add(&k0),
             c1: d1.add(&k1),
@@ -592,6 +595,7 @@ impl CkksContext {
     /// Rescale: divide the phase (and scale) by the current top prime,
     /// dropping one level.
     pub fn rescale(&self, ct: &Ciphertext) -> Ciphertext {
+        let _span = crate::obs::span("ckks/rescale");
         let q = self.basis.primes[ct.level()] as f64;
         Ciphertext {
             c0: ct.c0.rescale_top(),
@@ -635,6 +639,7 @@ impl CkksContext {
         dec: &HoistedDecomposition,
         steps: usize,
     ) -> Result<Ciphertext> {
+        let _span = crate::obs::span("ckks/apply_hoisted");
         assert_eq!(
             dec.level,
             ct.level(),
@@ -663,6 +668,7 @@ impl CkksContext {
     /// — the integer digit is < q_i, so reduction mod each target modulus
     /// is the exact lift).
     fn decompose_ntt(&self, d: &RnsPoly) -> HoistedDecomposition {
+        let _span = crate::obs::span("ckks/hoist");
         let l = d.level();
         let p = self.basis.special;
         let digits = (0..=l)
@@ -730,6 +736,7 @@ impl CkksContext {
     /// Hybrid key switch: decompose, accumulate against the key, divide by
     /// the special prime. `k0 + k1·s ≈ d·target` with noise ≈ L·N·σ·q/P.
     fn key_switch(&self, d: &RnsPoly, key: &SwitchKey) -> (RnsPoly, RnsPoly) {
+        let _span = crate::obs::span("ckks/key_switch");
         let dec = self.decompose_ntt(d);
         let (e0, e1) = self.accumulate_key(&dec, key);
         (e0.mod_down(), e1.mod_down())

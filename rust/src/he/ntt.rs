@@ -61,6 +61,7 @@ impl NttContext {
     /// In-place forward negacyclic NTT (Cooley-Tukey, DIT on ψ-twisted
     /// values; standard-order input, bit-reversed-friendly internals).
     pub fn forward(&self, a: &mut [u64]) {
+        let _span = crate::obs::span("ntt_fwd");
         debug_assert_eq!(a.len(), self.n);
         let q = self.q;
         let mut t = self.n;
@@ -84,6 +85,7 @@ impl NttContext {
 
     /// In-place inverse negacyclic NTT (Gentleman-Sande).
     pub fn inverse(&self, a: &mut [u64]) {
+        let _span = crate::obs::span("ntt_inv");
         debug_assert_eq!(a.len(), self.n);
         let q = self.q;
         let mut t = 1;

@@ -310,6 +310,7 @@ impl RnsBasis {
     /// because the α·Q_l slack is absorbed by the mod-P division. O(l·N)
     /// u64 multiplies, no big integers on the per-coefficient path.
     pub fn fast_basis_extend(&self, rows: &[Vec<u64>], m: u64) -> Vec<u64> {
+        let _span = crate::obs::span("fast_basis_extend");
         let level = rows.len() - 1;
         let tab = &self.crt[level];
         // (Q_l / q_i) mod m, computed once per call (off the per-coeff path).
@@ -607,6 +608,7 @@ impl RnsPoly {
     /// `(x_j − [x]_{q_l}) · q_l^{-1} mod q_j` with `[x]_{q_l}` centered in
     /// `(−q_l/2, q_l/2]`, so the result is within 1/2 of x / q_l.
     pub fn rescale_top(&self) -> RnsPoly {
+        let _span = crate::obs::span("rescale_top");
         let l = self.level();
         assert!(l >= 1, "cannot rescale at level 0");
         let qt = self.basis.primes[l];
@@ -790,6 +792,7 @@ impl RnsPolyExt {
     /// counterpart of [`RnsPoly::rescale_top`] with the special prime as
     /// divisor. The result is within 1/2 (per coefficient) of x / P.
     pub fn mod_down(&self) -> RnsPoly {
+        let _span = crate::obs::span("mod_down");
         let p = self.basis.special;
         let half = p / 2;
         let rows = self

@@ -547,6 +547,7 @@ impl CkksTranscipher {
         level: usize,
         scale: f64,
     ) -> ckks::Ciphertext {
+        let _span = crate::obs::span("transcipher/ark");
         let kl = self.enc_key[i].drop_to_level(level + 1);
         let q_drop = ctx.prime_at(level + 1) as f64;
         let pt_scale = scale * q_drop / kl.scale;
@@ -561,6 +562,11 @@ impl CkksTranscipher {
         state: &[ckks::Ciphertext],
         rows: bool,
     ) -> Vec<ckks::Ciphertext> {
+        let _span = crate::obs::span(if rows {
+            "transcipher/mix_rows"
+        } else {
+            "transcipher/mix_columns"
+        });
         let v = self.profile.v;
         let mut out = Vec::with_capacity(self.profile.n);
         for r in 0..v {
@@ -605,6 +611,10 @@ impl CkksTranscipher {
         state: &[ckks::Ciphertext],
         b: usize,
     ) -> Vec<ckks::Ciphertext> {
+        let _span = crate::obs::span(match self.profile.scheme {
+            Scheme::Hera => "transcipher/cube",
+            Scheme::Rubato => "transcipher/feistel",
+        });
         match self.profile.scheme {
             Scheme::Hera => state
                 .iter()
@@ -641,6 +651,7 @@ impl CkksTranscipher {
         nonce: u64,
         counters: &[u64],
     ) -> Vec<ckks::Ciphertext> {
+        let _span = crate::obs::span("transcipher/keystream");
         let b = counters.len();
         assert!(b >= 1 && b <= ctx.slots(), "batch must fit the slot count");
         let p = &self.profile;
@@ -673,6 +684,7 @@ impl CkksTranscipher {
                 ctx.add_plain(&t, &vec![ic[i]; b])
             })
             .collect();
+        crate::obs::trace_level("ark_in", state[0].level(), state[0].scale);
 
         let mut rc_idx = 1;
         for _ in 1..p.rounds {
@@ -685,6 +697,7 @@ impl CkksTranscipher {
                 .map(|(i, x)| ctx.add(x, &self.ark_term(ctx, i, &rc_slots[rc_idx][i], lvl, sc)))
                 .collect();
             rc_idx += 1;
+            crate::obs::trace_level("round", state[0].level(), state[0].scale);
         }
 
         // Fin: MRMC, NL, MRMC, (Tr,) ARK.
@@ -695,6 +708,7 @@ impl CkksTranscipher {
         let mut ks: Vec<ckks::Ciphertext> = (0..p.l)
             .map(|i| ctx.add(&state[i], &self.ark_term(ctx, i, &rc_slots[rc_idx][i], lvl, sc)))
             .collect();
+        crate::obs::trace_level("fin", ks[0].level(), ks[0].scale);
 
         // AGN: public (nonce, counter)-derived noise, plaintext-added.
         if p.agn_scale != 0.0 {

@@ -35,6 +35,11 @@
 //! * [`coordinator`] — the client-side encryption service: request router,
 //!   dynamic batcher, decoupled RNG pool feeding a bounded round-constant
 //!   FIFO, keystream executor and encryptor. Python is never on this path.
+//! * [`obs`] — the cross-layer span profiler: RAII spans around the hot
+//!   operations (NTT, basis extension, key switch, transcipher rounds,
+//!   executor stages) aggregated into a per-operation breakdown table
+//!   (the paper's Table-4/5 methodology, applied to our software), plus
+//!   noise-budget (level/scale) tracing. Near-zero cost when disabled.
 //! * [`workload`] — synthetic client traffic generation (Poisson arrivals).
 //! * [`bench`] — the measurement harness used by `cargo bench` targets.
 //! * [`util`] — internal substrates: minimal JSON, CLI parsing, PRNG,
@@ -50,6 +55,7 @@ pub mod cipher;
 pub mod coordinator;
 pub mod he;
 pub mod hw;
+pub mod obs;
 pub mod params;
 pub mod rtf;
 pub mod runtime;

@@ -1,0 +1,378 @@
+//! Cross-layer span profiler: where the cycles and the noise budget go.
+//!
+//! The paper's core methodology is a per-module latency breakdown — it
+//! finds and eliminates pipeline bubbles by measuring the MRMC/RNG stages
+//! individually (Tables IV–V), and Medha makes the same per-RPAU
+//! utilization argument for HE key switching. This module is the software
+//! equivalent for our substrate: RAII span guards around the hot
+//! operations (NTT, fast basis extension, hybrid key switch, hoisted
+//! rotations, transcipher rounds, executor stages), aggregated into a
+//! global per-operation registry, printable as a Table-4/5-style
+//! breakdown from any run.
+//!
+//! Design constraints:
+//!
+//! * **Zero dependencies** — built on `std` atomics, `Mutex`, `Instant`
+//!   and the in-crate [`LatencyHistogram`].
+//! * **Near-zero cost when disabled** — the profiler defaults to off;
+//!   [`span`] then performs exactly one relaxed atomic load and returns an
+//!   inert guard. Enabling is explicit ([`set_enabled`]) and global.
+//! * **Correct self-time under nesting** — each thread keeps a span
+//!   stack; when a span closes, its wall time is charged to its own
+//!   operation's *total*, its children's time is subtracted for the
+//!   *self* figure, and its total is propagated into the parent frame.
+//!   `ntt_fwd` inside `ckks/hoist` inside `transcipher/keystream` thus
+//!   attributes every nanosecond exactly once in the self-time column.
+//! * **Noise-budget telemetry** — [`trace_level`] records (stage, level,
+//!   scale) points through a homomorphic evaluation, so the level/scale
+//!   trajectory of a transcipher run is inspectable next to its time
+//!   breakdown.
+//!
+//! The registry is process-global (operations are keyed by `&'static str`
+//! name), so concurrent threads — the serving executor, bench loops —
+//! merge into one breakdown. [`reset`] clears it between measurements.
+
+use crate::util::stats::LatencyHistogram;
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+static REGISTRY: Mutex<BTreeMap<&'static str, OpStats>> = Mutex::new(BTreeMap::new());
+
+/// Bounded noise-budget trace: most recent level/scale points.
+static LEVEL_TRACE: Mutex<Vec<LevelPoint>> = Mutex::new(Vec::new());
+
+/// Retain at most this many level-trace points (ring semantics: oldest
+/// points are dropped first).
+const LEVEL_TRACE_CAP: usize = 256;
+
+#[derive(Debug, Default)]
+struct OpStats {
+    calls: u64,
+    total_ns: u128,
+    self_ns: u128,
+    hist: LatencyHistogram,
+}
+
+thread_local! {
+    static STACK: RefCell<Vec<Frame>> = const { RefCell::new(Vec::new()) };
+}
+
+struct Frame {
+    name: &'static str,
+    start: Instant,
+    child_ns: u128,
+}
+
+/// Enable or disable the profiler globally. Disabling does not clear
+/// recorded data (use [`reset`]).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether the profiler is currently recording.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+fn lock_registry() -> std::sync::MutexGuard<'static, BTreeMap<&'static str, OpStats>> {
+    // Poison-tolerant: a panicked instrumented thread must not take the
+    // profiler (or anything reading it) down with it.
+    REGISTRY.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn lock_trace() -> std::sync::MutexGuard<'static, Vec<LevelPoint>> {
+    LEVEL_TRACE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Open a span for `name`. Time from this call to the guard's drop is
+/// recorded against `name`; nested spans subtract their time from this
+/// span's self-time. When the profiler is disabled this is one atomic
+/// load and the guard is inert.
+#[must_use = "the span measures until the guard drops"]
+pub fn span(name: &'static str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { active: false };
+    }
+    STACK.with(|s| {
+        s.borrow_mut().push(Frame {
+            name,
+            start: Instant::now(),
+            child_ns: 0,
+        })
+    });
+    SpanGuard { active: true }
+}
+
+/// RAII guard returned by [`span`]; closes the span on drop.
+pub struct SpanGuard {
+    active: bool,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if !self.active {
+            return;
+        }
+        STACK.with(|s| {
+            let mut stack = s.borrow_mut();
+            let frame = match stack.pop() {
+                Some(f) => f,
+                None => return, // reset/disable raced the guard: drop silently
+            };
+            let total = frame.start.elapsed().as_nanos();
+            let self_ns = total.saturating_sub(frame.child_ns);
+            if let Some(parent) = stack.last_mut() {
+                parent.child_ns += total;
+            }
+            let mut reg = lock_registry();
+            let st = reg.entry(frame.name).or_default();
+            st.calls += 1;
+            st.total_ns += total;
+            st.self_ns += self_ns;
+            st.hist.record(total.min(u64::MAX as u128) as u64);
+        });
+    }
+}
+
+/// One (stage, level, scale) point of a homomorphic evaluation's
+/// noise-budget trajectory.
+#[derive(Debug, Clone)]
+pub struct LevelPoint {
+    /// Stage label, e.g. `"ark_in"`, `"round1/nonlinear"`.
+    pub stage: &'static str,
+    /// Ciphertext level after the stage (rescales remaining).
+    pub level: usize,
+    /// Ciphertext scale after the stage.
+    pub scale: f64,
+}
+
+/// Record one noise-budget trace point (no-op when disabled). The trace
+/// is bounded ([`LEVEL_TRACE_CAP`]); the oldest points fall off first.
+pub fn trace_level(stage: &'static str, level: usize, scale: f64) {
+    if !enabled() {
+        return;
+    }
+    let mut tr = lock_trace();
+    if tr.len() >= LEVEL_TRACE_CAP {
+        tr.remove(0);
+    }
+    tr.push(LevelPoint {
+        stage,
+        level,
+        scale,
+    });
+}
+
+/// The recorded noise-budget trajectory (most recent points, in order).
+pub fn level_trace() -> Vec<LevelPoint> {
+    lock_trace().clone()
+}
+
+/// Aggregated statistics for one operation kind.
+#[derive(Debug, Clone)]
+pub struct OpSnapshot {
+    /// Operation name (the span label).
+    pub name: &'static str,
+    /// Number of spans closed.
+    pub calls: u64,
+    /// Total wall time, including nested spans (ns).
+    pub total_ns: u128,
+    /// Self time: total minus time spent in nested spans (ns).
+    pub self_ns: u128,
+    /// Mean wall time per call (ns).
+    pub mean_ns: f64,
+    /// p50 upper bound per call (ns).
+    pub p50_ns: u64,
+    /// p99 upper bound per call (ns).
+    pub p99_ns: u64,
+}
+
+/// Snapshot the registry, sorted by self time descending (the breakdown
+/// table order).
+pub fn snapshot() -> Vec<OpSnapshot> {
+    let reg = lock_registry();
+    let mut ops: Vec<OpSnapshot> = reg
+        .iter()
+        .map(|(&name, st)| OpSnapshot {
+            name,
+            calls: st.calls,
+            total_ns: st.total_ns,
+            self_ns: st.self_ns,
+            mean_ns: st.hist.mean_ns(),
+            p50_ns: st.hist.percentile_ns(50.0),
+            p99_ns: st.hist.percentile_ns(99.0),
+        })
+        .collect();
+    ops.sort_by(|a, b| b.self_ns.cmp(&a.self_ns));
+    ops
+}
+
+/// Clear all recorded spans and the level trace (the enabled flag is
+/// untouched).
+pub fn reset() {
+    lock_registry().clear();
+    lock_trace().clear();
+}
+
+/// The per-operation breakdown table — the software analogue of the
+/// paper's per-module cycle tables. Self-time percentages are relative
+/// to the sum of self times (every nanosecond inside instrumented code is
+/// attributed exactly once, so they add to ~100%).
+pub fn report() -> String {
+    let ops = snapshot();
+    if ops.is_empty() {
+        return "operation breakdown: no spans recorded (profiler disabled?)".to_string();
+    }
+    let total_self: u128 = ops.iter().map(|o| o.self_ns).sum();
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<26} {:>10} {:>12} {:>12} {:>10} {:>7}\n",
+        "operation", "calls", "total ms", "self ms", "mean µs", "self %"
+    ));
+    for o in &ops {
+        out.push_str(&format!(
+            "{:<26} {:>10} {:>12.3} {:>12.3} {:>10.1} {:>6.1}%\n",
+            o.name,
+            o.calls,
+            o.total_ns as f64 / 1e6,
+            o.self_ns as f64 / 1e6,
+            o.mean_ns / 1e3,
+            100.0 * o.self_ns as f64 / (total_self as f64).max(1.0),
+        ));
+    }
+    let trace = level_trace();
+    if !trace.is_empty() {
+        out.push_str("noise budget (level/scale trajectory):\n");
+        for p in &trace {
+            out.push_str(&format!(
+                "  {:<24} level {:>2}  scale 2^{:.2}\n",
+                p.stage,
+                p.level,
+                p.scale.log2()
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Serialize tests touching the global registry.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn spin(us: u64) {
+        let t0 = Instant::now();
+        while t0.elapsed().as_micros() < us as u128 {
+            std::hint::spin_loop();
+        }
+    }
+
+    #[test]
+    fn disabled_profiler_records_nothing() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(false);
+        reset();
+        {
+            let _s = span("obs_test_disabled");
+            spin(50);
+        }
+        trace_level("obs_test_disabled", 3, 1e12);
+        assert!(
+            !snapshot().iter().any(|o| o.name == "obs_test_disabled"),
+            "disabled spans must not be recorded"
+        );
+        assert!(level_trace().is_empty());
+    }
+
+    #[test]
+    fn nesting_attributes_self_time_once() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(true);
+        reset();
+        {
+            let _outer = span("obs_test_outer");
+            spin(200);
+            {
+                let _inner = span("obs_test_inner");
+                spin(200);
+            }
+            spin(100);
+        }
+        set_enabled(false);
+        let snap = snapshot();
+        let outer = snap.iter().find(|o| o.name == "obs_test_outer").unwrap();
+        let inner = snap.iter().find(|o| o.name == "obs_test_inner").unwrap();
+        assert_eq!(outer.calls, 1);
+        assert_eq!(inner.calls, 1);
+        // Outer total covers the inner span; outer self excludes it.
+        assert!(outer.total_ns >= inner.total_ns + outer.self_ns);
+        assert!(inner.self_ns >= 180_000, "inner self {}", inner.self_ns);
+        assert!(
+            outer.self_ns >= 250_000 && outer.self_ns < outer.total_ns,
+            "outer self {} total {}",
+            outer.self_ns,
+            outer.total_ns
+        );
+        reset();
+    }
+
+    #[test]
+    fn aggregation_counts_calls_and_percentiles() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(true);
+        reset();
+        for _ in 0..10 {
+            let _s = span("obs_test_agg");
+            spin(30);
+        }
+        set_enabled(false);
+        let snap = snapshot();
+        let agg = snap.iter().find(|o| o.name == "obs_test_agg").unwrap();
+        assert_eq!(agg.calls, 10);
+        assert!(agg.mean_ns >= 25_000.0);
+        assert!(agg.p50_ns <= agg.p99_ns);
+        assert_eq!(agg.total_ns, agg.self_ns, "no nesting ⇒ total == self");
+        reset();
+    }
+
+    #[test]
+    fn level_trace_is_bounded_and_ordered() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(true);
+        reset();
+        for i in 0..(LEVEL_TRACE_CAP + 10) {
+            trace_level("obs_test_lvl", i % 8, (1u64 << 40) as f64);
+        }
+        set_enabled(false);
+        let tr = level_trace();
+        assert_eq!(tr.len(), LEVEL_TRACE_CAP);
+        // The oldest points fell off: the last point is the newest.
+        assert_eq!(tr.last().unwrap().level, (LEVEL_TRACE_CAP + 9) % 8);
+        reset();
+    }
+
+    #[test]
+    fn report_renders_a_table() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(true);
+        reset();
+        {
+            let _s = span("obs_test_report");
+            spin(20);
+        }
+        trace_level("obs_test_report", 5, (1u64 << 40) as f64);
+        set_enabled(false);
+        let r = report();
+        assert!(r.contains("obs_test_report"), "{r}");
+        assert!(r.contains("self %"), "{r}");
+        assert!(r.contains("noise budget"), "{r}");
+        reset();
+    }
+}

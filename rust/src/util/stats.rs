@@ -223,6 +223,52 @@ mod tests {
     }
 
     #[test]
+    fn histogram_empty_is_safe() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean_ns(), 0.0);
+        assert_eq!(h.percentile_ns(50.0), 0);
+        assert_eq!(h.percentile_ns(99.0), 0);
+    }
+
+    #[test]
+    fn histogram_single_sample() {
+        let mut h = LatencyHistogram::new();
+        h.record(1500);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.mean_ns(), 1500.0);
+        // Every percentile lands in the same bucket: upper bound covers the
+        // sample, and p50 == p99.
+        let p50 = h.percentile_ns(50.0);
+        let p99 = h.percentile_ns(99.0);
+        assert!(p50 >= 1500);
+        assert_eq!(p50, p99);
+    }
+
+    #[test]
+    fn histogram_percentiles_are_monotonic() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=1000u64 {
+            h.record(i * 97);
+        }
+        let p50 = h.percentile_ns(50.0);
+        let p90 = h.percentile_ns(90.0);
+        let p99 = h.percentile_ns(99.0);
+        assert!(p50 <= p90 && p90 <= p99, "{p50} {p90} {p99}");
+    }
+
+    #[test]
+    fn summary_single_sample_percentiles() {
+        let mut s = Summary::new();
+        s.push(42.0);
+        assert_eq!(s.percentile(0.0), 42.0);
+        assert_eq!(s.median(), 42.0);
+        assert_eq!(s.percentile(99.0), 42.0);
+        assert_eq!(s.min(), 42.0);
+        assert_eq!(s.max(), 42.0);
+    }
+
+    #[test]
     fn histogram_merge() {
         let mut a = LatencyHistogram::new();
         let mut b = LatencyHistogram::new();
