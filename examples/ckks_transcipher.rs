@@ -44,14 +44,15 @@ fn main() {
     );
 
     let t0 = Instant::now();
-    let mut svc = TranscipherService::start(TranscipherConfig {
-        profile,
-        ckks,
-        seed: 2026,
-        nonce: 1,
-        rotations: vec![1],
-    })
-    .expect("service start");
+    let cfg = TranscipherConfig::builder(profile)
+        .ckks(ckks)
+        .seed(2026)
+        .nonce(1)
+        .rotations(&[1])
+        .threads(0) // 0 = all available cores; the output is bit-identical
+        .build()
+        .expect("config");
+    let mut svc = TranscipherService::start(cfg).expect("service start");
     println!(
         "setup (CKKS keygen + RtF key upload): {:?}",
         t0.elapsed()

@@ -36,6 +36,7 @@ fn main() {
         rng_workers: 2,
         sessions,
         artifact_dir: Some("artifacts".into()),
+        executor_threads: 0, // software fallback fans out per-lane keystreams
     };
     let server = EncryptServer::start(cfg).expect("run `make artifacts` first");
     presto::obs::set_enabled(true);

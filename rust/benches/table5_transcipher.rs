@@ -17,6 +17,9 @@
 //! breakdown (NTT / basis extension / key switch / cipher rounds). CI runs
 //! this in quick mode (`PRESTO_BENCH_QUICK=1`: N=256) and archives the
 //! JSON; the full run uses the paper-scale ring N=2^13.
+//! `PRESTO_BENCH_THREADS` sets the CKKS worker-thread knob (0 = all
+//! cores, 1 = serial); CI runs both and diffs blocks/s — the outputs are
+//! bit-identical, only the wall clock moves.
 
 use presto::bench::bench;
 use presto::he::bfv::{BfvParams, SecretKeyHe};
@@ -43,14 +46,26 @@ fn latency_json(ns: &presto::bench::SummaryView) -> Json {
     Json::Obj(o)
 }
 
-fn bench_ckks(name: &str, profile: CkksCipherProfile, ring: usize, iters: usize) -> Json {
+fn bench_ckks(
+    name: &str,
+    profile: CkksCipherProfile,
+    ring: usize,
+    iters: usize,
+    threads: usize,
+) -> Json {
     let params = CkksParams::with_shape(ring, profile.required_levels());
     // One rotation key: enough to measure hybrid key-switch time (every
     // Galois element adds the same O(L) single Q·P key).
-    let ctx = CkksContext::generate(params, 5, &[1]);
+    let ctx = CkksContext::builder(params)
+        .seed(5)
+        .rotations(&[1])
+        .threads(threads)
+        .build()
+        .expect("valid CKKS parameters");
     let mut rng = SplitMix64::new(1);
     let key = profile.sample_key(3);
-    let server = CkksTranscipher::setup(profile.clone(), &ctx, &key, &mut rng);
+    let server =
+        CkksTranscipher::setup(profile.clone(), &ctx, &key, &mut rng).expect("setup");
     let batch = ctx.slots();
     let counters: Vec<u64> = (0..batch as u64).collect();
     let blocks: Vec<Vec<f64>> = counters
@@ -63,7 +78,9 @@ fn bench_ckks(name: &str, profile: CkksCipherProfile, ring: usize, iters: usize)
     presto::obs::set_enabled(true);
     presto::obs::reset();
     let r = bench(name, iters, || {
-        let out = server.transcipher(&ctx, 1, &counters, &blocks);
+        let out = server
+            .transcipher(&ctx, 1, &counters, &blocks)
+            .expect("transcipher");
         std::hint::black_box(&out);
     });
     let stages = presto::obs::snapshot();
@@ -80,7 +97,9 @@ fn bench_ckks(name: &str, profile: CkksCipherProfile, ring: usize, iters: usize)
     // (decompose + accumulate + mod-down + automorphism) vs the hoisted
     // split where the decomposition is shared across rotations.
     let x: Vec<f64> = (0..batch).map(|i| i as f64 / batch as f64).collect();
-    let ct = ctx.encrypt_values(&x, ctx.params().delta(), &mut rng);
+    let ct = ctx
+        .encrypt_values(&x, ctx.params().delta(), &mut rng)
+        .expect("encrypt");
     let rks = bench(&format!("{name} — key-switch (rotate by 1)"), iters * 4, || {
         let out = ctx.rotate(&ct, 1).expect("rotation key registered");
         std::hint::black_box(&out);
@@ -121,6 +140,7 @@ fn bench_ckks(name: &str, profile: CkksCipherProfile, ring: usize, iters: usize)
     row.insert("levels".into(), num(profile.required_levels() as f64));
     row.insert("ring".into(), num(ring as f64));
     row.insert("blocks_per_eval".into(), num(batch as f64));
+    row.insert("threads".into(), num(threads as f64));
     row.insert("latency_ns".into(), latency_json(&r.ns));
     row.insert("throughput_blocks_per_s".into(), num(r.throughput(batch as f64)));
     row.insert("key_memory_bytes".into(), num(ctx.switch_key_bytes() as f64));
@@ -134,9 +154,16 @@ fn main() {
     // mode: the paper-scale N=2^13 ring.
     let ring = if quick { 256 } else { 8192 };
     let iters = 8;
+    // Worker-thread knob for the CKKS hot path: 0 = all cores (default),
+    // 1 = serial. CI runs both and diffs blocks/s.
+    let threads: usize = std::env::var("PRESTO_BENCH_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
     println!(
-        "Table V — Transciphering: toy-BFV baseline vs RNS-CKKS HERA/Rubato ({} mode, N={ring})\n",
-        if quick { "quick" } else { "full" }
+        "Table V — Transciphering: toy-BFV baseline vs RNS-CKKS HERA/Rubato ({} mode, N={ring}, threads={})\n",
+        if quick { "quick" } else { "full" },
+        if threads == 0 { "all".to_string() } else { threads.to_string() }
     );
 
     // toy-BFV baseline: one 4-element block per evaluation, depth 1.
@@ -162,12 +189,14 @@ fn main() {
             CkksCipherProfile::hera_toy(),
             ring,
             iters,
+            threads,
         ),
         bench_ckks(
             &format!("RNS-CKKS Rubato r=2 (N={ring}, 5 levels)"),
             CkksCipherProfile::rubato_toy(),
             ring,
             iters,
+            threads,
         ),
     ];
 

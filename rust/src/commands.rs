@@ -21,7 +21,7 @@ COMMANDS:
     encrypt    --params <set> [--seed N] [--nonce N] [--counter N] --values a,b,c
                  RtF-encode and encrypt a real-valued vector.
     transcipher --params <set> [--rounds N] [--ring N] [--blocks N] [--seed N]
-                 [--breakdown] [--prometheus] [--metrics PATH]
+                 [--threads N] [--breakdown] [--prometheus] [--metrics PATH]
                  RNS-CKKS transcipher-serving demo (client blocks in,
                  CKKS ciphertexts out, decrypt-checked).
     serve      --params <set> [--batch B] [--rate R] [--requests N] [--artifact PATH]
@@ -181,14 +181,21 @@ pub fn transcipher(args: &Args) -> i32 {
     if !ring.is_power_of_two() || ring < 8 {
         return fail(format!("--ring {ring} must be a power of two ≥ 8"));
     }
+    let threads = match args.parsed_or("threads", 0usize) {
+        Ok(t) => t,
+        Err(e) => return fail(e),
+    };
     let profile = CkksCipherProfile::from_params(&p, rounds);
     let levels = profile.required_levels();
-    let cfg = TranscipherConfig {
-        profile,
-        ckks: CkksParams::with_shape(ring, levels),
-        seed: args.parsed_or("seed", 2026u64).unwrap_or(2026),
-        nonce: 1000,
-        rotations: vec![],
+    let cfg = match TranscipherConfig::builder(profile)
+        .ckks(CkksParams::with_shape(ring, levels))
+        .seed(args.parsed_or("seed", 2026u64).unwrap_or(2026))
+        .nonce(1000)
+        .threads(threads)
+        .build()
+    {
+        Ok(c) => c,
+        Err(e) => return fail(e),
     };
     let mut svc = match TranscipherService::start(cfg) {
         Ok(s) => s,

@@ -48,6 +48,7 @@ pub fn serve_impl(args: &Args) -> i32 {
         rng_workers: args.parsed_or("rng-workers", 2usize).unwrap_or(2),
         sessions,
         artifact_dir,
+        executor_threads: args.parsed_or("executor-threads", 0usize).unwrap_or(0),
     };
     let server = match EncryptServer::start(cfg) {
         Ok(s) => s,

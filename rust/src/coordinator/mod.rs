@@ -29,5 +29,5 @@ pub use metrics::{Metrics, MetricsSnapshot};
 pub use rngpool::{RandomnessBundle, RngPool};
 pub use server::{
     EncryptServer, Engine, Response, ServerConfig, TranscipherBlock, TranscipherConfig,
-    TranscipherService,
+    TranscipherConfigBuilder, TranscipherService,
 };

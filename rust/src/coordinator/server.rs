@@ -65,6 +65,10 @@ pub struct ServerConfig {
     pub sessions: u64,
     /// Artifact directory (None ⇒ software engine).
     pub artifact_dir: Option<String>,
+    /// Worker threads for the software-engine executor's per-request lanes
+    /// (0 = all cores, 1 = serial). The XLA engine ignores this — its
+    /// parallelism lives inside the compiled executable.
+    pub executor_threads: usize,
 }
 
 impl Default for ServerConfig {
@@ -77,6 +81,7 @@ impl Default for ServerConfig {
             rng_workers: 2,
             sessions: 4,
             artifact_dir: Some("artifacts".into()),
+            executor_threads: 1,
         }
     }
 }
@@ -320,14 +325,17 @@ fn executor_loop(
                     exe.run(&keys, &rcs, noise_arg)
                         .expect("keystream execution failed")
                 }
-                Engine::Software(cipher) => lane_meta
-                    .iter()
-                    .enumerate()
-                    .map(|(i, &(_, nonce, counter))| {
+                // Request lanes are independent; fan them out across the
+                // configured executor threads (serial when 1, the default).
+                Engine::Software(cipher) => crate::util::par::par_collect(
+                    lane_meta.len(),
+                    cfg.executor_threads,
+                    |i| {
+                        let (_, nonce, counter) = lane_meta[i];
                         let key = SecretKey { k: keys[i].clone() };
                         cipher.keystream(&key, nonce, counter).ks
-                    })
-                    .collect(),
+                    },
+                ),
             }
         };
         let exec_ns = t0.elapsed().as_nanos() as u64;
@@ -403,6 +411,81 @@ impl Default for TranscipherConfig {
     }
 }
 
+impl TranscipherConfig {
+    /// Validating builder: CKKS params default to the smallest chain the
+    /// profile needs (N = 64, `required_levels()` working primes);
+    /// [`TranscipherConfigBuilder::build`] checks the level budget and the
+    /// CKKS invariants before any key material is generated.
+    pub fn builder(profile: CkksCipherProfile) -> TranscipherConfigBuilder {
+        let levels = profile.required_levels();
+        TranscipherConfigBuilder {
+            cfg: TranscipherConfig {
+                profile,
+                ckks: CkksParams::with_shape(64, levels),
+                seed: 2026,
+                nonce: 1000,
+                rotations: Vec::new(),
+            },
+        }
+    }
+}
+
+/// Fluent, validating constructor for [`TranscipherConfig`].
+#[derive(Debug, Clone)]
+pub struct TranscipherConfigBuilder {
+    cfg: TranscipherConfig,
+}
+
+impl TranscipherConfigBuilder {
+    /// CKKS parameter set (must cover the profile's required levels).
+    pub fn ckks(mut self, params: CkksParams) -> Self {
+        self.cfg.ckks = params;
+        self
+    }
+
+    /// Deterministic seed for key material.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Session nonce.
+    pub fn nonce(mut self, nonce: u64) -> Self {
+        self.cfg.nonce = nonce;
+        self
+    }
+
+    /// Rotation step counts for hoistable Galois keys.
+    pub fn rotations(mut self, steps: &[usize]) -> Self {
+        self.cfg.rotations = steps.to_vec();
+        self
+    }
+
+    /// Worker-thread knob for the CKKS hot path (forwarded into
+    /// `ckks.threads`; 0 = all cores, 1 = serial).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.cfg.ckks.threads = threads;
+        self
+    }
+
+    /// Validate and produce the configuration.
+    pub fn build(self) -> Result<TranscipherConfig> {
+        let cfg = self.cfg;
+        if cfg.ckks.levels < cfg.profile.required_levels() {
+            bail!(
+                "CKKS chain has {} levels but the {:?} profile needs {}",
+                cfg.ckks.levels,
+                cfg.profile.scheme,
+                cfg.profile.required_levels()
+            );
+        }
+        cfg.ckks
+            .validate()
+            .map_err(|e| e.wrap("TranscipherConfig::builder"))?;
+        Ok(cfg)
+    }
+}
+
 /// One client block on the wire: a counter and l real ciphertext values.
 #[derive(Debug, Clone)]
 pub struct TranscipherBlock {
@@ -442,10 +525,15 @@ impl TranscipherService {
                 cfg.profile.required_levels()
             );
         }
-        let ctx = CkksContext::generate(cfg.ckks, cfg.seed, &cfg.rotations);
+        let ctx = CkksContext::builder(cfg.ckks)
+            .seed(cfg.seed)
+            .rotations(&cfg.rotations)
+            .build()
+            .context("TranscipherService::start")?;
         let sym_key = cfg.profile.sample_key(cfg.seed ^ 0x5359_4D4B); // "SYMK"
         let mut rng = SplitMix64::new(cfg.seed ^ 0x454E_434B); // "ENCK"
-        let server = CkksTranscipher::setup(cfg.profile.clone(), &ctx, &sym_key, &mut rng);
+        let server = CkksTranscipher::setup(cfg.profile.clone(), &ctx, &sym_key, &mut rng)
+            .context("TranscipherService::start")?;
         let metrics = Arc::new(Metrics::new());
         metrics.set_key_bytes(ctx.switch_key_bytes());
         Ok(TranscipherService {
@@ -541,7 +629,7 @@ impl TranscipherService {
         let sym: Vec<Vec<f64>> = blocks.iter().map(|b| b.data.clone()).collect();
         let out = self
             .server
-            .transcipher(&self.ctx, self.cfg.nonce, &counters, &sym);
+            .transcipher(&self.ctx, self.cfg.nonce, &counters, &sym)?;
         let dt = t0.elapsed().as_nanos() as u64;
         // Noise-budget telemetry: gauge the level remaining on the output
         // and warn loudly when the chain is nearly spent — a downstream
@@ -749,14 +837,13 @@ mod tests {
     fn small_transcipher_service() -> TranscipherService {
         let profile = CkksCipherProfile::rubato_toy();
         let levels = profile.required_levels();
-        TranscipherService::start(TranscipherConfig {
-            profile,
-            ckks: CkksParams::with_shape(32, levels),
-            seed: 11,
-            nonce: 77,
-            rotations: vec![],
-        })
-        .unwrap()
+        let cfg = TranscipherConfig::builder(profile)
+            .ckks(CkksParams::with_shape(32, levels))
+            .seed(11)
+            .nonce(77)
+            .build()
+            .unwrap();
+        TranscipherService::start(cfg).unwrap()
     }
 
     #[test]
@@ -842,14 +929,14 @@ mod tests {
     fn transcipher_linear_layer_roundtrip_and_key_metrics() {
         let profile = CkksCipherProfile::rubato_toy();
         let levels = profile.required_levels() + 1; // one level for the linear layer
-        let mut svc = TranscipherService::start(TranscipherConfig {
-            profile,
-            ckks: CkksParams::with_shape(32, levels),
-            seed: 21,
-            nonce: 5,
-            rotations: vec![1],
-        })
-        .unwrap();
+        let cfg = TranscipherConfig::builder(profile)
+            .ckks(CkksParams::with_shape(32, levels))
+            .seed(21)
+            .nonce(5)
+            .rotations(&[1])
+            .build()
+            .unwrap();
+        let mut svc = TranscipherService::start(cfg).unwrap();
         // Key memory gauge: relin + 1 rotation key, surfaced in metrics.
         assert_eq!(
             svc.metrics().snapshot().key_bytes,
@@ -890,6 +977,13 @@ mod tests {
     #[test]
     fn transcipher_service_rejects_shallow_chain() {
         let profile = CkksCipherProfile::hera_toy(); // needs 7 levels
+        // The builder rejects the shallow chain before any keygen runs...
+        let err = TranscipherConfig::builder(profile.clone())
+            .ckks(CkksParams::with_shape(32, 4))
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("levels"), "{err}");
+        // ...and a hand-rolled struct literal is still caught by start().
         let cfg = TranscipherConfig {
             ckks: CkksParams::with_shape(32, 4),
             profile,

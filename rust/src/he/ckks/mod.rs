@@ -28,6 +28,14 @@
 //!   multiply-accumulate + mod-down + one automorphism of the result:
 //!   `φ_g(Σ_i D_i(c1)·φ_g^{-1}(ksk_i)) = Σ_i φ_g(D_i(c1))·ksk_i`.
 //!
+//! Construction goes through the validating builder —
+//! `CkksContext::builder(params).seed(s).rotations(&[..]).build()?` — which
+//! checks the parameter invariants up front and returns a typed error
+//! instead of panicking deep inside keygen. The `threads` knob on
+//! [`CkksParams`] (0 = all cores, 1 = serial) is installed into the RNS
+//! basis at build time; every row-parallel op under this context picks it
+//! up, and the output is bit-identical at any thread count.
+//!
 //! Scale management: every ciphertext carries its scale as f64 metadata.
 //! Rescaling divides the scale by the (≈ 2^scale_bits, not exactly)
 //! dropped prime, so scales drift. Operands are aligned by encoding
@@ -47,6 +55,7 @@ use crate::arith::{mod_mul64, mod_pow64};
 use crate::params::CkksParams;
 use crate::sampler::DiscreteGaussian;
 use crate::util::error::{Error, Result};
+use crate::util::par;
 use crate::util::rng::SplitMix64;
 use crate::xof::{Xof, XofKind};
 use std::collections::BTreeMap;
@@ -283,20 +292,55 @@ fn madd_ntt(acc: &mut [u64], x: &[u64], y: &[u64], q: u64) {
     }
 }
 
-impl CkksContext {
-    /// Generate a context deterministically from `seed`, with rotation keys
-    /// for the given left-rotation step counts.
-    pub fn generate(params: CkksParams, seed: u64, rotations: &[usize]) -> CkksContext {
+/// Fluent constructor for [`CkksContext`]: validates the parameter set,
+/// installs the thread knob into the RNS basis, and runs deterministic
+/// keygen. Replaces the positional `generate(params, seed, rotations)`.
+pub struct CkksContextBuilder {
+    params: CkksParams,
+    seed: u64,
+    rotations: Vec<usize>,
+}
+
+impl CkksContextBuilder {
+    /// Keygen seed (default 0). The same seed always yields the same keys.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Left-rotation step counts to generate rotation keys for.
+    pub fn rotations(mut self, steps: &[usize]) -> Self {
+        self.rotations = steps.to_vec();
+        self
+    }
+
+    /// Override the parameter set's worker-thread knob (0 = all cores,
+    /// 1 = serial) without rebuilding the params.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.params.threads = threads;
+        self
+    }
+
+    /// Validate and generate the context.
+    pub fn build(self) -> Result<CkksContext> {
+        let params = self
+            .params
+            .validate()
+            .map_err(|e| e.wrap("CkksContext::builder"))?;
         let basis = RnsBasis::generate(
             params.n,
             params.base_bits,
             params.scale_bits,
             params.levels,
         );
+        // Keygen below and every op under this context share the knob;
+        // the fan-out is over data the RNG never touches, so keys are
+        // identical at any thread count.
+        basis.set_threads(params.threads);
         let encoder = Encoder::new(params.n);
-        let mut rng = SplitMix64::new(seed);
+        let mut rng = SplitMix64::new(self.seed);
         let mut dgd = DiscreteGaussian::new(params.sigma);
-        let mut xof = XofKind::AesCtr.instantiate(seed ^ 0x434B_4B53, 0); // "CKKS"
+        let mut xof = XofKind::AesCtr.instantiate(self.seed ^ 0x434B_4B53, 0); // "CKKS"
         let top = basis.max_level();
         let s_coeffs: Vec<i64> = (0..params.n).map(|_| rng.below(3) as i64 - 1).collect();
         let s = RnsPoly::from_i64_coeffs(&basis, &s_coeffs, top);
@@ -312,7 +356,7 @@ impl CkksContext {
             xof.as_mut(),
         );
         let mut rot_keys = BTreeMap::new();
-        for &r in rotations {
+        for r in self.rotations {
             let g = galois_element(params.n, r);
             let sg_ext = s_ext.automorphism(g);
             let key = make_switch_key(
@@ -326,14 +370,40 @@ impl CkksContext {
             );
             rot_keys.insert(r, RotKey { galois: g, key });
         }
-        CkksContext {
+        Ok(CkksContext {
             params,
             basis,
             encoder,
             s,
             relin,
             rot_keys,
+        })
+    }
+}
+
+impl CkksContext {
+    /// Start building a context for `params` (see [`CkksContextBuilder`]).
+    pub fn builder(params: CkksParams) -> CkksContextBuilder {
+        CkksContextBuilder {
+            params,
+            seed: 0,
+            rotations: Vec::new(),
         }
+    }
+
+    /// Generate a context deterministically from `seed`, with rotation keys
+    /// for the given left-rotation step counts.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use CkksContext::builder(params).seed(..).rotations(..).build() — \
+                it validates instead of panicking and carries the thread knob"
+    )]
+    pub fn generate(params: CkksParams, seed: u64, rotations: &[usize]) -> CkksContext {
+        Self::builder(params)
+            .seed(seed)
+            .rotations(rotations)
+            .build()
+            .expect("invalid CKKS parameters")
     }
 
     /// Parameters.
@@ -376,31 +446,41 @@ impl CkksContext {
 
     // ---- encoding ----
 
-    /// Encode real slot values at the given scale and level.
-    pub fn encode(&self, values: &[f64], scale: f64, level: usize) -> Plaintext {
+    /// Encode real slot values at the given scale and level. Errors on a
+    /// non-positive/non-finite scale or coefficient overflow instead of
+    /// panicking.
+    pub fn encode(&self, values: &[f64], scale: f64, level: usize) -> Result<Plaintext> {
         let z: Vec<Complex> = values.iter().map(|&v| Complex::real(v)).collect();
         self.encode_complex(&z, scale, level)
     }
 
     /// Encode complex slot values at the given scale and level.
-    pub fn encode_complex(&self, values: &[Complex], scale: f64, level: usize) -> Plaintext {
-        assert!(scale > 0.0, "scale must be positive");
+    pub fn encode_complex(
+        &self,
+        values: &[Complex],
+        scale: f64,
+        level: usize,
+    ) -> Result<Plaintext> {
+        if !(scale.is_finite() && scale > 0.0) {
+            return Err(Error::msg(format!(
+                "encode: scale {scale} out of range (must be finite and positive)"
+            )));
+        }
         let coeffs = self.encoder.embed(values);
-        let ints: Vec<i128> = coeffs
-            .iter()
-            .map(|&c| {
-                let s = c * scale;
-                assert!(
-                    s.abs() < 1.7e38,
-                    "encoded coefficient overflows i128 (|value|·Δ too large)"
-                );
-                s.round() as i128
-            })
-            .collect();
-        Plaintext {
+        let mut ints = Vec::with_capacity(coeffs.len());
+        for &c in &coeffs {
+            let s = c * scale;
+            if !(s.abs() < 1.7e38) {
+                return Err(Error::msg(format!(
+                    "encode: coefficient {c:.3e} at scale {scale:.3e} overflows i128"
+                )));
+            }
+            ints.push(s.round() as i128);
+        }
+        Ok(Plaintext {
             poly: RnsPoly::from_i128_coeffs(&self.basis, &ints, level),
             scale,
-        }
+        })
     }
 
     /// Decode a plaintext back to complex slot values.
@@ -432,9 +512,14 @@ impl CkksContext {
     }
 
     /// Encrypt real slot values at the top level.
-    pub fn encrypt_values(&self, values: &[f64], scale: f64, rng: &mut SplitMix64) -> Ciphertext {
-        let pt = self.encode(values, scale, self.max_level());
-        self.encrypt(&pt, rng)
+    pub fn encrypt_values(
+        &self,
+        values: &[f64],
+        scale: f64,
+        rng: &mut SplitMix64,
+    ) -> Result<Ciphertext> {
+        let pt = self.encode(values, scale, self.max_level())?;
+        Ok(self.encrypt(&pt, rng))
     }
 
     /// Decrypt to complex slot values.
@@ -466,7 +551,14 @@ impl CkksContext {
         debug_assert!(l >= 1, "raise_scale needs a level to spend");
         let ql = self.basis.primes[l] as f64;
         let ones = vec![1.0; self.slots()];
-        let mut out = self.rescale(&self.mul_plain(ct, &ones, target * ql / ct.scale));
+        // Infallible by construction: the caller checked l ≥ 1 and the
+        // drift bound keeps the all-ones plaintext scale finite/positive.
+        let raised = self
+            .mul_plain(ct, &ones, target * ql / ct.scale)
+            .expect("raise_scale: unit-plaintext encode cannot fail");
+        let mut out = self
+            .rescale(&raised)
+            .expect("raise_scale: level was checked");
         out.scale = target;
         out
     }
@@ -531,35 +623,40 @@ impl CkksContext {
     }
 
     /// Add plaintext slot values (encoded at the ciphertext's scale/level).
-    pub fn add_plain(&self, ct: &Ciphertext, values: &[f64]) -> Ciphertext {
-        let pt = self.encode(values, ct.scale, ct.level());
-        Ciphertext {
+    pub fn add_plain(&self, ct: &Ciphertext, values: &[f64]) -> Result<Ciphertext> {
+        let pt = self.encode(values, ct.scale, ct.level())?;
+        Ok(Ciphertext {
             c0: ct.c0.add(&pt.poly),
             c1: ct.c1.clone(),
             scale: ct.scale,
-        }
+        })
     }
 
     /// `plaintext − ciphertext`: the transcipher's final step
     /// `Enc(m) = c − Enc(z)` with public c.
-    pub fn plain_sub(&self, values: &[f64], ct: &Ciphertext) -> Ciphertext {
-        let pt = self.encode(values, ct.scale, ct.level());
-        Ciphertext {
+    pub fn plain_sub(&self, values: &[f64], ct: &Ciphertext) -> Result<Ciphertext> {
+        let pt = self.encode(values, ct.scale, ct.level())?;
+        Ok(Ciphertext {
             c0: pt.poly.sub(&ct.c0),
             c1: ct.c1.neg(),
             scale: ct.scale,
-        }
+        })
     }
 
     /// Multiply by plaintext slot values encoded at `pt_scale`; resulting
     /// scale is the product (caller typically rescales next).
-    pub fn mul_plain(&self, ct: &Ciphertext, values: &[f64], pt_scale: f64) -> Ciphertext {
-        let pt = self.encode(values, pt_scale, ct.level());
-        Ciphertext {
+    pub fn mul_plain(
+        &self,
+        ct: &Ciphertext,
+        values: &[f64],
+        pt_scale: f64,
+    ) -> Result<Ciphertext> {
+        let pt = self.encode(values, pt_scale, ct.level())?;
+        Ok(Ciphertext {
             c0: ct.c0.mul(&pt.poly),
             c1: ct.c1.mul(&pt.poly),
             scale: ct.scale * pt_scale,
-        }
+        })
     }
 
     /// Multiply by a small signed integer (exact; scale unchanged). This is
@@ -574,9 +671,16 @@ impl CkksContext {
 
     /// Ciphertext multiplication with relinearization (hybrid key switch
     /// of the s² term). Scale multiplies; rescale afterwards to return
-    /// near Δ.
-    pub fn mul(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
+    /// near Δ. Errors at level 0: the Δ² product has no level left to
+    /// rescale and would silently wrap the base prime.
+    pub fn mul(&self, a: &Ciphertext, b: &Ciphertext) -> Result<Ciphertext> {
         let l = a.level().min(b.level());
+        if l == 0 {
+            return Err(Error::msg(
+                "mul at level 0: the Δ² product cannot be rescaled \
+                 (modulus chain exhausted)",
+            ));
+        }
         let (a, b) = (a.drop_to_level(l), b.drop_to_level(l));
         let d0 = a.c0.mul(&b.c0);
         let d1 = a.c0.mul(&b.c1).add(&a.c1.mul(&b.c0));
@@ -585,23 +689,30 @@ impl CkksContext {
             let _span = crate::obs::span("ckks/relin");
             self.key_switch(&d2, &self.relin)
         };
-        Ciphertext {
+        Ok(Ciphertext {
             c0: d0.add(&k0),
             c1: d1.add(&k1),
             scale: a.scale * b.scale,
-        }
+        })
     }
 
     /// Rescale: divide the phase (and scale) by the current top prime,
-    /// dropping one level.
-    pub fn rescale(&self, ct: &Ciphertext) -> Ciphertext {
+    /// dropping one level. Errors at level 0 — there is no prime left to
+    /// drop.
+    pub fn rescale(&self, ct: &Ciphertext) -> Result<Ciphertext> {
         let _span = crate::obs::span("ckks/rescale");
-        let q = self.basis.primes[ct.level()] as f64;
-        Ciphertext {
+        let l = ct.level();
+        if l == 0 {
+            return Err(Error::msg(
+                "rescale at level 0: the modulus chain is exhausted",
+            ));
+        }
+        let q = self.basis.primes[l] as f64;
+        Ok(Ciphertext {
             c0: ct.c0.rescale_top(),
             c1: ct.c1.rescale_top(),
             scale: ct.scale / q,
-        }
+        })
     }
 
     /// Rotate slots left by `steps`. Returns a typed error (not a panic)
@@ -671,8 +782,13 @@ impl CkksContext {
         let _span = crate::obs::span("ckks/hoist");
         let l = d.level();
         let p = self.basis.special;
-        let digits = (0..=l)
-            .map(|i| {
+        // Digits are independent: each lifts one residue row to every
+        // target modulus and NTTs the lifts, so the fan-out axis is the
+        // digit index (work per item is (l+2) forward NTTs).
+        let digits = par::par_collect(
+            l + 1,
+            self.basis.par_threads((l + 1) * (l + 2)),
+            |i| {
                 let digit = &d.rows[i];
                 let rows: Vec<Vec<u64>> = (0..=l)
                     .map(|j| {
@@ -686,8 +802,8 @@ impl CkksContext {
                 let mut prow: Vec<u64> = digit.iter().map(|&v| v % p).collect();
                 self.basis.special_ctx.forward(&mut prow);
                 (rows, prow)
-            })
-            .collect();
+            },
+        );
         HoistedDecomposition { digits, level: l }
     }
 
@@ -702,34 +818,44 @@ impl CkksContext {
         let l = dec.level;
         let n = self.basis.n;
         let p = self.basis.special;
-        let mut acc0_rows = vec![vec![0u64; n]; l + 1];
-        let mut acc1_rows = vec![vec![0u64; n]; l + 1];
-        let mut acc0_prow = vec![0u64; n];
-        let mut acc1_prow = vec![0u64; n];
-        for (i, (drows, dprow)) in dec.digits.iter().enumerate() {
-            let kd = &key.digits[i];
-            for j in 0..=l {
+        // Output row j depends only on row j of every digit, so the
+        // fan-out axis is the output row — the P row rides along as item
+        // l + 1 (same trick as RnsPolyExt::mul). Each item accumulates
+        // both the b- and a-side and inverse-NTTs its two rows.
+        let mut all = par::par_collect(l + 2, self.basis.par_threads(l + 2), |j| {
+            let mut a0 = vec![0u64; n];
+            let mut a1 = vec![0u64; n];
+            if j <= l {
                 let qj = self.basis.primes[j];
-                madd_ntt(&mut acc0_rows[j], &drows[j], &kd.b_rows[j], qj);
-                madd_ntt(&mut acc1_rows[j], &drows[j], &kd.a_rows[j], qj);
+                for ((drows, _), kd) in dec.digits.iter().zip(&key.digits) {
+                    madd_ntt(&mut a0, &drows[j], &kd.b_rows[j], qj);
+                    madd_ntt(&mut a1, &drows[j], &kd.a_rows[j], qj);
+                }
+                self.basis.ctxs[j].inverse(&mut a0);
+                self.basis.ctxs[j].inverse(&mut a1);
+            } else {
+                for ((_, dprow), kd) in dec.digits.iter().zip(&key.digits) {
+                    madd_ntt(&mut a0, dprow, &kd.b_prow, p);
+                    madd_ntt(&mut a1, dprow, &kd.a_prow, p);
+                }
+                self.basis.special_ctx.inverse(&mut a0);
+                self.basis.special_ctx.inverse(&mut a1);
             }
-            madd_ntt(&mut acc0_prow, dprow, &kd.b_prow, p);
-            madd_ntt(&mut acc1_prow, dprow, &kd.a_prow, p);
-        }
-        let finish = |mut rows: Vec<Vec<u64>>, mut prow: Vec<u64>| -> RnsPolyExt {
-            for (row, ctx) in rows.iter_mut().zip(&self.basis.ctxs) {
-                ctx.inverse(row);
-            }
-            self.basis.special_ctx.inverse(&mut prow);
-            RnsPolyExt {
-                rows,
-                prow,
-                basis: Arc::clone(&self.basis),
-            }
-        };
+            (a0, a1)
+        });
+        let (p0, p1) = all.pop().expect("l + 2 rows");
+        let (rows0, rows1): (Vec<_>, Vec<_>) = all.into_iter().unzip();
         (
-            finish(acc0_rows, acc0_prow),
-            finish(acc1_rows, acc1_prow),
+            RnsPolyExt {
+                rows: rows0,
+                prow: p0,
+                basis: Arc::clone(&self.basis),
+            },
+            RnsPolyExt {
+                rows: rows1,
+                prow: p1,
+                basis: Arc::clone(&self.basis),
+            },
         )
     }
 
@@ -756,7 +882,11 @@ mod tests {
 
     fn setup(rotations: &[usize]) -> (CkksContext, SplitMix64) {
         (
-            CkksContext::generate(small_params(), 7, rotations),
+            CkksContext::builder(small_params())
+                .seed(7)
+                .rotations(rotations)
+                .build()
+                .expect("test params are valid"),
             SplitMix64::new(3),
         )
     }
@@ -776,7 +906,7 @@ mod tests {
     fn encrypt_decrypt_roundtrip() {
         let (ctx, mut rng) = setup(&[]);
         let x = rand_slots(&mut rng, ctx.slots());
-        let ct = ctx.encrypt_values(&x, DELTA, &mut rng);
+        let ct = ctx.encrypt_values(&x, DELTA, &mut rng).unwrap();
         assert_eq!(ct.level(), ctx.max_level());
         let err = max_err(&ctx.decrypt(&ct), &x);
         assert!(err < 1e-8, "enc/dec err {err}");
@@ -787,16 +917,16 @@ mod tests {
         let (ctx, mut rng) = setup(&[]);
         let x = rand_slots(&mut rng, ctx.slots());
         let y = rand_slots(&mut rng, ctx.slots());
-        let cx = ctx.encrypt_values(&x, DELTA, &mut rng);
-        let cy = ctx.encrypt_values(&y, DELTA, &mut rng);
+        let cx = ctx.encrypt_values(&x, DELTA, &mut rng).unwrap();
+        let cy = ctx.encrypt_values(&y, DELTA, &mut rng).unwrap();
         let sum: Vec<f64> = x.iter().zip(&y).map(|(a, b)| a + b).collect();
         let dif: Vec<f64> = x.iter().zip(&y).map(|(a, b)| a - b).collect();
         assert!(max_err(&ctx.decrypt(&ctx.add(&cx, &cy)), &sum) < 1e-8);
         assert!(max_err(&ctx.decrypt(&ctx.sub(&cx, &cy)), &dif) < 1e-8);
         // Plaintext add and plaintext − ciphertext.
-        assert!(max_err(&ctx.decrypt(&ctx.add_plain(&cx, &y)), &sum) < 1e-8);
+        assert!(max_err(&ctx.decrypt(&ctx.add_plain(&cx, &y).unwrap()), &sum) < 1e-8);
         let psd: Vec<f64> = y.iter().zip(&x).map(|(a, b)| a - b).collect();
-        assert!(max_err(&ctx.decrypt(&ctx.plain_sub(&y, &cx)), &psd) < 1e-8);
+        assert!(max_err(&ctx.decrypt(&ctx.plain_sub(&y, &cx).unwrap()), &psd) < 1e-8);
     }
 
     #[test]
@@ -804,9 +934,9 @@ mod tests {
         let (ctx, mut rng) = setup(&[]);
         let x = rand_slots(&mut rng, ctx.slots());
         let y = rand_slots(&mut rng, ctx.slots());
-        let cx = ctx.encrypt_values(&x, DELTA, &mut rng);
-        let cy = ctx.encrypt_values(&y, DELTA, &mut rng);
-        let cm = ctx.rescale(&ctx.mul(&cx, &cy));
+        let cx = ctx.encrypt_values(&x, DELTA, &mut rng).unwrap();
+        let cy = ctx.encrypt_values(&y, DELTA, &mut rng).unwrap();
+        let cm = ctx.rescale(&ctx.mul(&cx, &cy).unwrap()).unwrap();
         assert_eq!(cm.level(), ctx.max_level() - 1);
         let prod: Vec<f64> = x.iter().zip(&y).map(|(a, b)| a * b).collect();
         let err = max_err(&ctx.decrypt(&cm), &prod);
@@ -821,8 +951,8 @@ mod tests {
         let (ctx, mut rng) = setup(&[]);
         let x = rand_slots(&mut rng, ctx.slots());
         let y = rand_slots(&mut rng, ctx.slots());
-        let cx = ctx.encrypt_values(&x, DELTA, &mut rng);
-        let cp = ctx.rescale(&ctx.mul_plain(&cx, &y, DELTA));
+        let cx = ctx.encrypt_values(&x, DELTA, &mut rng).unwrap();
+        let cp = ctx.rescale(&ctx.mul_plain(&cx, &y, DELTA).unwrap()).unwrap();
         let prod: Vec<f64> = x.iter().zip(&y).map(|(a, b)| a * b).collect();
         assert!(max_err(&ctx.decrypt(&cp), &prod) < 1e-7);
         let c3 = ctx.mul_scalar_int(&cx, -3);
@@ -835,10 +965,10 @@ mod tests {
     fn depth_chain_of_squares() {
         let (ctx, mut rng) = setup(&[]);
         let x = rand_slots(&mut rng, ctx.slots());
-        let mut c = ctx.encrypt_values(&x, DELTA, &mut rng);
+        let mut c = ctx.encrypt_values(&x, DELTA, &mut rng).unwrap();
         let mut v = x.clone();
         for _ in 0..3 {
-            c = ctx.rescale(&ctx.mul(&c, &c));
+            c = ctx.rescale(&ctx.mul(&c, &c).unwrap()).unwrap();
             v = v.iter().map(|a| a * a).collect();
         }
         let err = max_err(&ctx.decrypt(&c), &v);
@@ -851,7 +981,7 @@ mod tests {
         let (ctx, mut rng) = setup(&[1, 3]);
         let slots = ctx.slots();
         let x = rand_slots(&mut rng, slots);
-        let cx = ctx.encrypt_values(&x, DELTA, &mut rng);
+        let cx = ctx.encrypt_values(&x, DELTA, &mut rng).unwrap();
         for steps in [1usize, 3] {
             let cr = ctx.rotate(&cx, steps).unwrap();
             let want: Vec<f64> = (0..slots).map(|j| x[(j + steps) % slots]).collect();
@@ -865,7 +995,7 @@ mod tests {
         let (ctx, mut rng) = setup(&[1]);
         let slots = ctx.slots();
         let x = rand_slots(&mut rng, slots);
-        let cx = ctx.encrypt_values(&x, DELTA, &mut rng);
+        let cx = ctx.encrypt_values(&x, DELTA, &mut rng).unwrap();
         let c2 = ctx.rotate(&ctx.rotate(&cx, 1).unwrap(), 1).unwrap();
         let want: Vec<f64> = (0..slots).map(|j| x[(j + 2) % slots]).collect();
         assert!(max_err(&ctx.decrypt(&c2), &want) < 1e-4);
@@ -879,10 +1009,10 @@ mod tests {
         let (ctx, mut rng) = setup(&[2]);
         let slots = ctx.slots();
         let x = rand_slots(&mut rng, slots);
-        let mut c = ctx.encrypt_values(&x, DELTA, &mut rng);
+        let mut c = ctx.encrypt_values(&x, DELTA, &mut rng).unwrap();
         let mut v = x.clone();
         for _ in 0..3 {
-            c = ctx.rescale(&ctx.mul(&c, &c));
+            c = ctx.rescale(&ctx.mul(&c, &c).unwrap()).unwrap();
             v = v.iter().map(|a| a * a).collect();
         }
         let cr = ctx.rotate(&c, 2).unwrap();
@@ -895,7 +1025,7 @@ mod tests {
     fn missing_rotation_key_is_a_typed_error() {
         let (ctx, mut rng) = setup(&[1]);
         let x = rand_slots(&mut rng, ctx.slots());
-        let cx = ctx.encrypt_values(&x, DELTA, &mut rng);
+        let cx = ctx.encrypt_values(&x, DELTA, &mut rng).unwrap();
         let err = ctx.rotate(&cx, 5).unwrap_err();
         let msg = err.to_string();
         assert!(msg.contains("no rotation key for step 5"), "{msg}");
@@ -907,7 +1037,7 @@ mod tests {
         let (ctx, mut rng) = setup(&[1, 2, 5]);
         let slots = ctx.slots();
         let x = rand_slots(&mut rng, slots);
-        let cx = ctx.encrypt_values(&x, DELTA, &mut rng);
+        let cx = ctx.encrypt_values(&x, DELTA, &mut rng).unwrap();
         let hoisted = ctx.rotate_hoisted(&cx, &[1, 2, 5]).unwrap();
         for (ct, &steps) in hoisted.iter().zip(&[1usize, 2, 5]) {
             // Bit-identical: rotate() is hoist + apply of the same digits.
@@ -927,13 +1057,13 @@ mod tests {
         let (ctx, mut rng) = setup(&[]);
         let x = rand_slots(&mut rng, ctx.slots());
         let y = rand_slots(&mut rng, ctx.slots());
-        let cx = ctx.encrypt_values(&x, DELTA, &mut rng);
-        let cy = ctx.encrypt_values(&y, DELTA, &mut rng);
+        let cx = ctx.encrypt_values(&x, DELTA, &mut rng).unwrap();
+        let cy = ctx.encrypt_values(&y, DELTA, &mut rng).unwrap();
         // Drift cy's scale: multiply by plaintext ones at Δ and rescale —
         // scale becomes Δ²/q_top ≈ Δ·(1 ± 2^-15), a real drifted-rescale
         // history relative to cx.
         let ones = vec![1.0; ctx.slots()];
-        let cy_drift = ctx.rescale(&ctx.mul_plain(&cy, &ones, DELTA));
+        let cy_drift = ctx.rescale(&ctx.mul_plain(&cy, &ones, DELTA).unwrap()).unwrap();
         let drift = (cy_drift.scale - DELTA).abs() / DELTA;
         assert!(drift > SCALE_ALIGN_RTOL, "test needs real drift, got {drift:.3e}");
         let sum = ctx.add(&cx, &cy_drift);
@@ -955,8 +1085,8 @@ mod tests {
         // the repair multiplication would wrap the modulus at low levels.
         let (ctx, mut rng) = setup(&[]);
         let x = rand_slots(&mut rng, ctx.slots());
-        let cx = ctx.encrypt_values(&x, DELTA, &mut rng);
-        let cy = ctx.mul(&cx, &cx); // scale Δ², not rescaled
+        let cx = ctx.encrypt_values(&x, DELTA, &mut rng).unwrap();
+        let cy = ctx.mul(&cx, &cx).unwrap(); // scale Δ², not rescaled
         let _ = ctx.add(&cx, &cy);
     }
 
@@ -968,6 +1098,80 @@ mod tests {
         // Per key: (L+1) digits × 2 polys × (L+2) rows × N × 8 bytes.
         let per_key = (top as u64 + 1) * 2 * (top as u64 + 2) * n * 8;
         assert_eq!(ctx.switch_key_bytes(), 2 * per_key); // relin + one rot key
+    }
+
+    #[test]
+    fn exhausted_chain_is_a_typed_error() {
+        // Burn the ciphertext down to level 0, then every op that needs a
+        // level must return an error naming the problem — not panic.
+        let (ctx, mut rng) = setup(&[]);
+        let x = rand_slots(&mut rng, ctx.slots());
+        let ct = ctx.encrypt_values(&x, DELTA, &mut rng).unwrap();
+        let floor = ct.drop_to_level(0);
+        let e = ctx.rescale(&floor).unwrap_err();
+        assert!(e.to_string().contains("rescale at level 0"), "{e}");
+        let e = ctx.mul(&floor, &floor).unwrap_err();
+        assert!(e.to_string().contains("mul at level 0"), "{e}");
+        // And mul aligns to the lower operand first, so a fresh top-level
+        // partner does not rescue it.
+        assert!(ctx.mul(&ct, &floor).is_err());
+    }
+
+    #[test]
+    fn encode_rejects_out_of_range_scale() {
+        let (ctx, _) = setup(&[]);
+        let v = vec![0.5; ctx.slots()];
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let e = ctx.encode(&v, bad, ctx.max_level()).unwrap_err();
+            assert!(e.to_string().contains("out of range"), "{e}");
+        }
+        // Coefficient overflow: a huge-but-finite scale pushes |v|·Δ past
+        // the i128 guard.
+        let e = ctx.encode(&v, 1e40, ctx.max_level()).unwrap_err();
+        assert!(e.to_string().contains("overflows"), "{e}");
+        // encrypt_values surfaces the same error.
+        let mut rng = SplitMix64::new(1);
+        assert!(ctx.encrypt_values(&v, -2.0, &mut rng).is_err());
+    }
+
+    #[test]
+    fn builder_rejects_invalid_params_before_keygen() {
+        let mut p = small_params();
+        p.levels = 0;
+        let e = CkksContext::builder(p).build().unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("CkksContext::builder"), "{msg}");
+        assert!(msg.contains("levels"), "{msg}");
+    }
+
+    #[test]
+    fn thread_knob_does_not_change_results() {
+        // Same seed, serial vs. auto threads: keygen and the full
+        // mul→rescale→rotate pipeline must be bit-identical.
+        let mk = |threads: usize| {
+            let mut p = small_params();
+            p.threads = threads;
+            CkksContext::builder(p)
+                .seed(7)
+                .rotations(&[1])
+                .build()
+                .unwrap()
+        };
+        let (ctx1, ctx0) = (mk(1), mk(0));
+        let mut r1 = SplitMix64::new(3);
+        let mut r0 = SplitMix64::new(3);
+        let x = rand_slots(&mut r1, ctx1.slots());
+        let _ = rand_slots(&mut r0, ctx0.slots());
+        let c1 = ctx1.encrypt_values(&x, DELTA, &mut r1).unwrap();
+        let c0 = ctx0.encrypt_values(&x, DELTA, &mut r0).unwrap();
+        let m1 = ctx1
+            .rotate(&ctx1.rescale(&ctx1.mul(&c1, &c1).unwrap()).unwrap(), 1)
+            .unwrap();
+        let m0 = ctx0
+            .rotate(&ctx0.rescale(&ctx0.mul(&c0, &c0).unwrap()).unwrap(), 1)
+            .unwrap();
+        assert_eq!(m1.c0, m0.c0);
+        assert_eq!(m1.c1, m0.c1);
     }
 
     #[test]
@@ -987,7 +1191,7 @@ mod tests {
         let z: Vec<Complex> = (0..ctx.slots())
             .map(|_| Complex::new(rng.next_f64() - 0.5, rng.next_f64() - 0.5))
             .collect();
-        let pt = ctx.encode_complex(&z, DELTA, ctx.max_level());
+        let pt = ctx.encode_complex(&z, DELTA, ctx.max_level()).unwrap();
         let ct = ctx.encrypt(&pt, &mut rng);
         let back = ctx.decrypt(&ct);
         for (a, b) in z.iter().zip(&back) {

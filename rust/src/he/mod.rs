@@ -44,7 +44,7 @@ pub mod rns;
 pub mod transcipher;
 
 pub use bfv::{BfvParams, Ciphertext, KeyPair, SecretKeyHe};
-pub use ckks::{CkksContext, Complex, Encoder, HoistedDecomposition};
+pub use ckks::{CkksContext, CkksContextBuilder, Complex, Encoder, HoistedDecomposition};
 pub use rns::{RnsBasis, RnsPoly, RnsPolyExt};
 pub use transcipher::{
     CkksCipherProfile, CkksTranscipher, ToyCipher, ToyParams, TranscipherServer,

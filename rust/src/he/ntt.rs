@@ -4,6 +4,15 @@
 //! is pointwise in the ψ-twisted NTT domain, where ψ is a primitive 2N-th
 //! root of unity. The transform is the standard iterative
 //! Cooley-Tukey / Gentleman-Sande pair with precomputed bit-reversed twiddles.
+//!
+//! The inner butterfly uses **Harvey/Shoup multiplication**: each twiddle w
+//! is stored next to its 64-bit reciprocal `w' = ⌊w·2⁶⁴/q⌋`, so the modular
+//! product needs one widening multiply for the quotient estimate and two
+//! wrapping multiplies — no u128 division/remainder on the hot path. The
+//! butterfly is branch-light straight-line u64 arithmetic over the flat
+//! per-prime `Vec<u64>` rows, which lets the compiler vectorize it.
+//! Outputs stay canonical in [0, q), so the transform is bit-identical to
+//! the schoolbook-checked reference it replaced.
 
 use crate::arith::zq::{mod_mul64, mod_pow64};
 
@@ -16,10 +25,38 @@ pub struct NttContext {
     pub n: usize,
     /// Powers of ψ in bit-reversed order (forward twiddles).
     psi_rev: Vec<u64>,
+    /// Shoup reciprocals of `psi_rev` (⌊w·2⁶⁴/q⌋).
+    psi_rev_shoup: Vec<u64>,
     /// Powers of ψ⁻¹ in bit-reversed order (inverse twiddles).
     psi_inv_rev: Vec<u64>,
+    /// Shoup reciprocals of `psi_inv_rev`.
+    psi_inv_rev_shoup: Vec<u64>,
     /// N⁻¹ mod q.
     n_inv: u64,
+    /// Shoup reciprocal of `n_inv`.
+    n_inv_shoup: u64,
+}
+
+/// Shoup reciprocal `⌊w·2⁶⁴/q⌋` of a precomputed constant `w < q`.
+#[inline(always)]
+fn shoup(w: u64, q: u64) -> u64 {
+    (((w as u128) << 64) / q as u128) as u64
+}
+
+/// Harvey/Shoup modular multiplication by a precomputed constant:
+/// `x·w mod q` given `w_shoup = ⌊w·2⁶⁴/q⌋`. The quotient estimate
+/// `hi = ⌊x·w_shoup/2⁶⁴⌋` is Q or Q−1, so one conditional subtraction
+/// canonicalizes. Valid for any `x < 2⁶⁴` and `q < 2⁶³` (chain primes are
+/// ≤ 60 bits).
+#[inline(always)]
+fn mul_shoup(x: u64, w: u64, w_shoup: u64, q: u64) -> u64 {
+    let hi = ((x as u128 * w_shoup as u128) >> 64) as u64;
+    let r = x.wrapping_mul(w).wrapping_sub(hi.wrapping_mul(q));
+    if r >= q {
+        r - q
+    } else {
+        r
+    }
 }
 
 impl NttContext {
@@ -49,12 +86,18 @@ impl NttContext {
             psi_inv_rev[i] = powers_inv[r as usize];
         }
         let n_inv = mod_pow64(n as u64, q - 2, q);
+        let psi_rev_shoup = psi_rev.iter().map(|&w| shoup(w, q)).collect();
+        let psi_inv_rev_shoup = psi_inv_rev.iter().map(|&w| shoup(w, q)).collect();
+        let n_inv_shoup = shoup(n_inv, q);
         NttContext {
             q,
             n,
             psi_rev,
+            psi_rev_shoup,
             psi_inv_rev,
+            psi_inv_rev_shoup,
             n_inv,
+            n_inv_shoup,
         }
     }
 
@@ -72,9 +115,10 @@ impl NttContext {
                 let j1 = 2 * i * t;
                 let j2 = j1 + t;
                 let s = self.psi_rev[m + i];
+                let s_shoup = self.psi_rev_shoup[m + i];
                 for j in j1..j2 {
                     let u = a[j];
-                    let v = mod_mul64(a[j + t], s, q);
+                    let v = mul_shoup(a[j + t], s, s_shoup, q);
                     a[j] = add_mod(u, v, q);
                     a[j + t] = sub_mod(u, v, q);
                 }
@@ -96,11 +140,12 @@ impl NttContext {
             for i in 0..h {
                 let j2 = j1 + t;
                 let s = self.psi_inv_rev[h + i];
+                let s_shoup = self.psi_inv_rev_shoup[h + i];
                 for j in j1..j2 {
                     let u = a[j];
                     let v = a[j + t];
                     a[j] = add_mod(u, v, q);
-                    a[j + t] = mod_mul64(sub_mod(u, v, q), s, q);
+                    a[j + t] = mul_shoup(sub_mod(u, v, q), s, s_shoup, q);
                 }
                 j1 += 2 * t;
             }
@@ -108,7 +153,7 @@ impl NttContext {
             m = h;
         }
         for x in a.iter_mut() {
-            *x = mod_mul64(*x, self.n_inv, q);
+            *x = mul_shoup(*x, self.n_inv, self.n_inv_shoup, q);
         }
     }
 
@@ -240,6 +285,34 @@ mod tests {
         let mut rng = SplitMix64::new(9);
         let a: Vec<u64> = (0..n).map(|_| rng.next_u64() % Q59).collect();
         assert_eq!(ctx.multiply(&a, &one), a);
+    }
+
+    #[test]
+    fn shoup_multiplication_matches_u128_reference() {
+        // The Harvey/Shoup butterfly product must agree with the exact
+        // u128 `%` for every operand the transform can produce — canonical
+        // values, near-q values, and arbitrary u64 x (the identity holds
+        // for any x when q < 2^63).
+        let mut rng = SplitMix64::new(0x5155);
+        for q in [Q59, 2_013_265_921, 65_537, 12_289] {
+            for _ in 0..5_000 {
+                let w = rng.next_u64() % q;
+                let ws = shoup(w, q);
+                for x in [
+                    rng.next_u64() % q,
+                    rng.next_u64(),
+                    q - 1,
+                    0,
+                    u64::MAX,
+                ] {
+                    assert_eq!(
+                        mul_shoup(x, w, ws, q),
+                        mod_mul64(x, w, q),
+                        "q={q} w={w} x={x}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

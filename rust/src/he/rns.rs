@@ -19,9 +19,16 @@
 use super::ntt::NttContext;
 use crate::arith::zq::{mod_mul64, mod_pow64};
 use crate::arith::Zq;
+use crate::util::par;
 use crate::util::rng::SplitMix64;
 use std::cmp::Ordering;
+use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrdering};
 use std::sync::Arc;
+
+/// Minimum residue-coefficient count (rows × N) before an RNS op fans out
+/// across threads; below this the fork overhead exceeds the row work
+/// (small test rings and quick-mode benches stay serial).
+const MIN_PAR_COEFFS: usize = 1 << 15;
 
 /// Minimal unsigned big integer: little-endian u64 limbs, always trimmed.
 ///
@@ -204,6 +211,10 @@ pub struct RnsBasis {
     pub special_ctx: Arc<NttContext>,
     /// CRT composition tables, one per level.
     crt: Vec<CrtTable>,
+    /// Thread-count knob for row-parallel ops (0 = all available cores,
+    /// 1 = serial). Set through [`RnsBasis::set_threads`]; the default is
+    /// serial so bare bases behave exactly as before.
+    threads: AtomicUsize,
 }
 
 impl RnsBasis {
@@ -273,7 +284,42 @@ impl RnsBasis {
             special,
             special_ctx,
             crt,
+            threads: AtomicUsize::new(1),
         })
+    }
+
+    /// Set the thread-count knob for row-parallel ops: 0 means "all
+    /// available cores", 1 serial. Every [`RnsPoly`]/[`RnsPolyExt`]
+    /// sharing this basis picks the change up on its next operation; the
+    /// results are bit-identical at any setting.
+    pub fn set_threads(&self, threads: usize) {
+        self.threads.store(threads, AtomicOrdering::Relaxed);
+    }
+
+    /// The resolved thread count (0-knob resolved to the core count).
+    pub fn threads(&self) -> usize {
+        par::resolve(self.threads.load(AtomicOrdering::Relaxed))
+    }
+
+    /// Thread count for an op over `rows` residue rows: serial below the
+    /// [`MIN_PAR_COEFFS`] work floor, the configured count otherwise.
+    pub(crate) fn par_threads(&self, rows: usize) -> usize {
+        if rows * self.n < MIN_PAR_COEFFS {
+            1
+        } else {
+            self.threads()
+        }
+    }
+
+    /// Thread count for the cheap memory-bound row ops (add/sub/neg/
+    /// scalar): these are a handful of instructions per coefficient, so
+    /// the fork only pays for itself at a much larger work floor.
+    fn par_threads_linear(&self, rows: usize) -> usize {
+        if rows * self.n < MIN_PAR_COEFFS << 3 {
+            1
+        } else {
+            self.threads()
+        }
     }
 
     /// Highest level (number of working primes).
@@ -315,16 +361,16 @@ impl RnsBasis {
         let tab = &self.crt[level];
         // (Q_l / q_i) mod m, computed once per call (off the per-coeff path).
         let hat_mod_m: Vec<u64> = tab.hat.iter().map(|h| h.rem_u64(m)).collect();
-        (0..self.n)
-            .map(|k| {
-                let mut acc = 0u64;
-                for i in 0..=level {
-                    let y = mod_mul64(rows[i][k], tab.hat_inv[i], self.primes[i]);
-                    acc = (acc + mod_mul64(y % m, hat_mod_m[i], m)) % m;
-                }
-                acc
-            })
-            .collect()
+        // Coefficients are independent: fan out over the coefficient axis
+        // (the row axis is the summation here, so it cannot be split).
+        par::par_collect(self.n, self.par_threads(rows.len()), |k| {
+            let mut acc = 0u64;
+            for i in 0..=level {
+                let y = mod_mul64(rows[i][k], tab.hat_inv[i], self.primes[i]);
+                acc = (acc + mod_mul64(y % m, hat_mod_m[i], m)) % m;
+            }
+            acc
+        })
     }
 
     /// CRT-compose one coefficient (residue column `k` of `rows`) into its
@@ -499,13 +545,10 @@ impl RnsPoly {
     /// `self + other` (matching levels).
     pub fn add(&self, other: &RnsPoly) -> RnsPoly {
         assert_eq!(self.level(), other.level(), "level mismatch in add");
-        let rows = self
-            .rows
-            .iter()
-            .zip(&other.rows)
-            .zip(&self.basis.primes)
-            .map(|((a, b), &q)| add_row(a, b, q))
-            .collect();
+        let l = self.rows.len();
+        let rows = par::par_collect(l, self.basis.par_threads_linear(l), |i| {
+            add_row(&self.rows[i], &other.rows[i], self.basis.primes[i])
+        });
         RnsPoly {
             rows,
             basis: Arc::clone(&self.basis),
@@ -515,13 +558,10 @@ impl RnsPoly {
     /// `self - other` (matching levels).
     pub fn sub(&self, other: &RnsPoly) -> RnsPoly {
         assert_eq!(self.level(), other.level(), "level mismatch in sub");
-        let rows = self
-            .rows
-            .iter()
-            .zip(&other.rows)
-            .zip(&self.basis.primes)
-            .map(|((a, b), &q)| sub_row(a, b, q))
-            .collect();
+        let l = self.rows.len();
+        let rows = par::par_collect(l, self.basis.par_threads_linear(l), |i| {
+            sub_row(&self.rows[i], &other.rows[i], self.basis.primes[i])
+        });
         RnsPoly {
             rows,
             basis: Arc::clone(&self.basis),
@@ -530,28 +570,25 @@ impl RnsPoly {
 
     /// `-self`.
     pub fn neg(&self) -> RnsPoly {
-        let rows = self
-            .rows
-            .iter()
-            .zip(&self.basis.primes)
-            .map(|(a, &q)| neg_row(a, q))
-            .collect();
+        let l = self.rows.len();
+        let rows = par::par_collect(l, self.basis.par_threads_linear(l), |i| {
+            neg_row(&self.rows[i], self.basis.primes[i])
+        });
         RnsPoly {
             rows,
             basis: Arc::clone(&self.basis),
         }
     }
 
-    /// Negacyclic NTT product per prime (matching levels).
+    /// Negacyclic NTT product per prime (matching levels). The per-prime
+    /// transforms are independent — the RNS chain is the natural parallel
+    /// axis (Medha's per-RPAU argument), so they fan out across threads.
     pub fn mul(&self, other: &RnsPoly) -> RnsPoly {
         assert_eq!(self.level(), other.level(), "level mismatch in mul");
-        let rows = self
-            .rows
-            .iter()
-            .zip(&other.rows)
-            .zip(&self.basis.ctxs)
-            .map(|((a, b), ctx)| ctx.multiply(a, b))
-            .collect();
+        let l = self.rows.len();
+        let rows = par::par_collect(l, self.basis.par_threads(l), |i| {
+            self.basis.ctxs[i].multiply(&self.rows[i], &other.rows[i])
+        });
         RnsPoly {
             rows,
             basis: Arc::clone(&self.basis),
@@ -561,15 +598,12 @@ impl RnsPoly {
     /// Multiply by a small signed integer scalar (no scale change in CKKS
     /// terms — used for the cipher matrices' {1,2,3} entries).
     pub fn mul_scalar_i64(&self, s: i64) -> RnsPoly {
-        let rows = self
-            .rows
-            .iter()
-            .zip(&self.basis.primes)
-            .map(|(a, &q)| {
-                let sm = s.rem_euclid(q as i64) as u64;
-                a.iter().map(|&x| mod_mul64(x, sm, q)).collect()
-            })
-            .collect();
+        let l = self.rows.len();
+        let rows = par::par_collect(l, self.basis.par_threads_linear(l), |i| {
+            let q = self.basis.primes[i];
+            let sm = s.rem_euclid(q as i64) as u64;
+            self.rows[i].iter().map(|&x| mod_mul64(x, sm, q)).collect()
+        });
         RnsPoly {
             rows,
             basis: Arc::clone(&self.basis),
@@ -581,12 +615,10 @@ impl RnsPoly {
     pub fn automorphism(&self, g: usize) -> RnsPoly {
         let n = self.basis.n;
         assert_eq!(g % 2, 1, "galois element must be odd");
-        let rows = self
-            .rows
-            .iter()
-            .zip(&self.basis.primes)
-            .map(|(a, &q)| aut_row(a, g, q, n))
-            .collect();
+        let l = self.rows.len();
+        let rows = par::par_collect(l, self.basis.par_threads_linear(l), |i| {
+            aut_row(&self.rows[i], g, self.basis.primes[i], n)
+        });
         RnsPoly {
             rows,
             basis: Arc::clone(&self.basis),
@@ -614,11 +646,10 @@ impl RnsPoly {
         let qt = self.basis.primes[l];
         let half = qt / 2;
         let top = &self.rows[l];
-        let mut rows = Vec::with_capacity(l);
-        for j in 0..l {
+        let rows = par::par_collect(l, self.basis.par_threads(l), |j| {
             let qj = self.basis.primes[j];
             let inv = mod_pow64(qt % qj, qj - 2, qj);
-            let row = self.rows[j]
+            self.rows[j]
                 .iter()
                 .zip(top)
                 .map(|(&xj, &xt)| {
@@ -636,9 +667,8 @@ impl RnsPoly {
                     let diff = if xj >= xc { xj - xc } else { xj + qj - xc };
                     mod_mul64(diff, inv, qj)
                 })
-                .collect();
-            rows.push(row);
-        }
+                .collect()
+        });
         RnsPoly {
             rows,
             basis: Arc::clone(&self.basis),
@@ -756,18 +786,22 @@ impl RnsPolyExt {
         }
     }
 
-    /// Negacyclic NTT product per row (matching levels).
+    /// Negacyclic NTT product per row (matching levels). The P-row is
+    /// item `l+1` of the fan-out so it overlaps the chain rows.
     pub fn mul(&self, other: &RnsPolyExt) -> RnsPolyExt {
         assert_eq!(self.level(), other.level(), "level mismatch in ext mul");
+        let l = self.rows.len();
+        let mut all = par::par_collect(l + 1, self.basis.par_threads(l + 1), |i| {
+            if i < l {
+                self.basis.ctxs[i].multiply(&self.rows[i], &other.rows[i])
+            } else {
+                self.basis.special_ctx.multiply(&self.prow, &other.prow)
+            }
+        });
+        let prow = all.pop().expect("l + 1 rows");
         RnsPolyExt {
-            rows: self
-                .rows
-                .iter()
-                .zip(&other.rows)
-                .zip(&self.basis.ctxs)
-                .map(|((a, b), ctx)| ctx.multiply(a, b))
-                .collect(),
-            prow: self.basis.special_ctx.multiply(&self.prow, &other.prow),
+            rows: all,
+            prow,
             basis: Arc::clone(&self.basis),
         }
     }
@@ -795,31 +829,29 @@ impl RnsPolyExt {
         let _span = crate::obs::span("mod_down");
         let p = self.basis.special;
         let half = p / 2;
-        let rows = self
-            .rows
-            .iter()
-            .zip(&self.basis.primes)
-            .map(|(row, &qj)| {
-                let inv = mod_pow64(p % qj, qj - 2, qj);
-                row.iter()
-                    .zip(&self.prow)
-                    .map(|(&xj, &xp)| {
-                        let xc = if xp > half {
-                            let r = (p - xp) % qj;
-                            if r == 0 {
-                                0
-                            } else {
-                                qj - r
-                            }
+        let l = self.rows.len();
+        let rows = par::par_collect(l, self.basis.par_threads(l), |j| {
+            let qj = self.basis.primes[j];
+            let inv = mod_pow64(p % qj, qj - 2, qj);
+            self.rows[j]
+                .iter()
+                .zip(&self.prow)
+                .map(|(&xj, &xp)| {
+                    let xc = if xp > half {
+                        let r = (p - xp) % qj;
+                        if r == 0 {
+                            0
                         } else {
-                            xp % qj
-                        };
-                        let diff = if xj >= xc { xj - xc } else { xj + qj - xc };
-                        mod_mul64(diff, inv, qj)
-                    })
-                    .collect()
-            })
-            .collect();
+                            qj - r
+                        }
+                    } else {
+                        xp % qj
+                    };
+                    let diff = if xj >= xc { xj - xc } else { xj + qj - xc };
+                    mod_mul64(diff, inv, qj)
+                })
+                .collect()
+        });
         RnsPoly {
             rows,
             basis: Arc::clone(&self.basis),

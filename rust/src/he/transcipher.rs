@@ -31,6 +31,7 @@ use crate::bail;
 use crate::params::{ParamSet, Scheme, RUBATO_SIGMA};
 use crate::sampler::{DiscreteGaussian, RejectionSampler};
 use crate::util::error::Result;
+use crate::util::par;
 use crate::util::rng::SplitMix64;
 use crate::xof::{Xof, XofKind};
 
@@ -510,31 +511,51 @@ pub struct CkksTranscipher {
 impl CkksTranscipher {
     /// Set up: the client CKKS-encrypts its symmetric key once (the RtF
     /// key upload). The context must have at least
-    /// [`CkksCipherProfile::required_levels`] working levels.
+    /// [`CkksCipherProfile::required_levels`] working levels — a shallower
+    /// chain is a typed error, not a panic.
     pub fn setup(
         profile: CkksCipherProfile,
         ctx: &CkksContext,
         sym_key: &[f64],
         rng: &mut SplitMix64,
-    ) -> CkksTranscipher {
-        assert_eq!(sym_key.len(), profile.n, "key length != state size");
-        assert!(
-            ctx.max_level() >= profile.required_levels(),
-            "modulus chain too short: {} levels < {} required",
-            ctx.max_level(),
-            profile.required_levels()
-        );
+    ) -> Result<CkksTranscipher> {
+        if sym_key.len() != profile.n {
+            bail!(
+                "key length {} != state size {}",
+                sym_key.len(),
+                profile.n
+            );
+        }
+        if ctx.max_level() < profile.required_levels() {
+            bail!(
+                "modulus chain too short: {} levels < {} required",
+                ctx.max_level(),
+                profile.required_levels()
+            );
+        }
         let slots = ctx.slots();
         let delta = ctx.params().delta();
         let enc_key = (0..profile.n)
             .map(|i| ctx.encrypt_values(&vec![sym_key[i]; slots], delta, rng))
-            .collect();
-        CkksTranscipher { profile, enc_key }
+            .collect::<Result<Vec<_>>>()?;
+        Ok(CkksTranscipher { profile, enc_key })
     }
 
     /// The cipher profile.
     pub fn profile(&self) -> &CkksCipherProfile {
         &self.profile
+    }
+
+    /// Threads for the per-state-element fan-out (one full ciphertext per
+    /// item, so the work floor is the ring size): serial below N = 256,
+    /// the basis knob from there up. Inner RNS ops run serially on the
+    /// workers (nested regions degrade), so the two axes never multiply.
+    fn elem_threads(&self, ctx: &CkksContext) -> usize {
+        if ctx.params().n < 256 {
+            1
+        } else {
+            ctx.basis().threads()
+        }
     }
 
     /// `k_i · rc` at exactly (level, scale): the multiplication runs one
@@ -546,12 +567,12 @@ impl CkksTranscipher {
         rc_slot: &[f64],
         level: usize,
         scale: f64,
-    ) -> ckks::Ciphertext {
+    ) -> Result<ckks::Ciphertext> {
         let _span = crate::obs::span("transcipher/ark");
         let kl = self.enc_key[i].drop_to_level(level + 1);
         let q_drop = ctx.prime_at(level + 1) as f64;
         let pt_scale = scale * q_drop / kl.scale;
-        ctx.rescale(&ctx.mul_plain(&kl, rc_slot, pt_scale))
+        ctx.rescale(&ctx.mul_plain(&kl, rc_slot, pt_scale)?)
     }
 
     /// MixColumns (`rows = false`) or MixRows (`rows = true`): linear
@@ -568,38 +589,42 @@ impl CkksTranscipher {
             "transcipher/mix_columns"
         });
         let v = self.profile.v;
-        let mut out = Vec::with_capacity(self.profile.n);
-        for r in 0..v {
-            for c in 0..v {
-                let mut acc: Option<ckks::Ciphertext> = None;
-                for i in 0..v {
-                    let (coeff, src) = if rows {
-                        (self.profile.mv_entry(c, i), &state[r * v + i])
-                    } else {
-                        (self.profile.mv_entry(r, i), &state[i * v + c])
-                    };
-                    let term = if coeff == 1 {
-                        src.clone()
-                    } else {
-                        ctx.mul_scalar_int(src, coeff)
-                    };
-                    acc = Some(match acc {
-                        None => term,
-                        Some(a) => ctx.add(&a, &term),
-                    });
-                }
-                out.push(acc.unwrap());
+        // Each output element is an independent v-term linear combination
+        // of the input state — the per-state-element fan-out axis.
+        par::par_collect(self.profile.n, self.elem_threads(ctx), |m| {
+            let (r, c) = (m / v, m % v);
+            let mut acc: Option<ckks::Ciphertext> = None;
+            for i in 0..v {
+                let (coeff, src) = if rows {
+                    (self.profile.mv_entry(c, i), &state[r * v + i])
+                } else {
+                    (self.profile.mv_entry(r, i), &state[i * v + c])
+                };
+                let term = if coeff == 1 {
+                    src.clone()
+                } else {
+                    ctx.mul_scalar_int(src, coeff)
+                };
+                acc = Some(match acc {
+                    None => term,
+                    Some(a) => ctx.add(&a, &term),
+                });
             }
-        }
-        out
+            acc.expect("v ≥ 1 terms")
+        })
     }
 
     /// Real multiplication by η at the scale of the prime about to drop, so
     /// the phase physically shrinks (a scale-metadata "multiplication"
     /// would overflow Q at low levels).
-    fn normalize(&self, ctx: &CkksContext, ct: &ckks::Ciphertext, b: usize) -> ckks::Ciphertext {
+    fn normalize(
+        &self,
+        ctx: &CkksContext,
+        ct: &ckks::Ciphertext,
+        b: usize,
+    ) -> Result<ckks::Ciphertext> {
         let sigma = ctx.prime_at(ct.level()) as f64;
-        ctx.rescale(&ctx.mul_plain(ct, &vec![self.profile.eta; b], sigma))
+        ctx.rescale(&ctx.mul_plain(ct, &vec![self.profile.eta; b], sigma)?)
     }
 
     /// The nonlinear layer: Cube (two ct-ct mults) or Feistel (one square,
@@ -610,34 +635,37 @@ impl CkksTranscipher {
         ctx: &CkksContext,
         state: &[ckks::Ciphertext],
         b: usize,
-    ) -> Vec<ckks::Ciphertext> {
+    ) -> Result<Vec<ckks::Ciphertext>> {
         let _span = crate::obs::span(match self.profile.scheme {
             Scheme::Hera => "transcipher/cube",
             Scheme::Rubato => "transcipher/feistel",
         });
+        let threads = self.elem_threads(ctx);
         match self.profile.scheme {
-            Scheme::Hera => state
-                .iter()
-                .map(|x| {
-                    let t = ctx.rescale(&ctx.mul(x, x));
-                    let y = ctx.rescale(&ctx.mul(&t, &x.drop_to_level(t.level())));
-                    self.normalize(ctx, &y, b)
-                })
-                .collect(),
+            Scheme::Hera => par::par_collect(state.len(), threads, |i| -> Result<_> {
+                let x = &state[i];
+                let t = ctx.rescale(&ctx.mul(x, x)?)?;
+                let y = ctx.rescale(&ctx.mul(&t, &x.drop_to_level(t.level()))?)?;
+                self.normalize(ctx, &y, b)
+            })
+            .into_iter()
+            .collect(),
             Scheme::Rubato => {
                 let sc = state[0].scale;
                 let ones = vec![1.0; b];
-                (0..state.len())
-                    .map(|i| {
-                        let padded = ctx.mul_plain(&state[i], &ones, sc);
-                        let t = if i == 0 {
-                            padded
-                        } else {
-                            ctx.add(&padded, &ctx.mul(&state[i - 1], &state[i - 1]))
-                        };
-                        self.normalize(ctx, &ctx.rescale(&t), b)
-                    })
-                    .collect()
+                // Element i reads state[i] and state[i-1] — still
+                // independent items (reads only), so the fan-out holds.
+                par::par_collect(state.len(), threads, |i| -> Result<_> {
+                    let padded = ctx.mul_plain(&state[i], &ones, sc)?;
+                    let t = if i == 0 {
+                        padded
+                    } else {
+                        ctx.add(&padded, &ctx.mul(&state[i - 1], &state[i - 1])?)
+                    };
+                    self.normalize(ctx, &ctx.rescale(&t)?, b)
+                })
+                .into_iter()
+                .collect()
             }
         }
     }
@@ -650,11 +678,17 @@ impl CkksTranscipher {
         ctx: &CkksContext,
         nonce: u64,
         counters: &[u64],
-    ) -> Vec<ckks::Ciphertext> {
+    ) -> Result<Vec<ckks::Ciphertext>> {
         let _span = crate::obs::span("transcipher/keystream");
         let b = counters.len();
-        assert!(b >= 1 && b <= ctx.slots(), "batch must fit the slot count");
+        if b < 1 || b > ctx.slots() {
+            bail!(
+                "batch of {b} blocks does not fit the slot count {}",
+                ctx.slots()
+            );
+        }
         let p = &self.profile;
+        let threads = self.elem_threads(ctx);
         // Gather per-block public randomness and transpose to per-slot
         // vectors: rc_slots[ark][element][block].
         let layout = p.ark_layout();
@@ -678,36 +712,42 @@ impl CkksTranscipher {
         let ic = p.ic();
 
         // Initial ARK: x_i = ic_i + k_i·rc_i at (top−1, Δ).
-        let mut state: Vec<ckks::Ciphertext> = (0..p.n)
-            .map(|i| {
-                let t = self.ark_term(ctx, i, &rc_slots[0][i], top - 1, delta);
+        let mut state: Vec<ckks::Ciphertext> =
+            par::par_collect(p.n, threads, |i| -> Result<_> {
+                let t = self.ark_term(ctx, i, &rc_slots[0][i], top - 1, delta)?;
                 ctx.add_plain(&t, &vec![ic[i]; b])
             })
-            .collect();
+            .into_iter()
+            .collect::<Result<_>>()?;
         crate::obs::trace_level("ark_in", state[0].level(), state[0].scale);
 
         let mut rc_idx = 1;
         for _ in 1..p.rounds {
             state = self.hom_mix(ctx, &self.hom_mix(ctx, &state, false), true);
-            state = self.hom_nonlinear(ctx, &state, b);
+            state = self.hom_nonlinear(ctx, &state, b)?;
             let (lvl, sc) = (state[0].level(), state[0].scale);
-            state = state
-                .iter()
-                .enumerate()
-                .map(|(i, x)| ctx.add(x, &self.ark_term(ctx, i, &rc_slots[rc_idx][i], lvl, sc)))
-                .collect();
+            state = par::par_collect(state.len(), threads, |i| -> Result<_> {
+                let t = self.ark_term(ctx, i, &rc_slots[rc_idx][i], lvl, sc)?;
+                Ok(ctx.add(&state[i], &t))
+            })
+            .into_iter()
+            .collect::<Result<_>>()?;
             rc_idx += 1;
             crate::obs::trace_level("round", state[0].level(), state[0].scale);
         }
 
         // Fin: MRMC, NL, MRMC, (Tr,) ARK.
         state = self.hom_mix(ctx, &self.hom_mix(ctx, &state, false), true);
-        state = self.hom_nonlinear(ctx, &state, b);
+        state = self.hom_nonlinear(ctx, &state, b)?;
         state = self.hom_mix(ctx, &self.hom_mix(ctx, &state, false), true);
         let (lvl, sc) = (state[0].level(), state[0].scale);
-        let mut ks: Vec<ckks::Ciphertext> = (0..p.l)
-            .map(|i| ctx.add(&state[i], &self.ark_term(ctx, i, &rc_slots[rc_idx][i], lvl, sc)))
-            .collect();
+        let mut ks: Vec<ckks::Ciphertext> =
+            par::par_collect(p.l, threads, |i| -> Result<_> {
+                let t = self.ark_term(ctx, i, &rc_slots[rc_idx][i], lvl, sc)?;
+                Ok(ctx.add(&state[i], &t))
+            })
+            .into_iter()
+            .collect::<Result<_>>()?;
         crate::obs::trace_level("fin", ks[0].level(), ks[0].scale);
 
         // AGN: public (nonce, counter)-derived noise, plaintext-added.
@@ -716,10 +756,10 @@ impl CkksTranscipher {
                 counters.iter().map(|&c| p.agn_noise(nonce, c)).collect();
             for (i, k) in ks.iter_mut().enumerate() {
                 let nv: Vec<f64> = noise_blocks.iter().map(|nb| nb[i]).collect();
-                *k = ctx.add_plain(k, &nv);
+                *k = ctx.add_plain(k, &nv)?;
             }
         }
-        ks
+        Ok(ks)
     }
 
     /// Multi-rotation slot linear layer on a transciphered output:
@@ -757,13 +797,13 @@ impl CkksTranscipher {
             } else {
                 rot_iter.next().expect("one rotation per nonzero step")
             };
-            let term = ctx.mul_plain(&src, diag, sigma);
+            let term = ctx.mul_plain(&src, diag, sigma)?;
             acc = Some(match acc {
                 None => term,
                 Some(a) => ctx.add(&a, &term),
             });
         }
-        Ok(ctx.rescale(&acc.expect("diags nonempty")))
+        ctx.rescale(&acc.expect("diags nonempty"))
     }
 
     /// Transcipher a batch: symmetric ciphertexts in, CKKS ciphertexts
@@ -776,18 +816,24 @@ impl CkksTranscipher {
         nonce: u64,
         counters: &[u64],
         sym_blocks: &[Vec<f64>],
-    ) -> Vec<ckks::Ciphertext> {
-        assert_eq!(counters.len(), sym_blocks.len());
-        for (b, blk) in sym_blocks.iter().enumerate() {
-            assert_eq!(
-                blk.len(),
-                self.profile.l,
-                "block {b} has {} values, expected l = {}",
-                blk.len(),
-                self.profile.l
+    ) -> Result<Vec<ckks::Ciphertext>> {
+        if counters.len() != sym_blocks.len() {
+            bail!(
+                "{} counters but {} symmetric blocks",
+                counters.len(),
+                sym_blocks.len()
             );
         }
-        let z = self.homomorphic_keystream(ctx, nonce, counters);
+        for (b, blk) in sym_blocks.iter().enumerate() {
+            if blk.len() != self.profile.l {
+                bail!(
+                    "block {b} has {} values, expected l = {}",
+                    blk.len(),
+                    self.profile.l
+                );
+            }
+        }
+        let z = self.homomorphic_keystream(ctx, nonce, counters)?;
         (0..self.profile.l)
             .map(|i| {
                 let cvec: Vec<f64> = sym_blocks.iter().map(|blk| blk[i]).collect();
@@ -865,10 +911,10 @@ mod tests {
 
     fn ckks_roundtrip_err(profile: &CkksCipherProfile) -> f64 {
         let params = CkksParams::with_shape(32, profile.required_levels());
-        let ctx = CkksContext::generate(params, 21, &[]);
+        let ctx = CkksContext::builder(params).seed(21).build().unwrap();
         let mut rng = SplitMix64::new(5);
         let key = profile.sample_key(77);
-        let server = CkksTranscipher::setup(profile.clone(), &ctx, &key, &mut rng);
+        let server = CkksTranscipher::setup(profile.clone(), &ctx, &key, &mut rng).unwrap();
         let b = 8.min(ctx.slots());
         let nonce = 42;
         let counters: Vec<u64> = (0..b as u64).collect();
@@ -881,7 +927,7 @@ mod tests {
             .zip(&counters)
             .map(|(m, &c)| profile.encrypt_block(&key, nonce, c, m))
             .collect();
-        let out = server.transcipher(&ctx, nonce, &counters, &sym);
+        let out = server.transcipher(&ctx, nonce, &counters, &sym).unwrap();
         assert_eq!(out.len(), profile.l);
         let mut maxerr = 0.0f64;
         for (i, ct) in out.iter().enumerate() {
@@ -933,12 +979,15 @@ mod tests {
         // Single-round HERA (4 levels) keeps this cheap while still
         // exercising ARK + MRMC + Cube + the Fin structure.
         let p = CkksCipherProfile::from_params(&ParamSet::hera_128a(), 1);
-        let ctx = CkksContext::generate(CkksParams::with_shape(32, p.required_levels()), 13, &[]);
+        let ctx = CkksContext::builder(CkksParams::with_shape(32, p.required_levels()))
+            .seed(13)
+            .build()
+            .unwrap();
         let mut rng = SplitMix64::new(2);
         let key = p.sample_key(5);
-        let server = CkksTranscipher::setup(p.clone(), &ctx, &key, &mut rng);
+        let server = CkksTranscipher::setup(p.clone(), &ctx, &key, &mut rng).unwrap();
         let counters = [7u64, 9, 11];
-        let hom = server.homomorphic_keystream(&ctx, 1, &counters);
+        let hom = server.homomorphic_keystream(&ctx, 1, &counters).unwrap();
         assert_eq!(hom.len(), p.l);
         for (i, ct) in hom.iter().enumerate() {
             let d = ctx.decrypt_real(ct);
@@ -970,13 +1019,19 @@ mod tests {
     #[test]
     fn slot_linear_matches_plain_and_errors_on_missing_key() {
         let p = CkksCipherProfile::from_params(&ParamSet::rubato_128s(), 1);
-        let ctx = CkksContext::generate(CkksParams::with_shape(32, 3), 17, &[1, 2]);
+        let ctx = CkksContext::builder(CkksParams::with_shape(32, 3))
+            .seed(17)
+            .rotations(&[1, 2])
+            .build()
+            .unwrap();
         let mut rng = SplitMix64::new(8);
         let key = p.sample_key(4);
-        let server = CkksTranscipher::setup(p, &ctx, &key, &mut rng);
+        let server = CkksTranscipher::setup(p, &ctx, &key, &mut rng).unwrap();
         let slots = ctx.slots();
         let x: Vec<f64> = (0..slots).map(|_| rng.next_f64() - 0.5).collect();
-        let ct = ctx.encrypt_values(&x, ctx.params().delta(), &mut rng);
+        let ct = ctx
+            .encrypt_values(&x, ctx.params().delta(), &mut rng)
+            .unwrap();
         let diags: Vec<(usize, Vec<f64>)> = [0usize, 1, 2]
             .iter()
             .map(|&s| (s, (0..slots).map(|_| rng.next_f64() - 0.5).collect()))
@@ -999,12 +1054,19 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "modulus chain too short")]
     fn ckks_setup_rejects_shallow_chain() {
+        // A 3-level chain cannot host 7-level HERA: typed error, no panic.
         let p = CkksCipherProfile::hera_toy();
-        let ctx = CkksContext::generate(CkksParams::with_shape(32, 3), 1, &[]);
+        let ctx = CkksContext::builder(CkksParams::with_shape(32, 3))
+            .seed(1)
+            .build()
+            .unwrap();
         let mut rng = SplitMix64::new(1);
         let key = p.sample_key(1);
-        let _ = CkksTranscipher::setup(p, &ctx, &key, &mut rng);
+        let e = CkksTranscipher::setup(p.clone(), &ctx, &key, &mut rng).unwrap_err();
+        assert!(e.to_string().contains("modulus chain too short"), "{e}");
+        // A wrong-length key is rejected the same way.
+        let e = CkksTranscipher::setup(p, &ctx, &[0.5], &mut rng).unwrap_err();
+        assert!(e.to_string().contains("key length"), "{e}");
     }
 }

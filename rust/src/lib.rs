@@ -65,4 +65,4 @@ pub mod util;
 pub mod workload;
 pub mod xof;
 
-pub use params::{CkksParams, ParamSet, Scheme};
+pub use params::{CkksParams, CkksParamsBuilder, ParamSet, Scheme};

@@ -33,7 +33,7 @@
 //! merge into one breakdown. [`reset`] clears it between measurements.
 
 use crate::util::stats::LatencyHistogram;
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
@@ -60,6 +60,13 @@ struct OpStats {
 
 thread_local! {
     static STACK: RefCell<Vec<Frame>> = const { RefCell::new(Vec::new()) };
+    /// Nanoseconds accumulated by *root* spans closed on this thread —
+    /// spans with no parent frame. On a fork-join worker every span is a
+    /// root span, so this counter is the worker's total instrumented time;
+    /// [`par_collect`](crate::util::par::par_collect) reads it around the
+    /// worker's run and merges it back into the spawning thread's open
+    /// frame via [`charge_fork`].
+    static ROOT_NS: Cell<u128> = const { Cell::new(0) };
 }
 
 struct Frame {
@@ -126,8 +133,11 @@ impl Drop for SpanGuard {
             };
             let total = frame.start.elapsed().as_nanos();
             let self_ns = total.saturating_sub(frame.child_ns);
-            if let Some(parent) = stack.last_mut() {
-                parent.child_ns += total;
+            match stack.last_mut() {
+                Some(parent) => parent.child_ns += total,
+                // A root span: remember its total so a fork-join region
+                // can merge worker-side time back into the spawner.
+                None => ROOT_NS.with(|r| r.set(r.get() + total)),
             }
             let mut reg = lock_registry();
             let st = reg.entry(frame.name).or_default();
@@ -137,6 +147,31 @@ impl Drop for SpanGuard {
             st.hist.record(total.min(u64::MAX as u128) as u64);
         });
     }
+}
+
+/// Total nanoseconds of *root* spans closed so far on the calling thread.
+/// Fork-join regions sample this around a worker's run: the delta is the
+/// worker's instrumented time, which [`charge_fork`] then credits to the
+/// spawning thread's open span so parent self-times stay correct when
+/// work moves onto worker threads.
+pub fn thread_root_ns() -> u128 {
+    ROOT_NS.with(|r| r.get())
+}
+
+/// Credit `ns` of worker-side instrumented time to the calling thread's
+/// innermost open span (as child time, exactly as if the spans had run
+/// inline). No-op when the profiler is disabled or no span is open —
+/// the per-operation registry already recorded the workers' spans on
+/// drop; this only keeps the *parent's* self-time honest.
+pub fn charge_fork(ns: u128) {
+    if !enabled() || ns == 0 {
+        return;
+    }
+    STACK.with(|s| {
+        if let Some(top) = s.borrow_mut().last_mut() {
+            top.child_ns += ns;
+        }
+    });
 }
 
 /// One (stage, level, scale) point of a homomorphic evaluation's
@@ -320,6 +355,50 @@ mod tests {
             outer.self_ns,
             outer.total_ns
         );
+        reset();
+    }
+
+    #[test]
+    fn worker_spans_merge_into_spawning_thread_breakdown() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(true);
+        reset();
+        {
+            let _outer = span("obs_test_fork_outer");
+            spin(100);
+            // A fork-join region: the worker's spans are root spans on its
+            // own thread; its instrumented time is merged back here.
+            let out = crate::util::par::par_collect(4, 2, |i| {
+                let _s = span("obs_test_fork_inner");
+                spin(150);
+                i
+            });
+            assert_eq!(out, vec![0, 1, 2, 3]);
+        }
+        set_enabled(false);
+        let snap = snapshot();
+        let outer = snap
+            .iter()
+            .find(|o| o.name == "obs_test_fork_outer")
+            .unwrap();
+        let inner = snap
+            .iter()
+            .find(|o| o.name == "obs_test_fork_inner")
+            .unwrap();
+        // All four worker-side calls are recorded, not silently dropped.
+        assert_eq!(inner.calls, 4);
+        assert!(inner.total_ns >= 4 * 120_000, "inner {}", inner.total_ns);
+        // The outer span's self-time excludes both the inline chunk and the
+        // merged worker time: it must stay near the 100 µs of genuine self
+        // work rather than absorbing the ~600 µs of inner spans.
+        assert_eq!(outer.calls, 1);
+        assert!(
+            outer.self_ns < inner.total_ns,
+            "outer self {} absorbed worker time (inner total {})",
+            outer.self_ns,
+            inner.total_ns
+        );
+        assert!(outer.self_ns >= 80_000, "outer self {}", outer.self_ns);
         reset();
     }
 

@@ -189,6 +189,10 @@ pub struct CkksParams {
     pub levels: usize,
     /// RLWE error standard deviation.
     pub sigma: f64,
+    /// Worker threads for the RNS/transcipher hot path: 0 means "all
+    /// available cores", 1 forces the serial path (bit-identical output
+    /// either way — see DESIGN.md "Parallel execution").
+    pub threads: usize,
 }
 
 impl CkksParams {
@@ -201,6 +205,7 @@ impl CkksParams {
             scale_bits: 40,
             levels: 7,
             sigma: 3.2,
+            threads: 0,
         }
     }
 
@@ -212,6 +217,7 @@ impl CkksParams {
             scale_bits: 40,
             levels: 7,
             sigma: 3.2,
+            threads: 0,
         }
     }
 
@@ -221,6 +227,16 @@ impl CkksParams {
             n,
             levels,
             ..Self::test_small()
+        }
+    }
+
+    /// Validating builder, seeded from [`CkksParams::test_small`]. The
+    /// fluent setters accept anything; [`CkksParamsBuilder::build`] checks
+    /// the invariants the positional constructors used to assert deep
+    /// inside `CkksContext` and returns a typed error instead of panicking.
+    pub fn builder() -> CkksParamsBuilder {
+        CkksParamsBuilder {
+            params: Self::test_small(),
         }
     }
 
@@ -238,6 +254,110 @@ impl CkksParams {
     pub fn log2_q(&self) -> f64 {
         self.base_bits as f64 + self.levels as f64 * self.scale_bits as f64
     }
+
+    /// Run the [`CkksParamsBuilder::build`] invariant checks on an
+    /// already-constructed set (the context builder re-validates inputs
+    /// that bypassed the builder, e.g. struct literals).
+    pub fn validate(self) -> crate::util::error::Result<CkksParams> {
+        CkksParamsBuilder { params: self }.build()
+    }
+}
+
+/// Fluent, validating constructor for [`CkksParams`].
+///
+/// ```
+/// # use presto::params::CkksParams;
+/// let p = CkksParams::builder()
+///     .ring_degree(256)
+///     .levels(5)
+///     .threads(1)
+///     .build()
+///     .expect("valid params");
+/// assert_eq!(p.n, 256);
+/// ```
+#[derive(Debug, Clone)]
+pub struct CkksParamsBuilder {
+    params: CkksParams,
+}
+
+impl CkksParamsBuilder {
+    /// Ring degree N (power of two ≥ 8).
+    pub fn ring_degree(mut self, n: usize) -> Self {
+        self.params.n = n;
+        self
+    }
+
+    /// Bits of the base prime q_0 (≤ 60, ≥ `scale_bits`).
+    pub fn base_bits(mut self, bits: u32) -> Self {
+        self.params.base_bits = bits;
+        self
+    }
+
+    /// Bits of each working prime (the scale Δ = 2^scale_bits).
+    pub fn scale_bits(mut self, bits: u32) -> Self {
+        self.params.scale_bits = bits;
+        self
+    }
+
+    /// Rescale budget (number of working primes, ≥ 1).
+    pub fn levels(mut self, levels: usize) -> Self {
+        self.params.levels = levels;
+        self
+    }
+
+    /// RLWE error standard deviation (finite, > 0).
+    pub fn sigma(mut self, sigma: f64) -> Self {
+        self.params.sigma = sigma;
+        self
+    }
+
+    /// Worker-thread knob: 0 = all cores (default), 1 = serial.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.params.threads = threads;
+        self
+    }
+
+    /// Convenience alias: `parallel(false)` ⇒ `threads(1)`,
+    /// `parallel(true)` ⇒ `threads(0)`.
+    pub fn parallel(self, on: bool) -> Self {
+        self.threads(if on { 0 } else { 1 })
+    }
+
+    /// Validate and produce the parameter set.
+    pub fn build(self) -> crate::util::error::Result<CkksParams> {
+        let p = self.params;
+        if !p.n.is_power_of_two() || p.n < 8 {
+            crate::bail!("ring degree N = {} must be a power of two ≥ 8", p.n);
+        }
+        if p.base_bits > 60 || p.scale_bits > 60 {
+            crate::bail!(
+                "prime widths base = {} / scale = {} exceed the 60-bit u64 NTT limit",
+                p.base_bits,
+                p.scale_bits
+            );
+        }
+        if p.scale_bits < 20 {
+            crate::bail!(
+                "scale_bits = {} leaves no precision headroom (need ≥ 20)",
+                p.scale_bits
+            );
+        }
+        if p.base_bits < p.scale_bits {
+            crate::bail!(
+                "base prime ({} bits) must be at least as wide as the scale ({} bits) \
+                 for decryption headroom",
+                p.base_bits,
+                p.scale_bits
+            );
+        }
+        if p.levels == 0 {
+            crate::bail!("levels = 0: at least one working prime is required");
+        }
+        if !(p.sigma.is_finite() && p.sigma > 0.0) {
+            crate::bail!("sigma = {} must be finite and positive", p.sigma);
+        }
+        Ok(p)
+    }
 }
 
 #[cfg(test)]
@@ -254,6 +374,44 @@ mod tests {
         assert_eq!(q.n, 256);
         assert_eq!(q.levels, 5);
         assert_eq!(q.scale_bits, CkksParams::test_small().scale_bits);
+    }
+
+    #[test]
+    fn builder_accepts_valid_and_matches_positional() {
+        let b = CkksParams::builder()
+            .ring_degree(256)
+            .levels(5)
+            .build()
+            .expect("valid");
+        assert_eq!(b, CkksParams::with_shape(256, 5));
+        // threads is an execution knob, not a math parameter: it defaults
+        // to 0 (= all cores) and round-trips through parallel().
+        assert_eq!(b.threads, 0);
+        let serial = CkksParams::builder().parallel(false).build().unwrap();
+        assert_eq!(serial.threads, 1);
+        assert_eq!(
+            CkksParams::builder().threads(3).build().unwrap().threads,
+            3
+        );
+    }
+
+    #[test]
+    fn builder_rejects_bad_shapes() {
+        for (b, what) in [
+            (CkksParams::builder().ring_degree(48), "non-power-of-two N"),
+            (CkksParams::builder().ring_degree(4), "N below 8"),
+            (CkksParams::builder().base_bits(61), "base prime > 60 bits"),
+            (CkksParams::builder().scale_bits(10), "scale below headroom"),
+            (
+                CkksParams::builder().base_bits(30).scale_bits(40),
+                "base narrower than scale",
+            ),
+            (CkksParams::builder().levels(0), "zero levels"),
+            (CkksParams::builder().sigma(0.0), "zero sigma"),
+            (CkksParams::builder().sigma(f64::NAN), "NaN sigma"),
+        ] {
+            assert!(b.build().is_err(), "{what} must be rejected");
+        }
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Internal substrates: deterministic PRNG, statistics, minimal JSON,
-//! CLI argument parsing, hex encoding, and error handling.
+//! CLI argument parsing, hex encoding, error handling, and scoped-thread
+//! fork-join parallelism.
 //!
 //! These exist because the build is fully offline: no `serde_json`, `clap`,
 //! `rand`, `criterion` or `anyhow` are available, so the pieces the system
@@ -9,5 +10,6 @@ pub mod cli;
 pub mod error;
 pub mod hex;
 pub mod json;
+pub mod par;
 pub mod rng;
 pub mod stats;

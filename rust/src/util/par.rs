@@ -1,0 +1,179 @@
+//! In-crate fork-join parallelism for the RNS/transcipher hot path.
+//!
+//! The crate is dependency-free, so the role rayon would play is filled by
+//! `std::thread::scope`: [`par_collect`] evaluates a function over an index
+//! range on up to `threads` OS threads and returns the results in index
+//! order. Every item is an independent pure computation, so the output is
+//! **bit-identical** to the serial loop regardless of thread count — the
+//! determinism guarantee pinned by `tests/parallel_identity.rs`.
+//!
+//! Two parallel axes exist in the system (per-state-element ciphertexts in
+//! the transcipher, per-prime rows inside RNS ops). To keep them from
+//! multiplying into threads² oversubscription, a region executing inside a
+//! `par_collect` worker runs any nested `par_collect` serially.
+
+use std::cell::Cell;
+use std::num::NonZeroUsize;
+
+thread_local! {
+    /// Set while executing a `par_collect` item: nested parallel regions
+    /// degrade to serial instead of oversubscribing the machine.
+    static IN_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Restores the caller's `IN_WORKER` flag even if the item panics, so a
+/// caught panic cannot leave the thread permanently de-parallelized.
+struct FlagGuard(bool);
+
+impl FlagGuard {
+    fn enter() -> FlagGuard {
+        let prev = IN_WORKER.with(|g| g.replace(true));
+        FlagGuard(prev)
+    }
+}
+
+impl Drop for FlagGuard {
+    fn drop(&mut self) {
+        IN_WORKER.with(|g| g.set(self.0));
+    }
+}
+
+/// Number of hardware threads available (1 if unknown).
+pub fn available() -> usize {
+    std::thread::available_parallelism()
+        .map(NonZeroUsize::get)
+        .unwrap_or(1)
+}
+
+/// Resolve a thread-count knob: 0 means "all available".
+pub fn resolve(threads: usize) -> usize {
+    if threads == 0 {
+        available()
+    } else {
+        threads
+    }
+}
+
+/// True when called from inside a `par_collect` item (nested parallel
+/// regions run serially).
+pub fn in_worker() -> bool {
+    IN_WORKER.with(|w| w.get())
+}
+
+/// Evaluate `f(i)` for `i in 0..len` on up to `threads` threads (0 ⇒ all
+/// available) and collect the results in index order.
+///
+/// Guarantees:
+/// * output is bit-identical to `(0..len).map(f).collect()`;
+/// * worker panics propagate to the caller;
+/// * span-profiler time spent on workers is credited to the calling
+///   thread's open span via [`crate::obs::charge_fork`], capped at the
+///   region's wall time so parent self-times stay meaningful.
+pub fn par_collect<T, F>(len: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let t = resolve(threads).min(len);
+    if t <= 1 || in_worker() {
+        return (0..len).map(f).collect();
+    }
+    let chunk = len.div_ceil(t);
+    let t0 = std::time::Instant::now();
+    let mut worker_ns: u128 = 0;
+    let mut inline_ns: u128 = 0;
+    let mut parts: Vec<Vec<T>> = Vec::with_capacity(t);
+    std::thread::scope(|s| {
+        let f = &f;
+        let handles: Vec<_> = (1..t)
+            .map(|w| {
+                let lo = (w * chunk).min(len);
+                let hi = ((w + 1) * chunk).min(len);
+                s.spawn(move || {
+                    let _flag = FlagGuard::enter();
+                    let ns0 = crate::obs::thread_root_ns();
+                    let part: Vec<T> = (lo..hi).map(f).collect();
+                    (part, crate::obs::thread_root_ns().saturating_sub(ns0))
+                })
+            })
+            .collect();
+        // Chunk 0 runs inline on the caller (its spans nest normally into
+        // the open frame); only worker-side time needs the fork credit.
+        let first: Vec<T> = {
+            let _flag = FlagGuard::enter();
+            let ti = std::time::Instant::now();
+            let v = (0..chunk.min(len)).map(f).collect();
+            inline_ns = ti.elapsed().as_nanos();
+            v
+        };
+        parts.push(first);
+        for h in handles {
+            match h.join() {
+                Ok((part, ns)) => {
+                    worker_ns += ns;
+                    parts.push(part);
+                }
+                Err(p) => std::panic::resume_unwind(p),
+            }
+        }
+    });
+    // Credit the caller's open span with the worker-side instrumented
+    // time, capped at the wall time the region spent beyond its inline
+    // chunk — overlapped worker time must not push the parent's self-time
+    // below zero (the inline chunk's spans already charged themselves).
+    let wait_ns = t0.elapsed().as_nanos().saturating_sub(inline_ns);
+    crate::obs::charge_fork(worker_ns.min(wait_ns));
+    parts.into_iter().flatten().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_serial_for_every_thread_count() {
+        let serial: Vec<u64> = (0..97).map(|i| (i as u64).wrapping_mul(0x9E37)).collect();
+        for t in [1usize, 2, 3, 4, 8, 97, 200] {
+            let par = par_collect(97, t, |i| (i as u64).wrapping_mul(0x9E37));
+            assert_eq!(par, serial, "threads = {t}");
+        }
+        assert!(par_collect(0, 4, |i| i).is_empty());
+    }
+
+    #[test]
+    fn nested_regions_run_serially() {
+        // The inner par_collect must see in_worker() and stay serial; the
+        // result is still identical to the flat computation.
+        let out = par_collect(8, 4, |i| {
+            let inner_was_serial = in_worker();
+            let inner: usize = par_collect(8, 4, |j| i * 8 + j).into_iter().sum();
+            (inner_was_serial, inner)
+        });
+        for (i, &(serial, sum)) in out.iter().enumerate() {
+            assert!(serial, "item {i} did not run with the worker flag set");
+            assert_eq!(sum, (0..8).map(|j| i * 8 + j).sum::<usize>());
+        }
+        assert!(!in_worker(), "flag must be restored after the region");
+    }
+
+    #[test]
+    fn worker_panics_propagate() {
+        let r = std::panic::catch_unwind(|| {
+            par_collect(16, 4, |i| {
+                if i == 13 {
+                    panic!("boom at {i}");
+                }
+                i
+            })
+        });
+        assert!(r.is_err(), "panic on a worker must reach the caller");
+        assert!(!in_worker(), "flag must be restored after a panic");
+    }
+
+    #[test]
+    fn resolve_and_available() {
+        assert!(available() >= 1);
+        assert_eq!(resolve(3), 3);
+        assert_eq!(resolve(0), available());
+    }
+}

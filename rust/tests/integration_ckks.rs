@@ -50,7 +50,10 @@ fn property_encode_decode_roundtrip_within_scale_bound() {
     // Each coefficient of the scaled embedding rounds by ≤ 1/2, and the
     // slot projection sums N coefficients, so the slot error is bounded by
     // N/(2Δ); we allow 2× for the f64 FFT itself.
-    let ctx = CkksContext::generate(CkksParams::with_shape(64, 2), 1, &[]);
+    let ctx = CkksContext::builder(CkksParams::with_shape(64, 2))
+        .seed(1)
+        .build()
+        .unwrap();
     let bound = ctx.params().n as f64 / ctx.params().delta();
     check(
         Config {
@@ -59,7 +62,7 @@ fn property_encode_decode_roundtrip_within_scale_bound() {
         },
         &SlotVec { len: ctx.slots() },
         |values| {
-            let pt = ctx.encode(values, DELTA, 1);
+            let pt = ctx.encode(values, DELTA, 1).unwrap();
             let back = ctx.decode(&pt);
             values
                 .iter()
@@ -107,15 +110,19 @@ impl Gen for UniformPoly {
 
 #[test]
 fn ckks_mul_and_rotate_integration() {
-    let ctx = CkksContext::generate(CkksParams::with_shape(64, 4), 9, &[2]);
+    let ctx = CkksContext::builder(CkksParams::with_shape(64, 4))
+        .seed(9)
+        .rotations(&[2])
+        .build()
+        .unwrap();
     let mut rng = SplitMix64::new(4);
     let slots = ctx.slots();
     let x: Vec<f64> = (0..slots).map(|_| rng.next_f64() - 0.5).collect();
     let y: Vec<f64> = (0..slots).map(|_| rng.next_f64() - 0.5).collect();
-    let cx = ctx.encrypt_values(&x, DELTA, &mut rng);
-    let cy = ctx.encrypt_values(&y, DELTA, &mut rng);
+    let cx = ctx.encrypt_values(&x, DELTA, &mut rng).unwrap();
+    let cy = ctx.encrypt_values(&y, DELTA, &mut rng).unwrap();
     // (x·y) rotated by 2 slots.
-    let prod = ctx.rescale(&ctx.mul(&cx, &cy));
+    let prod = ctx.rescale(&ctx.mul(&cx, &cy).unwrap()).unwrap();
     let rot = ctx.rotate(&prod, 2).expect("rotation key for step 2");
     let d = ctx.decrypt_real(&rot);
     for j in 0..slots {
@@ -202,12 +209,16 @@ fn property_basis_extension_and_mod_down_bounds() {
 fn hoisted_rotations_equal_sequential_and_compose() {
     // One hoisted decomposition must reproduce each sequential rotation
     // bit-for-bit, at top level and after rescales.
-    let ctx = CkksContext::generate(CkksParams::with_shape(64, 4), 31, &[1, 3, 7]);
+    let ctx = CkksContext::builder(CkksParams::with_shape(64, 4))
+        .seed(31)
+        .rotations(&[1, 3, 7])
+        .build()
+        .unwrap();
     let mut rng = SplitMix64::new(12);
     let slots = ctx.slots();
     let x: Vec<f64> = (0..slots).map(|_| rng.next_f64() - 0.5).collect();
-    let cx = ctx.encrypt_values(&x, DELTA, &mut rng);
-    let low = ctx.rescale(&ctx.mul(&cx, &cx)); // level top−1, scale ≈ Δ
+    let cx = ctx.encrypt_values(&x, DELTA, &mut rng).unwrap();
+    let low = ctx.rescale(&ctx.mul(&cx, &cx).unwrap()).unwrap(); // level top−1, scale ≈ Δ
     for ct in [&cx, &low] {
         let steps = [1usize, 3, 7];
         let hoisted = ctx.rotate_hoisted(ct, &steps).expect("keys registered");
@@ -233,10 +244,13 @@ fn hoisted_rotations_equal_sequential_and_compose() {
 /// the documented error bound, for both cipher families.
 fn transcipher_acceptance(profile: CkksCipherProfile) {
     let levels = profile.required_levels();
-    let ctx = CkksContext::generate(CkksParams::with_shape(64, levels), 33, &[]);
+    let ctx = CkksContext::builder(CkksParams::with_shape(64, levels))
+        .seed(33)
+        .build()
+        .unwrap();
     let mut rng = SplitMix64::new(6);
     let key = profile.sample_key(17);
-    let server = CkksTranscipher::setup(profile.clone(), &ctx, &key, &mut rng);
+    let server = CkksTranscipher::setup(profile.clone(), &ctx, &key, &mut rng).unwrap();
 
     let nonce = 5;
     let blocks = 12usize.min(ctx.slots());
@@ -254,7 +268,7 @@ fn transcipher_acceptance(profile: CkksCipherProfile) {
         .collect();
 
     // Server: homomorphic keystream evaluation + subtraction.
-    let cts = server.transcipher(&ctx, nonce, &counters, &sym);
+    let cts = server.transcipher(&ctx, nonce, &counters, &sym).unwrap();
     assert_eq!(cts.len(), profile.l);
 
     // Data owner: decrypt + decode matches the plaintext within the bound.
@@ -289,14 +303,13 @@ fn transcipher_service_full_flow_with_codec() {
     // decrypt+decode, with metrics.
     let profile = CkksCipherProfile::rubato_toy();
     let levels = profile.required_levels();
-    let mut svc = TranscipherService::start(TranscipherConfig {
-        profile,
-        ckks: CkksParams::with_shape(64, levels),
-        seed: 4,
-        nonce: 9,
-        rotations: vec![],
-    })
-    .unwrap();
+    let cfg = TranscipherConfig::builder(profile)
+        .ckks(CkksParams::with_shape(64, levels))
+        .seed(4)
+        .nonce(9)
+        .build()
+        .unwrap();
+    let mut svc = TranscipherService::start(cfg).unwrap();
     let codec = CkksRtfCodec::new(25.0, svc.profile().error_bound());
     let l = svc.profile().l;
     let mut rng = SplitMix64::new(2);

@@ -21,6 +21,7 @@ fn xla_server(p: ParamSet, sessions: u64) -> EncryptServer {
         rng_depth: 16,
         rng_workers: 2,
         xof: XofKind::AesCtr,
+        executor_threads: 1,
     };
     EncryptServer::start(cfg).expect("server starts — run `make artifacts`")
 }

@@ -1,0 +1,153 @@
+//! Bit-identity of the parallel hot path: every fan-out axis (RNS chain
+//! rows, transcipher state elements) must produce exactly the same bits
+//! as the serial path — chunking never reorders or re-associates any
+//! modular arithmetic, so `threads = 1` vs `threads = all` is a pure
+//! wall-clock difference.
+//!
+//! The RNS row axis only engages above the work floor (rows × N ≥ 2^15),
+//! so those tests run at N = 8192; the transcipher element axis engages
+//! at N ≥ 256. On a single-core runner both sides degrade to serial and
+//! the assertions hold trivially.
+
+use presto::he::ckks::CkksContext;
+use presto::he::rns::{RnsBasis, RnsPoly, RnsPolyExt};
+use presto::he::transcipher::{CkksCipherProfile, CkksTranscipher};
+use presto::params::CkksParams;
+use presto::util::rng::SplitMix64;
+use std::sync::Arc;
+
+/// Ring degree large enough that rows × N crosses the fan-out floor.
+const BIG_N: usize = 8192;
+
+/// Two bases over the identical prime chain, one pinned serial and one
+/// running on every available core.
+fn two_bases() -> (Arc<RnsBasis>, Arc<RnsBasis>) {
+    let serial = RnsBasis::generate(BIG_N, 50, 40, 4);
+    serial.set_threads(1);
+    let par = RnsBasis::generate(BIG_N, 50, 40, 4);
+    par.set_threads(0);
+    assert_eq!(serial.primes, par.primes, "basis generation is deterministic");
+    (serial, par)
+}
+
+fn random_coeffs(seed: u64, len: usize) -> Vec<i64> {
+    let mut rng = SplitMix64::new(seed);
+    (0..len).map(|_| rng.next_u64() as i64 >> 8).collect()
+}
+
+#[test]
+fn rns_poly_ops_bit_identical_across_thread_counts() {
+    let (sb, pb) = two_bases();
+    let level = sb.max_level();
+    let ca = random_coeffs(42, BIG_N);
+    let cb = random_coeffs(43, BIG_N);
+    let a_s = RnsPoly::from_i64_coeffs(&sb, &ca, level);
+    let b_s = RnsPoly::from_i64_coeffs(&sb, &cb, level);
+    let a_p = RnsPoly::from_i64_coeffs(&pb, &ca, level);
+    let b_p = RnsPoly::from_i64_coeffs(&pb, &cb, level);
+
+    assert_eq!(a_s.add(&b_s).rows, a_p.add(&b_p).rows);
+    assert_eq!(a_s.sub(&b_s).rows, a_p.sub(&b_p).rows);
+    assert_eq!(a_s.neg().rows, a_p.neg().rows);
+    // mul runs a full forward NTT → pointwise → inverse NTT per row, so
+    // this is also the NTT round-trip identity across thread counts.
+    assert_eq!(a_s.mul(&b_s).rows, a_p.mul(&b_p).rows);
+    assert_eq!(a_s.mul_scalar_i64(-12345).rows, a_p.mul_scalar_i64(-12345).rows);
+    assert_eq!(a_s.automorphism(5).rows, a_p.automorphism(5).rows);
+    assert_eq!(a_s.rescale_top().rows, a_p.rescale_top().rows);
+}
+
+#[test]
+fn basis_extension_and_mod_down_bit_identical_across_thread_counts() {
+    let (sb, pb) = two_bases();
+    let level = sb.max_level();
+    let coeffs = random_coeffs(7, BIG_N);
+    let x_s = RnsPoly::from_i64_coeffs(&sb, &coeffs, level);
+    let x_p = RnsPoly::from_i64_coeffs(&pb, &coeffs, level);
+    assert_eq!(
+        sb.fast_basis_extend(&x_s.rows, sb.special),
+        pb.fast_basis_extend(&x_p.rows, pb.special),
+    );
+
+    let e_s = RnsPolyExt::from_i64_coeffs(&sb, &coeffs, level);
+    let e_p = RnsPolyExt::from_i64_coeffs(&pb, &coeffs, level);
+    assert_eq!(e_s.mod_down().rows, e_p.mod_down().rows);
+    let f_s = RnsPolyExt::from_i64_coeffs(&sb, &random_coeffs(8, BIG_N), level);
+    let f_p = RnsPolyExt::from_i64_coeffs(&pb, &random_coeffs(8, BIG_N), level);
+    let m_s = e_s.mul(&f_s);
+    let m_p = e_p.mul(&f_p);
+    assert_eq!(m_s.rows, m_p.rows);
+    assert_eq!(m_s.prow, m_p.prow);
+}
+
+/// The full HERA r=2 transcipher — keygen, RtF key upload, homomorphic
+/// ARK/MixColumns/MixRows/Cube keystream, keystream subtraction — run
+/// once serial and once parallel from identical seeds, compared
+/// ciphertext-for-ciphertext. N = 256 engages the per-state-element axis.
+#[test]
+fn hera_transcipher_bit_identical_across_thread_counts() {
+    let profile = CkksCipherProfile::hera_toy();
+    let levels = profile.required_levels();
+    let key = profile.sample_key(17);
+    let build = |threads: usize| {
+        let ctx = CkksContext::builder(CkksParams::with_shape(256, levels))
+            .seed(33)
+            .threads(threads)
+            .build()
+            .unwrap();
+        let mut rng = SplitMix64::new(6);
+        let server = CkksTranscipher::setup(profile.clone(), &ctx, &key, &mut rng).unwrap();
+        (ctx, server)
+    };
+    let (ctx_s, srv_s) = build(1);
+    let (ctx_p, srv_p) = build(0);
+
+    let nonce = 5;
+    let blocks = 8usize;
+    let counters: Vec<u64> = (100..100 + blocks as u64).collect();
+    let mut wrng = SplitMix64::new(8);
+    let data: Vec<Vec<f64>> = (0..blocks)
+        .map(|_| (0..profile.l).map(|_| wrng.next_f64() * 2.0 - 1.0).collect())
+        .collect();
+    let sym: Vec<Vec<f64>> = data
+        .iter()
+        .zip(&counters)
+        .map(|(m, &c)| profile.encrypt_block(&key, nonce, c, m))
+        .collect();
+
+    let cts_s = srv_s.transcipher(&ctx_s, nonce, &counters, &sym).unwrap();
+    let cts_p = srv_p.transcipher(&ctx_p, nonce, &counters, &sym).unwrap();
+    assert_eq!(cts_s.len(), cts_p.len());
+    for (i, (a, b)) in cts_s.iter().zip(&cts_p).enumerate() {
+        assert_eq!(a.c0, b.c0, "c0 differs at state element {i}");
+        assert_eq!(a.c1, b.c1, "c1 differs at state element {i}");
+        assert_eq!(a.level(), b.level());
+    }
+}
+
+/// The redesigned builders reject bad shapes before any keygen, and the
+/// newly fallible level/scale ops return typed errors end-to-end.
+#[test]
+fn builder_and_level_errors_surface_through_public_api() {
+    // Builder validation: levels = 0 never reaches keygen.
+    let err = CkksContext::builder(CkksParams {
+        levels: 0,
+        ..CkksParams::test_small()
+    })
+    .build()
+    .unwrap_err();
+    assert!(err.to_string().contains("levels"), "{err}");
+
+    // Exhausted-chain errors propagate out of the public ops.
+    let ctx = CkksContext::builder(CkksParams::with_shape(64, 2))
+        .seed(3)
+        .build()
+        .unwrap();
+    let mut rng = SplitMix64::new(1);
+    let delta = ctx.params().delta();
+    let ct = ctx.encrypt_values(&[0.5; 32], delta, &mut rng).unwrap();
+    let floor = ct.drop_to_level(0);
+    assert!(ctx.rescale(&floor).unwrap_err().to_string().contains("level 0"));
+    assert!(ctx.mul(&floor, &floor).is_err());
+    assert!(ctx.encrypt_values(&[0.5; 32], f64::NAN, &mut rng).is_err());
+}
