@@ -1,0 +1,207 @@
+#!/usr/bin/env python3
+"""Toolchain-free validation mirror for the per-ciphertext noise
+accounting (rust/src/he/ckks/noise.rs).
+
+Mirrors, line-by-line, the NoiseBudget recurrences and fuzzes their
+soundness: for random op sequences, a worst-case "actual" noise evolved
+under the true arithmetic must stay below the tracked 2^noise_bits bound,
+and the derived budget (log2 Q_level - noise_bits) must be monotone
+non-increasing through any evaluation.
+
+Run: python3 python/validate_noise_budget.py
+"""
+
+import math
+import random
+import sys
+
+FAILURES = []
+
+
+def check(cond, msg):
+    if not cond:
+        FAILURES.append(msg)
+        print(f"FAIL: {msg}")
+    else:
+        print(f"ok:   {msg}")
+
+
+# ------------------------------------------------------- noise.rs mirror
+
+
+def lse2(a, b):
+    hi, lo = (a, b) if a >= b else (b, a)
+    if hi == float("-inf"):
+        return float("-inf")
+    return hi + math.log2(1.0 + 2.0 ** (lo - hi))
+
+
+def mag_bits(mag):
+    return math.log2(abs(mag) + 1.0)
+
+
+def ks_noise_bits(level, n, sigma):
+    return math.log2((level + 1) * n * 6.0 * sigma + n + 1.0)
+
+
+class NoiseBudget:
+    def __init__(self, noise_bits, msg_bits):
+        self.noise_bits = noise_bits
+        self.msg_bits = msg_bits
+
+    @staticmethod
+    def fresh(sigma, scaled_mag):
+        return NoiseBudget(math.log2(6.0 * sigma + 1.0), mag_bits(scaled_mag))
+
+    def add(self, o):
+        return NoiseBudget(
+            lse2(self.noise_bits, o.noise_bits), lse2(self.msg_bits, o.msg_bits)
+        )
+
+    def add_plain(self, pt_bits):
+        return NoiseBudget(lse2(self.noise_bits, 0.0), lse2(self.msg_bits, pt_bits))
+
+    def mul_plain(self, pt_bits, log2n):
+        return NoiseBudget(
+            lse2(log2n + self.noise_bits + pt_bits, log2n + self.msg_bits),
+            self.msg_bits + pt_bits,
+        )
+
+    def mul_scalar_int(self, k):
+        bits = math.log2(max(abs(k), 1))
+        return NoiseBudget(self.noise_bits + bits, self.msg_bits + bits)
+
+    def mul(self, o, log2n, ks_bits):
+        cross = lse2(
+            log2n + self.msg_bits + o.noise_bits,
+            log2n + o.msg_bits + self.noise_bits,
+        )
+        return NoiseBudget(
+            lse2(lse2(cross, log2n + self.noise_bits + o.noise_bits), ks_bits),
+            self.msg_bits + o.msg_bits,
+        )
+
+    def rescale(self, q, log2n):
+        lq = math.log2(q)
+        return NoiseBudget(lse2(self.noise_bits - lq, log2n), self.msg_bits - lq)
+
+    def key_switch(self, ks_bits):
+        return NoiseBudget(lse2(self.noise_bits, ks_bits), self.msg_bits)
+
+
+# ------------------------------------------------ rust unit-test mirrors
+
+check(abs(lse2(3.0, 3.0) - 4.0) < 1e-12, "lse2(3,3) == 4")
+check(abs(lse2(500.0, -500.0) - 500.0) < 1e-9, "lse2 stable at far-apart magnitudes")
+check(7.0 <= lse2(7.0, 2.0) <= 8.0, "lse2 ordered and bounded")
+check(
+    ks_noise_bits(6, 8192, 3.2) > ks_noise_bits(0, 8192, 3.2)
+    and ks_noise_bits(3, 8192, 3.2) > ks_noise_bits(3, 32, 3.2)
+    and ks_noise_bits(6, 8192, 3.2) < 21.0,
+    "ks_noise_bits grows with level and ring, stays below one rescale",
+)
+a = NoiseBudget.fresh(3.2, float(1 << 40))
+check(a.mul_scalar_int(1).noise_bits == a.noise_bits, "mul_scalar_int(1) is identity")
+z = a.mul_scalar_int(0)
+check(
+    math.isfinite(z.noise_bits) and math.isfinite(z.msg_bits),
+    "mul_scalar_int(0) keeps bounds finite",
+)
+
+# --------------------------------------- soundness fuzz: bound >= actual
+#
+# Evolve a worst-case *actual* (noise, msg) pair under the true arithmetic
+# next to the tracked log2 bounds. Every op the recurrence table covers is
+# exercised; the invariant is actual <= 2^bound for both components, and
+# the budget log2(Q_level) - noise_bits never increases.
+
+N = 1 << 5
+LOG2N = math.log2(N)
+SIGMA = 3.2
+LOG2Q0 = 45.0
+LOG2Q = 40.0  # per chain prime
+Q = 2.0**LOG2Q
+LEVELS = 24
+
+
+def log2_q(level):
+    return LOG2Q0 + LOG2Q * level
+
+
+random.seed(11)
+worst = 0.0
+for trial in range(400):
+    msg0 = random.uniform(0.0, 2.0**40)
+    nb = NoiseBudget.fresh(SIGMA, msg0)
+    act_n = random.uniform(0.0, 6.0 * SIGMA)
+    act_m = msg0
+    level = LEVELS
+    prev_budget = log2_q(level) - nb.noise_bits
+    for _ in range(random.randrange(1, 12)):
+        ops = ["add", "add_plain", "mul_plain", "scalar", "ks"]
+        if level >= 1:
+            ops += ["mul_rescale"]
+        op = random.choice(ops)
+        if op == "add":
+            nb2 = NoiseBudget.fresh(SIGMA, act_m)
+            act_n2 = random.uniform(0.0, 6.0 * SIGMA)
+            nb = nb.add(nb2)
+            act_n, act_m = act_n + act_n2, act_m + act_m
+        elif op == "add_plain":
+            p = random.uniform(0.0, act_m + 1.0)
+            nb = nb.add_plain(mag_bits(p))
+            act_n, act_m = act_n + 1.0, act_m + p
+        elif op == "mul_plain":
+            p = random.uniform(0.0, 2.0**20)
+            nb = nb.mul_plain(mag_bits(p), LOG2N)
+            act_n = N * (act_n * (abs(p) + 1.0) + act_m)
+            act_m = act_m * (abs(p) + 1.0)
+        elif op == "scalar":
+            k = random.randrange(-64, 65)
+            nb = nb.mul_scalar_int(k)
+            act_n, act_m = act_n * max(abs(k), 1), act_m * max(abs(k), 1)
+        elif op == "ks":
+            ks = ks_noise_bits(level, N, SIGMA)
+            nb = nb.key_switch(ks)
+            act_n = act_n + 2.0**ks
+        else:  # mul + rescale, consuming one level
+            nb2 = NoiseBudget.fresh(SIGMA, act_m)
+            act_n2 = random.uniform(0.0, 6.0 * SIGMA)
+            ks = ks_noise_bits(level, N, SIGMA)
+            nb = nb.mul(nb2, LOG2N, ks)
+            act_n = (
+                N * (act_m * act_n2 + act_m * act_n + act_n * act_n2) + 2.0**ks
+            )
+            act_m = act_m * act_m
+            nb = nb.rescale(Q, LOG2N)
+            act_n, act_m = act_n / Q + N, act_m / Q
+            level -= 1
+        if act_n > 2.0**nb.noise_bits or act_m > 2.0**nb.msg_bits + 1e-6:
+            check(False, f"trial {trial}: actual exceeded bound after {op}")
+            break
+        budget = log2_q(level) - nb.noise_bits
+        if budget > prev_budget + 1e-9:
+            check(False, f"trial {trial}: budget rose {prev_budget} -> {budget} ({op})")
+            break
+        prev_budget = budget
+        worst = max(worst, act_n / 2.0**nb.noise_bits)
+    else:
+        continue
+    break
+else:
+    check(True, f"400-trial fuzz: bounds dominate actuals (tightest ratio {worst:.2e})")
+    check(worst <= 1.0, "no actual ever crossed its tracked bound")
+
+# Slot-error bound sanity: the projection-sum bound N * 2^noise / delta is
+# what Ciphertext::noise_bound_slots reports; for a fresh encryption at
+# delta = 2^40 it is far below the documented 1e-3 transcipher bound.
+fresh = NoiseBudget.fresh(SIGMA, 0.5 * 2.0**40)
+slot_bound = N * 2.0**fresh.noise_bits / 2.0**40
+check(slot_bound < 1e-3, f"fresh slot-error bound {slot_bound:.2e} below 1e-3")
+
+# ---------------------------------------------------------------------------
+
+if FAILURES:
+    print(f"\n{len(FAILURES)} FAILURE(S)")
+    sys.exit(1)
+print("\nall noise-budget mirrors pass")

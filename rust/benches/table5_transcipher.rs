@@ -20,6 +20,12 @@
 //! `PRESTO_BENCH_THREADS` sets the CKKS worker-thread knob (0 = all
 //! cores, 1 = serial); CI runs both and diffs blocks/s — the outputs are
 //! bit-identical, only the wall clock moves.
+//!
+//! Each timed CKKS iteration also runs as one traced request, and the run
+//! writes **`BENCH_trace.json`** — a Chrome-trace/Perfetto export of the
+//! per-iteration span events (CI archives it next to the trajectory). The
+//! committed `BENCH_table5.json` at the repo root is the quick-mode
+//! baseline the CI perf-regression gate compares fresh runs against.
 
 use presto::bench::bench;
 use presto::he::bfv::{BfvParams, SecretKeyHe};
@@ -75,12 +81,18 @@ fn bench_ckks(
 
     // Profile the transcipher evaluation itself: the span registry is
     // reset before the timed loop, then snapshotted into the JSON row.
+    // Each iteration is one traced "request", so the Chrome-trace export
+    // (BENCH_trace.json) shows per-iteration round/key-switch spans.
     presto::obs::set_enabled(true);
     presto::obs::reset();
     let r = bench(name, iters, || {
+        let tr = presto::obs::trace::mint();
+        let _req = presto::obs::trace::enter(tr.id);
+        let t0 = std::time::Instant::now();
         let out = server
             .transcipher(&ctx, 1, &counters, &blocks)
             .expect("transcipher");
+        presto::obs::trace::record(tr.id, "execute", t0, t0.elapsed().as_nanos());
         std::hint::black_box(&out);
     });
     let stages = presto::obs::snapshot();
@@ -165,6 +177,10 @@ fn main() {
         if quick { "quick" } else { "full" },
         if threads == 0 { "all".to_string() } else { threads.to_string() }
     );
+    // Request-scoped tracing: every timed CKKS iteration is one request in
+    // the Chrome-trace export written alongside the JSON trajectory.
+    presto::obs::trace::set_enabled(true);
+    presto::obs::trace::clear();
 
     // toy-BFV baseline: one 4-element block per evaluation, depth 1.
     let he = SecretKeyHe::generate(BfvParams::test_small(), 5);
@@ -208,4 +224,9 @@ fn main() {
     std::fs::write(path, format!("{}\n", Json::Obj(doc)))
         .unwrap_or_else(|e| panic!("writing {path}: {e}"));
     println!("\nwrote {path}");
+
+    let trace_path = "BENCH_trace.json";
+    std::fs::write(trace_path, format!("{}\n", presto::obs::trace::export()))
+        .unwrap_or_else(|e| panic!("writing {trace_path}: {e}"));
+    println!("wrote {trace_path} (load in chrome://tracing or Perfetto)");
 }

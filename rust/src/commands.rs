@@ -22,14 +22,17 @@ COMMANDS:
                  RtF-encode and encrypt a real-valued vector.
     transcipher --params <set> [--rounds N] [--ring N] [--blocks N] [--seed N]
                  [--threads N] [--breakdown] [--prometheus] [--metrics PATH]
+                 [--trace-out PATH]
                  RNS-CKKS transcipher-serving demo (client blocks in,
                  CKKS ciphertexts out, decrypt-checked).
     serve      --params <set> [--batch B] [--rate R] [--requests N] [--artifact PATH]
-                 [--breakdown] [--prometheus] [--metrics PATH]
+                 [--breakdown] [--prometheus] [--metrics PATH] [--trace-out PATH]
                  Run the client-side encryption service (L3 coordinator).
                  --breakdown prints the span profiler's per-operation table;
                  --prometheus prints the metrics in Prometheus text format;
-                 --metrics writes a JSON metrics snapshot to PATH.
+                 --metrics writes a JSON metrics snapshot to PATH;
+                 --trace-out writes per-request span events to PATH as
+                 Chrome-trace JSON (load in chrome://tracing or Perfetto).
     simulate   --params <set> [--design d1|d2|d3] [--blocks N] [--trace]
                  Run the cycle-accurate accelerator simulator.
     tables     [--table 1|2|3|4] [--figure 2|3] [--ablation fifo|xof|mechanisms]
@@ -205,6 +208,11 @@ pub fn transcipher(args: &Args) -> i32 {
         presto::obs::set_enabled(true);
         presto::obs::reset();
     }
+    let trace_out = args.get("trace-out");
+    if trace_out.is_some() {
+        presto::obs::trace::set_enabled(true);
+        presto::obs::trace::clear();
+    }
     let l = svc.profile().l;
     let blocks = blocks.min(svc.batch_capacity());
     let mut rng = SplitMix64::new(9);
@@ -245,6 +253,11 @@ pub fn transcipher(args: &Args) -> i32 {
     if let Some(path) = args.get("metrics") {
         if let Err(e) = std::fs::write(path, format!("{}\n", snap.to_json())) {
             return fail(format!("writing metrics snapshot to {path}: {e}"));
+        }
+    }
+    if let Some(path) = trace_out {
+        if let Err(e) = std::fs::write(path, format!("{}\n", presto::obs::trace::export())) {
+            return fail(format!("writing Chrome trace to {path}: {e}"));
         }
     }
     if max_err < svc.profile().error_bound() {

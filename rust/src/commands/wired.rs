@@ -58,6 +58,11 @@ pub fn serve_impl(args: &Args) -> i32 {
         presto::obs::set_enabled(true);
         presto::obs::reset();
     }
+    let trace_out = args.get("trace-out");
+    if trace_out.is_some() {
+        presto::obs::trace::set_enabled(true);
+        presto::obs::trace::clear();
+    }
     println!("serving {} ({} sessions, batch {batch})", p.name, sessions);
 
     let mut wl = WorkloadGen::new(&p, rate, sessions, 1);
@@ -84,6 +89,11 @@ pub fn serve_impl(args: &Args) -> i32 {
     if let Some(path) = args.get("metrics") {
         if let Err(e) = std::fs::write(path, format!("{}\n", snap.to_json())) {
             return fail(format!("writing metrics snapshot to {path}: {e}"));
+        }
+    }
+    if let Some(path) = trace_out {
+        if let Err(e) = std::fs::write(path, format!("{}\n", presto::obs::trace::export())) {
+            return fail(format!("writing Chrome trace to {path}: {e}"));
         }
     }
     server.shutdown();

@@ -41,6 +41,10 @@ pub struct Queued {
     pub req: Request,
     /// When `submit` accepted it.
     pub enqueued_at: Instant,
+    /// Request-trace correlation id minted at submission
+    /// ([`crate::obs::trace::mint`]); the executor records per-stage trace
+    /// events (queue_wait, batch_assemble, execute, post_process) under it.
+    pub trace: u64,
 }
 
 struct Inner {
@@ -84,9 +88,12 @@ impl Batcher {
         if inner.closed {
             bail!("batcher closed: request {} rejected during shutdown", req.id);
         }
+        let trace = crate::obs::trace::mint();
+        crate::obs::trace::instant(trace.id, "enqueue");
         inner.queue.push_back(Queued {
             req,
             enqueued_at: Instant::now(),
+            trace: trace.id,
         });
         self.cv.notify_one();
         Ok(())

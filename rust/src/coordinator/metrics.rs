@@ -29,6 +29,11 @@ struct Inner {
     output_level: u64,
     levels_total: u64,
     budget_warnings: u64,
+    /// Whether the last observed output was already in the low-budget
+    /// region — the state edge that rate-limits warning emission.
+    budget_low: bool,
+    last_budget_warning_level: u64,
+    noise_budget_bits: f64,
     e2e_latency: Option<LatencyHistogram>,
     exec_latency: Option<LatencyHistogram>,
     queue_wait: Option<LatencyHistogram>,
@@ -84,6 +89,14 @@ pub struct MetricsSnapshot {
     pub levels_total: u64,
     /// Times the remaining-level budget dropped to the warning threshold.
     pub budget_warnings: u64,
+    /// Output level at the most recent budget warning (0 when none fired).
+    pub last_budget_warning_level: u64,
+    /// Analytic noise budget (bits) remaining on the latest transcipher
+    /// output — the minimum [`budget_bits`](crate::he::ckks::Ciphertext::budget_bits)
+    /// across the batch. 0 when not on a CKKS path.
+    pub noise_budget_bits: f64,
+    /// Request-trace events currently buffered (see [`crate::obs::trace`]).
+    pub trace_events: u64,
     /// End-to-end request latency (enqueue → response).
     pub e2e: LatencySummary,
     /// Executor (keystream+encrypt) latency per batch.
@@ -182,6 +195,34 @@ impl Metrics {
         self.lock().budget_warnings += 1;
     }
 
+    /// Set the analytic noise-budget gauge: minimum
+    /// [`budget_bits`](crate::he::ckks::Ciphertext::budget_bits) across the
+    /// latest transcipher output batch.
+    pub fn set_noise_budget_bits(&self, bits: f64) {
+        self.lock().noise_budget_bits = bits;
+    }
+
+    /// Update the level-budget gauges and rate-limit the "nearly
+    /// exhausted" warning to the high→low **crossing**: returns `true`
+    /// (counting a warning and pinning `last_budget_warning_level`) only
+    /// when the output drops to ≤ 1 level from a healthier state — every
+    /// further low batch is silent until the budget recovers above the
+    /// threshold. Callers emit the structured event only on `true`, so a
+    /// steady-state low-budget service logs once, not once per batch.
+    pub fn record_budget_event(&self, output_level: usize, levels_total: usize) -> bool {
+        let mut m = self.lock();
+        m.output_level = output_level as u64;
+        m.levels_total = levels_total as u64;
+        let low = output_level <= 1;
+        let fire = low && !m.budget_low;
+        m.budget_low = low;
+        if fire {
+            m.budget_warnings += 1;
+            m.last_budget_warning_level = output_level as u64;
+        }
+        fire
+    }
+
     /// Snapshot for reporting. Histograms are summarized in place — the
     /// lock is held for a fixed-size bucket scan, never an allocation.
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -200,6 +241,9 @@ impl Metrics {
             output_level: m.output_level,
             levels_total: m.levels_total,
             budget_warnings: m.budget_warnings,
+            last_budget_warning_level: m.last_budget_warning_level,
+            noise_budget_bits: m.noise_budget_bits,
+            trace_events: crate::obs::trace::event_count(),
             e2e,
             exec,
             queue_wait,
@@ -240,9 +284,12 @@ impl MetricsSnapshot {
         );
         if self.levels_total > 0 {
             s.push_str(&format!(
-                "\nnoise budget    {}/{} levels remaining ({} warnings)",
-                self.output_level, self.levels_total, self.budget_warnings
+                "\nnoise budget    {}/{} levels remaining, {:.1} bits ({} warnings)",
+                self.output_level, self.levels_total, self.noise_budget_bits, self.budget_warnings
             ));
+        }
+        if self.trace_events > 0 {
+            s.push_str(&format!("\ntrace events    {}", self.trace_events));
         }
         s
     }
@@ -306,6 +353,21 @@ impl MetricsSnapshot {
             "Total levels in the CKKS modulus chain.",
             self.levels_total,
         );
+        gauge(
+            "presto_last_budget_warning_level",
+            "Output level at the most recent budget warning.",
+            self.last_budget_warning_level,
+        );
+        gauge(
+            "presto_trace_events",
+            "Request-trace events currently buffered.",
+            self.trace_events,
+        );
+        out.push_str(&format!(
+            "# HELP presto_noise_budget_bits Analytic noise budget remaining on the latest output.\n\
+             # TYPE presto_noise_budget_bits gauge\npresto_noise_budget_bits {}\n",
+            self.noise_budget_bits,
+        ));
         let mut latency = |name: &str, help: &str, s: &LatencySummary| {
             out.push_str(&format!("# HELP {name}_ns {help}\n# TYPE {name}_ns summary\n"));
             out.push_str(&format!("{name}_ns{{quantile=\"0.5\"}} {}\n", s.p50_ns));
@@ -358,6 +420,12 @@ impl MetricsSnapshot {
         o.insert("output_level".into(), num(self.output_level as f64));
         o.insert("levels_total".into(), num(self.levels_total as f64));
         o.insert("budget_warnings".into(), num(self.budget_warnings as f64));
+        o.insert(
+            "last_budget_warning_level".into(),
+            num(self.last_budget_warning_level as f64),
+        );
+        o.insert("noise_budget_bits".into(), num(self.noise_budget_bits));
+        o.insert("trace_events".into(), num(self.trace_events as f64));
         o.insert("e2e_latency".into(), latency(&self.e2e));
         o.insert("queue_wait".into(), latency(&self.queue_wait));
         o.insert("exec_latency".into(), latency(&self.exec));
@@ -414,6 +482,42 @@ mod tests {
         assert_eq!(s.levels_total, 7);
         assert_eq!(s.budget_warnings, 1);
         assert!(s.report(1.0).contains("noise budget    1/7 levels"));
+    }
+
+    #[test]
+    fn budget_warning_fires_once_per_crossing() {
+        let m = Metrics::new();
+        // Healthy batches never fire.
+        assert!(!m.record_budget_event(3, 7));
+        assert!(!m.record_budget_event(2, 7));
+        // First low batch fires; the steady low state stays silent.
+        assert!(m.record_budget_event(1, 7));
+        assert!(!m.record_budget_event(1, 7));
+        assert!(!m.record_budget_event(0, 7));
+        // Recovery re-arms the edge; the next drop fires again.
+        assert!(!m.record_budget_event(4, 7));
+        assert!(m.record_budget_event(0, 7));
+        let s = m.snapshot();
+        assert_eq!(s.budget_warnings, 2);
+        assert_eq!(s.last_budget_warning_level, 0);
+        assert_eq!(s.output_level, 0);
+        assert_eq!(s.levels_total, 7);
+    }
+
+    #[test]
+    fn noise_budget_gauge_flows_to_report_and_json() {
+        let m = Metrics::new();
+        m.record_budget_event(2, 7);
+        m.set_noise_budget_bits(41.5);
+        let s = m.snapshot();
+        assert!(s.report(1.0).contains("41.5 bits"));
+        let j = s.to_json().to_string();
+        let back = Json::parse(&j).unwrap();
+        assert_eq!(
+            back.get("noise_budget_bits").and_then(Json::as_f64),
+            Some(41.5)
+        );
+        assert!(s.prometheus().contains("presto_noise_budget_bits 41.5"));
     }
 
     #[test]

@@ -288,6 +288,7 @@ fn executor_loop(
         for q in &batch {
             let wait = t0.saturating_duration_since(q.enqueued_at);
             metrics.record_queue_wait(wait.as_nanos() as u64);
+            crate::obs::trace::record(q.trace, "queue_wait", q.enqueued_at, wait.as_nanos());
         }
 
         // Pull randomness + keys per request lane.
@@ -297,6 +298,7 @@ fn executor_loop(
         let mut lane_meta: Vec<(u64, u64, u64)> = Vec::with_capacity(full); // (id, nonce, counter)
         {
             let _span = crate::obs::span("serve/batch_assemble");
+            let t_asm = Instant::now();
             for q in &batch {
                 let sess = sessions
                     .get_mut(&q.req.session)
@@ -314,6 +316,11 @@ fn executor_loop(
                 rcs.push(rcs[0].clone());
                 noises.push(noises[0].clone());
             }
+            // Assembly is shared work; attribute the interval to every
+            // request in the batch so each trace is self-contained.
+            for q in &batch {
+                crate::obs::trace::record(q.trace, "batch_assemble", t_asm, t_asm.elapsed().as_nanos());
+            }
         }
         let real = batch.len();
 
@@ -321,9 +328,17 @@ fn executor_loop(
             let _span = crate::obs::span("serve/execute");
             match &engine {
                 Engine::Xla(exe) => {
+                    let t_exec = Instant::now();
                     let noise_arg = if p.has_noise() { &noises[..] } else { &[] };
-                    exe.run(&keys, &rcs, noise_arg)
-                        .expect("keystream execution failed")
+                    let out = exe
+                        .run(&keys, &rcs, noise_arg)
+                        .expect("keystream execution failed");
+                    // The compiled executor runs all lanes as one kernel;
+                    // attribute the shared interval to each request.
+                    for q in &batch {
+                        crate::obs::trace::record(q.trace, "execute", t_exec, t_exec.elapsed().as_nanos());
+                    }
+                    out
                 }
                 // Request lanes are independent; fan them out across the
                 // configured executor threads (serial when 1, the default).
@@ -331,9 +346,17 @@ fn executor_loop(
                     lane_meta.len(),
                     cfg.executor_threads,
                     |i| {
+                        // Scope the lane to its request so nested spans (and
+                        // this lane's execute interval) land in its trace;
+                        // padding lanes past `batch.len()` stay unscoped.
+                        let trace_req = batch.get(i).map_or(0, |q| q.trace);
+                        let _req = crate::obs::trace::enter(trace_req);
+                        let t_lane = Instant::now();
                         let (_, nonce, counter) = lane_meta[i];
                         let key = SecretKey { k: keys[i].clone() };
-                        cipher.keystream(&key, nonce, counter).ks
+                        let ks = cipher.keystream(&key, nonce, counter).ks;
+                        crate::obs::trace::record(trace_req, "execute", t_lane, t_lane.elapsed().as_nanos());
+                        ks
                     },
                 ),
             }
@@ -344,6 +367,7 @@ fn executor_loop(
         // *enqueue* instant, so queue wait is included (a batch that sat at
         // the deadline reports the wait, not just the execute time).
         let _span = crate::obs::span("serve/post_process");
+        let t_post = Instant::now();
         let mut elems = 0u64;
         for (i, q) in batch.iter().enumerate() {
             let ks = &keystreams[i];
@@ -369,6 +393,7 @@ fn executor_loop(
                     latency_ns,
                 });
             }
+            crate::obs::trace::record(q.trace, "post_process", t_post, t_post.elapsed().as_nanos());
         }
         metrics.record_batch(real, full, elems, exec_ns);
     }
@@ -624,33 +649,48 @@ impl TranscipherService {
                 bad.data.len()
             );
         }
+        // One trace correlation id per transcipher request; the homomorphic
+        // evaluation runs under its scope so every nested CKKS span (ARK,
+        // MixColumns, Cube, key_switch, rescale, …) lands in this request's
+        // ring when tracing is enabled.
+        let tr = crate::obs::trace::mint();
+        crate::obs::trace::instant(tr.id, "enqueue");
         let t0 = Instant::now();
         let counters: Vec<u64> = blocks.iter().map(|b| b.counter).collect();
         let sym: Vec<Vec<f64>> = blocks.iter().map(|b| b.data.clone()).collect();
-        let out = self
-            .server
-            .transcipher(&self.ctx, self.cfg.nonce, &counters, &sym)?;
+        crate::obs::trace::record(tr.id, "batch_assemble", t0, t0.elapsed().as_nanos());
+        let t_exec = Instant::now();
+        let out = {
+            let _req = crate::obs::trace::enter(tr.id);
+            self.server
+                .transcipher(&self.ctx, self.cfg.nonce, &counters, &sym)?
+        };
+        crate::obs::trace::record(tr.id, "execute", t_exec, t_exec.elapsed().as_nanos());
         let dt = t0.elapsed().as_nanos() as u64;
-        // Noise-budget telemetry: gauge the level remaining on the output
-        // and warn loudly when the chain is nearly spent — a downstream
-        // consumer expecting even one more multiplication will fail.
+        let t_post = Instant::now();
+        // Noise-budget telemetry: gauge the level and analytic budget bits
+        // remaining on the output, and emit one structured warning event —
+        // rate-limited to the high→low crossing, not every batch — when the
+        // chain is nearly spent; a downstream consumer expecting even one
+        // more multiplication will fail.
         let remaining = out[0].level();
-        self.metrics.set_level_budget(remaining, self.cfg.ckks.levels);
-        if remaining <= 1 {
-            self.metrics.record_budget_warning();
+        let min_budget = out
+            .iter()
+            .map(|c| c.budget_bits())
+            .fold(f64::INFINITY, f64::min);
+        self.metrics.set_noise_budget_bits(min_budget);
+        if self.metrics.record_budget_event(remaining, self.cfg.ckks.levels) {
             eprintln!(
-                "WARNING: transcipher noise budget nearly exhausted: \
-                 {remaining}/{} levels remain on the output ciphertext \
-                 (profile {:?}, rounds {}); downstream evaluation depth is {}",
-                self.cfg.ckks.levels,
-                self.cfg.profile.scheme,
-                self.cfg.profile.rounds,
-                remaining,
+                "{{\"event\":\"noise_budget_low\",\"remaining_levels\":{remaining},\
+                 \"levels_total\":{},\"min_budget_bits\":{min_budget:.1},\
+                 \"scheme\":\"{:?}\",\"rounds\":{}}}",
+                self.cfg.ckks.levels, self.cfg.profile.scheme, self.cfg.profile.rounds,
             );
         }
         for _ in blocks {
             self.metrics.record_request(dt);
         }
+        crate::obs::trace::record(tr.id, "post_process", t_post, t_post.elapsed().as_nanos());
         self.metrics.record_batch(
             blocks.len(),
             self.batch_capacity(),
@@ -691,6 +731,7 @@ impl TranscipherService {
 mod tests {
     use super::*;
     use crate::params::ParamSet;
+    use crate::util::json::Json;
 
     fn software_server(sessions: u64) -> EncryptServer {
         let cfg = ServerConfig {
@@ -880,6 +921,59 @@ mod tests {
         assert_eq!(snap.levels_total, svc.profile().required_levels() as u64);
         assert_eq!(snap.output_level, out[0].level() as u64);
         assert!(snap.output_level < snap.levels_total);
+    }
+
+    #[test]
+    fn budget_warning_rate_limited_to_one_per_crossing() {
+        // The toy profile provisions exactly the required chain, so every
+        // transcipher output lands at level 0 — inside the warning region.
+        let mut svc = small_transcipher_service();
+        let l = svc.profile().l;
+        let data = vec![vec![0.25; l]; 2];
+        let wire = svc.client_encrypt(&data);
+        let out = svc.transcipher(&wire).unwrap();
+        assert!(out[0].level() <= 1, "expected a low-budget output");
+        let wire2 = svc.client_encrypt(&data);
+        svc.transcipher(&wire2).unwrap();
+        let snap = svc.metrics().snapshot();
+        // Two low batches, one crossing: the structured warning fired once.
+        assert_eq!(snap.budget_warnings, 1);
+        assert_eq!(snap.last_budget_warning_level, out[0].level() as u64);
+        // The analytic budget gauge tracks the output and stays positive
+        // (the ciphertext is still decryptable).
+        assert!(snap.noise_budget_bits > 0.0, "{}", snap.noise_budget_bits);
+        assert!(snap.noise_budget_bits < 200.0, "{}", snap.noise_budget_bits);
+    }
+
+    #[test]
+    fn transcipher_traces_cover_the_request_lifecycle() {
+        let _guard = crate::obs::TEST_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        crate::obs::trace::set_enabled(true);
+        crate::obs::trace::clear();
+        let mut svc = small_transcipher_service();
+        let l = svc.profile().l;
+        let wire = svc.client_encrypt(&[vec![0.5; l]]);
+        svc.transcipher(&wire).unwrap();
+        let json = crate::obs::trace::export();
+        crate::obs::trace::set_enabled(false);
+        crate::obs::trace::clear();
+        let events = json.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let names: Vec<&str> = events
+            .iter()
+            .filter_map(|e| e.get("name").and_then(Json::as_str))
+            .collect();
+        // The request-lifecycle stages are present...
+        for stage in ["enqueue", "batch_assemble", "execute", "post_process"] {
+            assert!(names.contains(&stage), "missing stage {stage} in {names:?}");
+        }
+        // ...and the homomorphic evaluation's nested spans landed in the
+        // same request scope (ARK / rounds run under `execute`).
+        assert!(
+            names.iter().any(|n| n.starts_with("transcipher/")),
+            "no nested CKKS spans in {names:?}"
+        );
     }
 
     #[test]

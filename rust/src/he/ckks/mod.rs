@@ -47,8 +47,10 @@
 //! every slot by the drift with no diagnostic.
 
 pub mod encoder;
+pub mod noise;
 
 pub use encoder::{Complex, Encoder};
+pub use noise::NoiseBudget;
 
 use super::rns::{RnsBasis, RnsPoly, RnsPolyExt};
 use crate::arith::{mod_mul64, mod_pow64};
@@ -68,6 +70,9 @@ pub struct Plaintext {
     pub poly: RnsPoly,
     /// Encoding scale Δ.
     pub scale: f64,
+    /// Slot-magnitude bound of the scaled encoding, `Δ·max_j |v_j|` —
+    /// feeds the noise recurrences of every plaintext op.
+    pub mag: f64,
 }
 
 /// A CKKS ciphertext (c0, c1): decrypts as c0 + c1·s ≈ Δ·m.
@@ -79,6 +84,9 @@ pub struct Ciphertext {
     pub c1: RnsPoly,
     /// Current scale (drifts under rescaling; tracked exactly as f64).
     pub scale: f64,
+    /// Analytic noise state, updated by every homomorphic op (see
+    /// [`noise`] for the per-op recurrences).
+    pub noise: NoiseBudget,
 }
 
 impl Ciphertext {
@@ -87,12 +95,28 @@ impl Ciphertext {
         self.c0.level()
     }
 
+    /// Remaining noise budget in bits: `log2 Q_ℓ − noise_bits`, the log2
+    /// gap between the active modulus and the tracked worst-case noise
+    /// bound. Monotone non-increasing through every homomorphic op;
+    /// decryption degrades as it approaches the scale's bit width.
+    pub fn budget_bits(&self) -> f64 {
+        self.c0.basis.log2_q(self.level()) - self.noise.noise_bits
+    }
+
+    /// Analytic bound on the slot-domain decryption error implied by the
+    /// tracked noise: `N · 2^noise_bits / scale` (the slot projection sums
+    /// N coefficients against unit-modulus roots).
+    pub fn noise_bound_slots(&self) -> f64 {
+        self.c0.basis.n as f64 * self.noise.noise_bits.exp2() / self.scale
+    }
+
     /// View at a lower level (mod-down; scale unchanged).
     pub fn drop_to_level(&self, level: usize) -> Ciphertext {
         Ciphertext {
             c0: self.c0.drop_to_level(level),
             c1: self.c1.drop_to_level(level),
             scale: self.scale,
+            noise: self.noise,
         }
     }
 }
@@ -477,9 +501,11 @@ impl CkksContext {
             }
             ints.push(s.round() as i128);
         }
+        let mag = values.iter().map(|z| z.abs()).fold(0.0, f64::max) * scale;
         Ok(Plaintext {
             poly: RnsPoly::from_i128_coeffs(&self.basis, &ints, level),
             scale,
+            mag,
         })
     }
 
@@ -508,6 +534,7 @@ impl CkksContext {
             c0,
             c1: a,
             scale: pt.scale,
+            noise: NoiseBudget::fresh(self.params.sigma, pt.mag),
         }
     }
 
@@ -609,6 +636,7 @@ impl CkksContext {
             c0: a.c0.add(&b.c0),
             c1: a.c1.add(&b.c1),
             scale: a.scale.max(b.scale),
+            noise: a.noise.add(&b.noise),
         }
     }
 
@@ -619,6 +647,7 @@ impl CkksContext {
             c0: a.c0.sub(&b.c0),
             c1: a.c1.sub(&b.c1),
             scale: a.scale.max(b.scale),
+            noise: a.noise.add(&b.noise),
         }
     }
 
@@ -629,6 +658,7 @@ impl CkksContext {
             c0: ct.c0.add(&pt.poly),
             c1: ct.c1.clone(),
             scale: ct.scale,
+            noise: ct.noise.add_plain(noise::mag_bits(pt.mag)),
         })
     }
 
@@ -640,6 +670,7 @@ impl CkksContext {
             c0: pt.poly.sub(&ct.c0),
             c1: ct.c1.neg(),
             scale: ct.scale,
+            noise: ct.noise.add_plain(noise::mag_bits(pt.mag)),
         })
     }
 
@@ -656,6 +687,7 @@ impl CkksContext {
             c0: ct.c0.mul(&pt.poly),
             c1: ct.c1.mul(&pt.poly),
             scale: ct.scale * pt_scale,
+            noise: ct.noise.mul_plain(noise::mag_bits(pt.mag), self.log2n()),
         })
     }
 
@@ -666,6 +698,7 @@ impl CkksContext {
             c0: ct.c0.mul_scalar_i64(k),
             c1: ct.c1.mul_scalar_i64(k),
             scale: ct.scale,
+            noise: ct.noise.mul_scalar_int(k),
         }
     }
 
@@ -693,6 +726,7 @@ impl CkksContext {
             c0: d0.add(&k0),
             c1: d1.add(&k1),
             scale: a.scale * b.scale,
+            noise: a.noise.mul(&b.noise, self.log2n(), self.ks_bits(l)),
         })
     }
 
@@ -712,6 +746,7 @@ impl CkksContext {
             c0: ct.c0.rescale_top(),
             c1: ct.c1.rescale_top(),
             scale: ct.scale / q,
+            noise: ct.noise.rescale(q, self.log2n()),
         })
     }
 
@@ -771,6 +806,7 @@ impl CkksContext {
             c0: ct.c0.automorphism(rk.galois).add(&k0),
             c1: k1,
             scale: ct.scale,
+            noise: ct.noise.key_switch(self.ks_bits(ct.level())),
         })
     }
 
@@ -866,6 +902,36 @@ impl CkksContext {
         let dec = self.decompose_ntt(d);
         let (e0, e1) = self.accumulate_key(&dec, key);
         (e0.mod_down(), e1.mod_down())
+    }
+
+    // ---- noise accounting ----
+
+    /// log2 of the ring degree N (the per-ring-product noise factor).
+    fn log2n(&self) -> f64 {
+        (self.params.n as f64).log2()
+    }
+
+    /// Worst-case key-switch noise bits at `level` under this context's
+    /// (N, σ) — see [`noise::ks_noise_bits`].
+    fn ks_bits(&self, level: usize) -> f64 {
+        noise::ks_noise_bits(level, self.params.n, self.params.sigma)
+    }
+
+    /// Decrypt-and-compare hook for the noise model (tests and debug
+    /// builds only — it needs the secret key and is never on a serving
+    /// path): returns `(measured, bound)`, the measured max slot error of
+    /// `ct` against `expected` and the analytic slot-error bound
+    /// [`Ciphertext::noise_bound_slots`]. The model is sound iff
+    /// `measured ≤ bound` for every reachable ciphertext.
+    #[cfg(any(test, debug_assertions))]
+    pub fn check_noise_bound(&self, ct: &Ciphertext, expected: &[f64]) -> (f64, f64) {
+        let got = self.decrypt_real(ct);
+        let measured = got
+            .iter()
+            .zip(expected)
+            .map(|(g, e)| (g - e).abs())
+            .fold(0.0, f64::max);
+        (measured, ct.noise_bound_slots())
     }
 }
 
@@ -1183,6 +1249,58 @@ mod tests {
                 assert_eq!((g * gi) % (2 * n), 1, "n={n} steps={steps}");
             }
         }
+    }
+
+    #[test]
+    fn noise_budget_decreases_and_bounds_error() {
+        let (ctx, mut rng) = setup(&[1]);
+        let x = rand_slots(&mut rng, ctx.slots());
+        let y = rand_slots(&mut rng, ctx.slots());
+        let cx = ctx.encrypt_values(&x, DELTA, &mut rng).unwrap();
+        let cy = ctx.encrypt_values(&y, DELTA, &mut rng).unwrap();
+        let fresh_budget = cx.budget_bits();
+        assert!(fresh_budget > 100.0, "fresh budget {fresh_budget}");
+
+        // Every op consumes budget, never restores it.
+        let mut budgets = vec![fresh_budget];
+        let sum = ctx.add(&cx, &cy);
+        budgets.push(sum.budget_bits());
+        let prod = ctx.rescale(&ctx.mul(&cx, &cy).unwrap()).unwrap();
+        budgets.push(prod.budget_bits());
+        let rot = ctx.rotate(&prod, 1).unwrap();
+        budgets.push(rot.budget_bits());
+        let deeper = ctx.rescale(&ctx.mul(&rot, &rot).unwrap()).unwrap();
+        budgets.push(deeper.budget_bits());
+        for w in budgets.windows(2) {
+            assert!(w[1] < w[0], "budget rose: {budgets:?}");
+        }
+        assert!(budgets.last().unwrap() > &0.0, "budget exhausted: {budgets:?}");
+
+        // The analytic bound upper-bounds measured error at every stage.
+        let prod_want: Vec<f64> = x.iter().zip(&y).map(|(a, b)| a * b).collect();
+        let slots = ctx.slots();
+        let rot_want: Vec<f64> = (0..slots).map(|j| prod_want[(j + 1) % slots]).collect();
+        let deep_want: Vec<f64> = rot_want.iter().map(|v| v * v).collect();
+        for (ct, want) in [(&prod, &prod_want), (&rot, &rot_want), (&deeper, &deep_want)] {
+            let (measured, bound) = ctx.check_noise_bound(ct, want);
+            assert!(
+                measured <= bound,
+                "noise model unsound: measured {measured:.3e} > bound {bound:.3e}"
+            );
+            assert!(bound.is_finite() && bound > 0.0);
+        }
+    }
+
+    #[test]
+    fn drop_to_level_shrinks_budget_with_modulus() {
+        let (ctx, mut rng) = setup(&[]);
+        let x = rand_slots(&mut rng, ctx.slots());
+        let ct = ctx.encrypt_values(&x, DELTA, &mut rng).unwrap();
+        let dropped = ct.drop_to_level(2);
+        // Noise is untouched, so the budget shrinks exactly by the bits of
+        // the dropped primes.
+        assert_eq!(dropped.noise, ct.noise);
+        assert!(dropped.budget_bits() < ct.budget_bits());
     }
 
     #[test]

@@ -1,0 +1,223 @@
+//! Per-ciphertext analytic noise accounting.
+//!
+//! Every [`Ciphertext`](super::Ciphertext) carries a [`NoiseBudget`]: a pair
+//! of log2-domain bounds updated through each homomorphic operation, so any
+//! ciphertext can report how many bits of modulus stand between its payload
+//! and decryption failure ([`Ciphertext::budget_bits`](super::Ciphertext::budget_bits)).
+//!
+//! The model tracks worst-case ∞-norm bounds, not variances:
+//!
+//! * `noise_bits` — log2 bound on the *coefficient-domain* noise `|e|_∞`
+//!   in the ciphertext phase `c0 + c1·s = Δm + e (mod Q_ℓ)`.
+//! * `msg_bits` — log2 bound on the *slot-domain* scaled message
+//!   `|Δ·m_j|`. The encoder's inverse embedding is 1/N-normalized
+//!   (`encoder.rs::embed`), so the coefficient bound of an encoding never
+//!   exceeds its slot bound and slots multiply pointwise — tracking the
+//!   message in the slot domain avoids a spurious ×N per multiplication.
+//!
+//! Per-op recurrences (N = ring degree, ⊞ = log-domain sum
+//! `log2(2^a + 2^b)`, derivations in DESIGN.md "Observability"):
+//!
+//! | op                | noise_bits′                                   | msg_bits′      |
+//! |-------------------|-----------------------------------------------|----------------|
+//! | fresh encrypt     | log2(6σ+1)                                    | log2(Δ·max|m|+1) |
+//! | add / sub         | n_a ⊞ n_b                                     | m_a ⊞ m_b      |
+//! | add_plain/plain_sub| n ⊞ 0                                        | m ⊞ p          |
+//! | mul_plain (bound p)| (log2N + n + p) ⊞ (log2N + m)                | m + p          |
+//! | mul_scalar_int k  | n + log2 max(|k|,1)                           | m + log2 max(|k|,1) |
+//! | mul (+relin)      | (log2N+m_a+n_b) ⊞ (log2N+m_b+n_a) ⊞ (log2N+n_a+n_b) ⊞ ks | m_a + m_b |
+//! | rescale by q      | (n − log2 q) ⊞ log2 N                         | m − log2 q     |
+//! | rotate / hoisted  | n ⊞ ks                                        | m              |
+//! | drop_to_level     | unchanged                                     | unchanged      |
+//!
+//! `ks` is the hybrid special-modulus key-switch noise
+//! ([`ks_noise_bits`]): (ℓ+1) per-prime digits each contributing ≈ N·6σ
+//! after division by P, plus the mod-down rounding (≤ N). Every recurrence
+//! only ever *adds* noise (rescale floors at log2 N), and `budget_bits` is
+//! `log2 Q_ℓ − noise_bits`, so the budget is monotone non-increasing
+//! through any evaluation — the property the transcipher tests pin.
+//!
+//! The slot-domain decryption error of a ciphertext is then bounded by
+//! `N · 2^noise_bits / Δ` (projection sums N coefficients against
+//! unit-modulus roots), which the debug decrypt-and-compare hook
+//! (`CkksContext::check_noise_bound`) cross-checks against measured error.
+
+/// log2(2^a + 2^b), numerically stable for far-apart magnitudes.
+pub(crate) fn lse2(a: f64, b: f64) -> f64 {
+    let (hi, lo) = if a >= b { (a, b) } else { (b, a) };
+    if hi == f64::NEG_INFINITY {
+        return f64::NEG_INFINITY;
+    }
+    hi + (1.0 + (lo - hi).exp2()).log2()
+}
+
+/// log2 bound for a value of magnitude `mag` (≥ 0 bits: the +1 absorbs
+/// encoding rounding and keeps tiny magnitudes from going negative).
+pub(crate) fn mag_bits(mag: f64) -> f64 {
+    (mag.abs() + 1.0).log2()
+}
+
+/// log2 worst-case noise added by one hybrid special-modulus key switch at
+/// `level`: (level+1) digits, each an NTT-domain product of a chain-prime
+/// digit with a key component whose post-/P residue is gaussian (≤ 6σ per
+/// coefficient, ×N for the ring product), plus ≤ N mod-down rounding.
+pub fn ks_noise_bits(level: usize, n: usize, sigma: f64) -> f64 {
+    let nf = n as f64;
+    (((level + 1) as f64) * nf * 6.0 * sigma + nf + 1.0).log2()
+}
+
+/// Analytic noise state carried by every CKKS ciphertext (log2 domain).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NoiseBudget {
+    /// log2 bound on the coefficient-domain noise `|e|_∞` in the phase.
+    pub noise_bits: f64,
+    /// log2 bound on the slot-domain scaled message `|Δ·m_j|`.
+    pub msg_bits: f64,
+}
+
+impl NoiseBudget {
+    /// Fresh encryption: the phase error is one gaussian sample `e`
+    /// (`|e|_∞ ≤ 6σ` with overwhelming probability).
+    pub fn fresh(sigma: f64, scaled_mag: f64) -> NoiseBudget {
+        NoiseBudget {
+            noise_bits: (6.0 * sigma + 1.0).log2(),
+            msg_bits: mag_bits(scaled_mag),
+        }
+    }
+
+    /// Homomorphic addition or subtraction: both bounds add.
+    pub fn add(&self, o: &NoiseBudget) -> NoiseBudget {
+        NoiseBudget {
+            noise_bits: lse2(self.noise_bits, o.noise_bits),
+            msg_bits: lse2(self.msg_bits, o.msg_bits),
+        }
+    }
+
+    /// Plaintext addition/subtraction: the encoding's rounding (≤ 1 per
+    /// coefficient) joins the noise; the plaintext magnitude joins the
+    /// message. `pt_bits` = [`mag_bits`] of the plaintext's scaled bound.
+    pub fn add_plain(&self, pt_bits: f64) -> NoiseBudget {
+        NoiseBudget {
+            noise_bits: lse2(self.noise_bits, 0.0),
+            msg_bits: lse2(self.msg_bits, pt_bits),
+        }
+    }
+
+    /// Plaintext multiplication by an encoding bounded by `2^pt_bits`:
+    /// the ring product scales the noise by N·|pt| and the plaintext's
+    /// rounding error (≤ 1/coeff) multiplies the message.
+    pub fn mul_plain(&self, pt_bits: f64, log2n: f64) -> NoiseBudget {
+        NoiseBudget {
+            noise_bits: lse2(
+                log2n + self.noise_bits + pt_bits,
+                log2n + self.msg_bits,
+            ),
+            msg_bits: self.msg_bits + pt_bits,
+        }
+    }
+
+    /// Exact integer-scalar multiplication (no ring product, no rounding).
+    pub fn mul_scalar_int(&self, k: i64) -> NoiseBudget {
+        let bits = (k.unsigned_abs().max(1) as f64).log2();
+        NoiseBudget {
+            noise_bits: self.noise_bits + bits,
+            msg_bits: self.msg_bits + bits,
+        }
+    }
+
+    /// Ciphertext multiplication + relinearization: the three phase cross
+    /// terms `Δm_a·e_b`, `Δm_b·e_a`, `e_a·e_b` (each ×N for the ring
+    /// product) plus the relin key-switch noise `2^ks_bits`.
+    pub fn mul(&self, o: &NoiseBudget, log2n: f64, ks_bits: f64) -> NoiseBudget {
+        let cross = lse2(
+            log2n + self.msg_bits + o.noise_bits,
+            log2n + o.msg_bits + self.noise_bits,
+        );
+        NoiseBudget {
+            noise_bits: lse2(
+                lse2(cross, log2n + self.noise_bits + o.noise_bits),
+                ks_bits,
+            ),
+            msg_bits: self.msg_bits + o.msg_bits,
+        }
+    }
+
+    /// Rescale by the top chain prime `q`: noise divides by q but the
+    /// centered rounding of `c1` re-enters through the secret (ternary `s`,
+    /// so ≤ N/2 per coefficient — floored at log2 N).
+    pub fn rescale(&self, q: f64, log2n: f64) -> NoiseBudget {
+        let lq = q.log2();
+        NoiseBudget {
+            noise_bits: lse2(self.noise_bits - lq, log2n),
+            msg_bits: self.msg_bits - lq,
+        }
+    }
+
+    /// Key switching alone (Galois rotation, hoisted apply): the
+    /// automorphism permutes coefficients (norm-preserving); only the
+    /// switch noise is added.
+    pub fn key_switch(&self, ks_bits: f64) -> NoiseBudget {
+        NoiseBudget {
+            noise_bits: lse2(self.noise_bits, ks_bits),
+            msg_bits: self.msg_bits,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lse2_is_stable_and_ordered() {
+        assert!((lse2(3.0, 3.0) - 4.0).abs() < 1e-12);
+        assert!((lse2(10.0, f64::NEG_INFINITY) - 10.0).abs() < 1e-12);
+        // Far-apart magnitudes neither overflow nor lose the max.
+        assert!((lse2(500.0, -500.0) - 500.0).abs() < 1e-9);
+        assert!(lse2(7.0, 2.0) >= 7.0);
+        assert!(lse2(7.0, 2.0) <= 8.0);
+    }
+
+    #[test]
+    fn every_op_is_noise_monotone() {
+        let a = NoiseBudget::fresh(3.2, (1u64 << 40) as f64);
+        let b = NoiseBudget::fresh(3.2, (1u64 << 40) as f64);
+        let log2n = 5.0;
+        let ks = ks_noise_bits(4, 32, 3.2);
+        for nb in [
+            a.add(&b),
+            a.add_plain(40.0),
+            a.mul_plain(40.0, log2n),
+            a.mul_scalar_int(-7),
+            a.mul(&b, log2n, ks),
+            a.key_switch(ks),
+        ] {
+            assert!(nb.noise_bits >= a.noise_bits, "{nb:?} lost noise");
+        }
+        // Rescale shrinks the noise by ~log2 q but never below the
+        // rounding floor, so budget (logQ − noise) still shrinks.
+        let grown = a.mul(&b, log2n, ks);
+        let q = (1u64 << 40) as f64;
+        let rs = grown.rescale(q, log2n);
+        assert!(rs.noise_bits >= log2n, "below rounding floor: {rs:?}");
+        assert!(rs.noise_bits >= grown.noise_bits - q.log2());
+        assert!((rs.msg_bits - (grown.msg_bits - q.log2())).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ks_noise_grows_with_level_and_ring() {
+        assert!(ks_noise_bits(6, 8192, 3.2) > ks_noise_bits(0, 8192, 3.2));
+        assert!(ks_noise_bits(3, 8192, 3.2) > ks_noise_bits(3, 32, 3.2));
+        // Sane magnitude: far below the ~40-bit scale a rescale removes.
+        assert!(ks_noise_bits(6, 8192, 3.2) < 21.0);
+    }
+
+    #[test]
+    fn scalar_zero_and_one_do_not_corrupt_bounds() {
+        let a = NoiseBudget::fresh(3.2, 1e12);
+        let one = a.mul_scalar_int(1);
+        assert_eq!(one, a);
+        let zero = a.mul_scalar_int(0);
+        assert!(zero.noise_bits.is_finite() && zero.msg_bits.is_finite());
+    }
+}

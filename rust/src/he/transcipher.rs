@@ -719,7 +719,12 @@ impl CkksTranscipher {
             })
             .into_iter()
             .collect::<Result<_>>()?;
-        crate::obs::trace_level("ark_in", state[0].level(), state[0].scale);
+        crate::obs::trace_level(
+            "ark_in",
+            state[0].level(),
+            state[0].scale,
+            state[0].budget_bits(),
+        );
 
         let mut rc_idx = 1;
         for _ in 1..p.rounds {
@@ -733,7 +738,12 @@ impl CkksTranscipher {
             .into_iter()
             .collect::<Result<_>>()?;
             rc_idx += 1;
-            crate::obs::trace_level("round", state[0].level(), state[0].scale);
+            crate::obs::trace_level(
+                "round",
+                state[0].level(),
+                state[0].scale,
+                state[0].budget_bits(),
+            );
         }
 
         // Fin: MRMC, NL, MRMC, (Tr,) ARK.
@@ -748,7 +758,7 @@ impl CkksTranscipher {
             })
             .into_iter()
             .collect::<Result<_>>()?;
-        crate::obs::trace_level("fin", ks[0].level(), ks[0].scale);
+        crate::obs::trace_level("fin", ks[0].level(), ks[0].scale, ks[0].budget_bits());
 
         // AGN: public (nonce, counter)-derived noise, plaintext-added.
         if p.agn_scale != 0.0 {

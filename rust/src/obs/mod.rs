@@ -32,6 +32,8 @@
 //! name), so concurrent threads — the serving executor, bench loops —
 //! merge into one breakdown. [`reset`] clears it between measurements.
 
+pub mod trace;
+
 use crate::util::stats::LatencyHistogram;
 use std::cell::{Cell, RefCell};
 use std::collections::BTreeMap;
@@ -40,6 +42,11 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Serialize tests that flip the global profiler/tracer state (shared with
+/// `trace::tests` — enabling the tracer activates [`span`] on all threads).
+#[cfg(test)]
+pub(crate) static TEST_LOCK: Mutex<()> = Mutex::new(());
 
 static REGISTRY: Mutex<BTreeMap<&'static str, OpStats>> = Mutex::new(BTreeMap::new());
 
@@ -73,6 +80,9 @@ struct Frame {
     name: &'static str,
     start: Instant,
     child_ns: u128,
+    /// Request id this span records trace events against (0 = none);
+    /// captured from the thread's [`trace`] scope when the span opens.
+    trace_req: u64,
 }
 
 /// Enable or disable the profiler globally. Disabling does not clear
@@ -98,11 +108,16 @@ fn lock_trace() -> std::sync::MutexGuard<'static, Vec<LevelPoint>> {
 
 /// Open a span for `name`. Time from this call to the guard's drop is
 /// recorded against `name`; nested spans subtract their time from this
-/// span's self-time. When the profiler is disabled this is one atomic
-/// load and the guard is inert.
+/// span's self-time. When both the profiler and the request tracer are
+/// disabled this is two relaxed atomic loads and the guard is inert. A
+/// span is also live when only [`trace`] is enabled *and* the thread is
+/// inside a request scope — it then records a per-request trace event on
+/// close without touching the aggregate registry.
 #[must_use = "the span measures until the guard drops"]
 pub fn span(name: &'static str) -> SpanGuard {
-    if !enabled() {
+    let profiling = enabled();
+    let trace_req = if trace::enabled() { trace::current() } else { 0 };
+    if !profiling && trace_req == 0 {
         return SpanGuard { active: false };
     }
     STACK.with(|s| {
@@ -110,6 +125,7 @@ pub fn span(name: &'static str) -> SpanGuard {
             name,
             start: Instant::now(),
             child_ns: 0,
+            trace_req,
         })
     });
     SpanGuard { active: true }
@@ -138,6 +154,12 @@ impl Drop for SpanGuard {
                 // A root span: remember its total so a fork-join region
                 // can merge worker-side time back into the spawner.
                 None => ROOT_NS.with(|r| r.set(r.get() + total)),
+            }
+            if frame.trace_req != 0 {
+                trace::record(frame.trace_req, frame.name, frame.start, total);
+            }
+            if !enabled() {
+                return; // trace-only span: skip the aggregate registry
             }
             let mut reg = lock_registry();
             let st = reg.entry(frame.name).or_default();
@@ -174,7 +196,7 @@ pub fn charge_fork(ns: u128) {
     });
 }
 
-/// One (stage, level, scale) point of a homomorphic evaluation's
+/// One (stage, level, scale, budget) point of a homomorphic evaluation's
 /// noise-budget trajectory.
 #[derive(Debug, Clone)]
 pub struct LevelPoint {
@@ -184,11 +206,15 @@ pub struct LevelPoint {
     pub level: usize,
     /// Ciphertext scale after the stage.
     pub scale: f64,
+    /// Analytic noise budget after the stage
+    /// ([`Ciphertext::budget_bits`](crate::he::ckks::Ciphertext::budget_bits)):
+    /// log2 of remaining modulus over the tracked noise bound.
+    pub budget_bits: f64,
 }
 
 /// Record one noise-budget trace point (no-op when disabled). The trace
 /// is bounded ([`LEVEL_TRACE_CAP`]); the oldest points fall off first.
-pub fn trace_level(stage: &'static str, level: usize, scale: f64) {
+pub fn trace_level(stage: &'static str, level: usize, scale: f64, budget_bits: f64) {
     if !enabled() {
         return;
     }
@@ -200,6 +226,7 @@ pub fn trace_level(stage: &'static str, level: usize, scale: f64) {
         stage,
         level,
         scale,
+        budget_bits,
     });
 }
 
@@ -282,13 +309,14 @@ pub fn report() -> String {
     }
     let trace = level_trace();
     if !trace.is_empty() {
-        out.push_str("noise budget (level/scale trajectory):\n");
+        out.push_str("noise budget (level/scale/budget trajectory):\n");
         for p in &trace {
             out.push_str(&format!(
-                "  {:<24} level {:>2}  scale 2^{:.2}\n",
+                "  {:<24} level {:>2}  scale 2^{:.2}  budget {:>7.1} bits\n",
                 p.stage,
                 p.level,
-                p.scale.log2()
+                p.scale.log2(),
+                p.budget_bits
             ));
         }
     }
@@ -298,9 +326,6 @@ pub fn report() -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    /// Serialize tests touching the global registry.
-    static TEST_LOCK: Mutex<()> = Mutex::new(());
 
     fn spin(us: u64) {
         let t0 = Instant::now();
@@ -318,7 +343,7 @@ mod tests {
             let _s = span("obs_test_disabled");
             spin(50);
         }
-        trace_level("obs_test_disabled", 3, 1e12);
+        trace_level("obs_test_disabled", 3, 1e12, 40.0);
         assert!(
             !snapshot().iter().any(|o| o.name == "obs_test_disabled"),
             "disabled spans must not be recorded"
@@ -427,7 +452,7 @@ mod tests {
         set_enabled(true);
         reset();
         for i in 0..(LEVEL_TRACE_CAP + 10) {
-            trace_level("obs_test_lvl", i % 8, (1u64 << 40) as f64);
+            trace_level("obs_test_lvl", i % 8, (1u64 << 40) as f64, 100.0 - i as f64);
         }
         set_enabled(false);
         let tr = level_trace();
@@ -446,12 +471,44 @@ mod tests {
             let _s = span("obs_test_report");
             spin(20);
         }
-        trace_level("obs_test_report", 5, (1u64 << 40) as f64);
+        trace_level("obs_test_report", 5, (1u64 << 40) as f64, 57.3);
         set_enabled(false);
         let r = report();
         assert!(r.contains("obs_test_report"), "{r}");
         assert!(r.contains("self %"), "{r}");
         assert!(r.contains("noise budget"), "{r}");
+        assert!(r.contains("57.3"), "budget bits missing from report: {r}");
         reset();
+    }
+
+    #[test]
+    fn spans_record_request_trace_events_without_profiler() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(false);
+        trace::set_enabled(true);
+        trace::clear();
+        reset();
+        let ctx = trace::mint();
+        {
+            let _scope = trace::enter(ctx.id);
+            let _s = span("obs_test_traced");
+            spin(30);
+        }
+        // Outside any request scope the span is inert again.
+        {
+            let _s = span("obs_test_unscoped");
+            spin(10);
+        }
+        trace::set_enabled(false);
+        assert_eq!(trace::event_count(), 1, "scoped span not traced");
+        // Trace-only spans must not pollute the aggregate registry.
+        assert!(
+            snapshot().is_empty(),
+            "trace-only spans leaked into the profiler registry"
+        );
+        let text = format!("{}", trace::export());
+        assert!(text.contains("obs_test_traced"), "{text}");
+        assert!(!text.contains("obs_test_unscoped"), "{text}");
+        trace::clear();
     }
 }

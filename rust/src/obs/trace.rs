@@ -1,0 +1,363 @@
+//! Request-scoped tracing: correlation IDs minted at the batcher, carried
+//! through executor lanes and CKKS ops, recorded as timestamped span events
+//! into bounded per-request rings, and exported as Chrome-trace JSON
+//! (loadable by `chrome://tracing` and Perfetto).
+//!
+//! The registry in `obs` aggregates *globally* — every call to `ckks/rescale`
+//! across all requests lands in one histogram. This module answers the other
+//! question: *where did this one request spend its time*. A `TraceCtx` is
+//! minted per request (`mint`), a thread enters its scope with the RAII
+//! [`enter`] guard, and every `obs::span` that closes while the scope is
+//! active records an event against that request. Stage boundaries that span
+//! threads (enqueue → execute → post_process) are recorded explicitly with
+//! [`record`]/[`instant`].
+//!
+//! Memory is bounded two ways: each request ring keeps at most
+//! [`RING_CAP`] events (oldest dropped first), and at most [`MAX_REQUESTS`]
+//! request rings are retained (oldest request evicted on mint). Everything is
+//! behind one relaxed atomic load when disabled.
+//!
+//! Chrome-trace mapping: request id → `pid` (so each request renders as its
+//! own process track), recording thread → `tid`, complete events (`ph:"X"`)
+//! carry microsecond `ts`/`dur` relative to the first enable, stage markers
+//! without duration are instants (`ph:"i"`).
+
+use crate::util::json::Json;
+use std::cell::Cell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+/// Max events retained per request ring.
+pub const RING_CAP: usize = 512;
+/// Max request rings retained; the oldest request is evicted beyond this.
+pub const MAX_REQUESTS: usize = 128;
+
+static TRACE_ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+static RINGS: Mutex<BTreeMap<u64, RequestRing>> = Mutex::new(BTreeMap::new());
+
+thread_local! {
+    /// Request id the current thread is recording under (0 = none).
+    static CURRENT: Cell<u64> = const { Cell::new(0) };
+    /// Small dense id for this thread (Chrome-trace `tid`), assigned lazily.
+    static TID: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Timestamp origin for the whole process; pinned on first use so exported
+/// `ts` values are comparable across requests.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn thread_id() -> u64 {
+    TID.with(|t| {
+        if t.get() == 0 {
+            t.set(NEXT_TID.fetch_add(1, Ordering::Relaxed));
+        }
+        t.get()
+    })
+}
+
+fn lock_rings() -> MutexGuard<'static, BTreeMap<u64, RequestRing>> {
+    // A panic while holding the lock only loses telemetry; keep serving.
+    RINGS.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// One recorded event in a request's ring.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    /// Span or stage name.
+    pub name: &'static str,
+    /// Microseconds since the trace epoch.
+    pub start_us: u64,
+    /// Duration in microseconds (complete events; 0-µs spans are legal).
+    pub dur_us: u64,
+    /// Dense id of the recording thread.
+    pub tid: u64,
+    /// Instant marker (no duration) rather than a complete span.
+    pub instant: bool,
+}
+
+/// Bounded event ring for one request.
+#[derive(Debug, Default)]
+struct RequestRing {
+    events: Vec<TraceEvent>,
+    /// Events discarded because the ring was full.
+    dropped: u64,
+}
+
+/// Correlation id for one request, minted at submission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceCtx {
+    /// Process-unique request id (> 0).
+    pub id: u64,
+}
+
+/// Globally enable/disable tracing. Pins the timestamp epoch on enable.
+pub fn set_enabled(on: bool) {
+    if on {
+        let _ = epoch();
+    }
+    TRACE_ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether tracing is enabled (one relaxed load — the disabled fast path).
+#[inline]
+pub fn enabled() -> bool {
+    TRACE_ENABLED.load(Ordering::Relaxed)
+}
+
+/// Mint a fresh correlation id. Ids are process-unique and monotonic even
+/// while disabled (so a request submitted before `set_enabled(true)` still
+/// has a valid id); the ring is only allocated when tracing is on.
+pub fn mint() -> TraceCtx {
+    let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+    if enabled() {
+        let mut rings = lock_rings();
+        while rings.len() >= MAX_REQUESTS {
+            let oldest = *rings.keys().next().expect("non-empty map");
+            rings.remove(&oldest);
+        }
+        rings.insert(id, RequestRing::default());
+    }
+    TraceCtx { id }
+}
+
+/// RAII guard restoring the previous request scope on drop.
+pub struct ReqScope {
+    prev: u64,
+}
+
+impl Drop for ReqScope {
+    fn drop(&mut self) {
+        CURRENT.with(|c| c.set(self.prev));
+    }
+}
+
+/// Enter a request scope on the current thread: `obs::span`s closed while
+/// the guard lives record trace events against `id`. Scopes nest; the guard
+/// restores the previous scope. Worker threads spawned inside the scope do
+/// *not* inherit it — their span self-times still merge into the caller's
+/// profile via `obs::charge_fork`, but only caller-thread spans appear in
+/// the per-request trace.
+pub fn enter(id: u64) -> ReqScope {
+    ReqScope {
+        prev: CURRENT.with(|c| c.replace(id)),
+    }
+}
+
+/// Request id the current thread is scoped to (0 = none).
+#[inline]
+pub fn current() -> u64 {
+    CURRENT.with(|c| c.get())
+}
+
+fn push(req: u64, ev: TraceEvent) {
+    let mut rings = lock_rings();
+    // A request evicted mid-flight re-registers here; the map stays bounded
+    // because eviction-on-mint keeps it at MAX_REQUESTS.
+    let ring = rings.entry(req).or_default();
+    if ring.events.len() >= RING_CAP {
+        ring.events.remove(0);
+        ring.dropped += 1;
+    }
+    ring.events.push(ev);
+}
+
+/// Record a complete event for request `req` that started at `start` and
+/// took `dur_ns`. No-op when tracing is disabled or `req` is 0.
+pub fn record(req: u64, name: &'static str, start: Instant, dur_ns: u128) {
+    if !enabled() || req == 0 {
+        return;
+    }
+    let start_us = start.saturating_duration_since(epoch()).as_micros() as u64;
+    push(
+        req,
+        TraceEvent {
+            name,
+            start_us,
+            dur_us: (dur_ns / 1_000) as u64,
+            tid: thread_id(),
+            instant: false,
+        },
+    );
+}
+
+/// Record an instant marker (a point in time, e.g. `enqueue`) for `req`.
+pub fn instant(req: u64, name: &'static str) {
+    if !enabled() || req == 0 {
+        return;
+    }
+    let start_us = Instant::now().saturating_duration_since(epoch()).as_micros() as u64;
+    push(
+        req,
+        TraceEvent {
+            name,
+            start_us,
+            dur_us: 0,
+            tid: thread_id(),
+            instant: true,
+        },
+    );
+}
+
+/// Total events currently retained across all request rings.
+pub fn event_count() -> u64 {
+    lock_rings().values().map(|r| r.events.len() as u64).sum()
+}
+
+/// Drop all retained rings (ids keep incrementing).
+pub fn clear() {
+    lock_rings().clear();
+}
+
+/// Export every retained ring as a Chrome-trace JSON document
+/// (`{"traceEvents": [...]}`): one `pid` per request with a `process_name`
+/// metadata record, `ph:"X"` complete events with µs `ts`/`dur`, and
+/// `ph:"i"` thread-scoped instants. Load in `chrome://tracing` or Perfetto.
+pub fn export() -> Json {
+    let rings = lock_rings();
+    let mut events = Vec::new();
+    for (&req, ring) in rings.iter() {
+        let mut meta = BTreeMap::new();
+        meta.insert("name".to_string(), Json::Str("process_name".to_string()));
+        meta.insert("ph".to_string(), Json::Str("M".to_string()));
+        meta.insert("pid".to_string(), Json::Num(req as f64));
+        let mut margs = BTreeMap::new();
+        margs.insert("name".to_string(), Json::Str(format!("request {req}")));
+        if ring.dropped > 0 {
+            margs.insert("dropped_events".to_string(), Json::Num(ring.dropped as f64));
+        }
+        meta.insert("args".to_string(), Json::Obj(margs));
+        events.push(Json::Obj(meta));
+        for ev in &ring.events {
+            let mut o = BTreeMap::new();
+            o.insert("name".to_string(), Json::Str(ev.name.to_string()));
+            o.insert("cat".to_string(), Json::Str("presto".to_string()));
+            o.insert(
+                "ph".to_string(),
+                Json::Str(if ev.instant { "i" } else { "X" }.to_string()),
+            );
+            o.insert("ts".to_string(), Json::Num(ev.start_us as f64));
+            if ev.instant {
+                o.insert("s".to_string(), Json::Str("t".to_string()));
+            } else {
+                o.insert("dur".to_string(), Json::Num(ev.dur_us as f64));
+            }
+            o.insert("pid".to_string(), Json::Num(req as f64));
+            o.insert("tid".to_string(), Json::Num(ev.tid as f64));
+            events.push(Json::Obj(o));
+        }
+    }
+    let mut doc = BTreeMap::new();
+    doc.insert("traceEvents".to_string(), Json::Arr(events));
+    doc.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+    Json::Obj(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Shares the obs test lock: enabling tracing globally activates
+    // `obs::span` on every thread, which would race tests asserting on the
+    // profiler registry.
+    fn locked() -> std::sync::MutexGuard<'static, ()> {
+        crate::obs::TEST_LOCK
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+    }
+
+    #[test]
+    fn disabled_tracer_retains_nothing() {
+        let _g = locked();
+        set_enabled(false);
+        clear();
+        let ctx = mint();
+        assert!(ctx.id > 0);
+        instant(ctx.id, "enqueue");
+        record(ctx.id, "execute", Instant::now(), 5_000);
+        assert_eq!(event_count(), 0);
+    }
+
+    #[test]
+    fn records_and_exports_chrome_trace_events() {
+        let _g = locked();
+        set_enabled(true);
+        clear();
+        let ctx = mint();
+        instant(ctx.id, "enqueue");
+        let t0 = Instant::now();
+        record(ctx.id, "execute", t0, 42_000);
+        set_enabled(false);
+        assert_eq!(event_count(), 2);
+
+        let doc = export();
+        let evs = doc
+            .as_obj()
+            .and_then(|o| o.get("traceEvents"))
+            .and_then(|v| v.as_arr())
+            .expect("traceEvents array");
+        // process_name metadata + instant + complete event.
+        assert_eq!(evs.len(), 3);
+        let phases: Vec<&str> = evs
+            .iter()
+            .filter_map(|e| e.as_obj())
+            .filter_map(|o| o.get("ph").and_then(|p| p.as_str()))
+            .collect();
+        assert_eq!(phases, vec!["M", "i", "X"]);
+        let exec = evs[2].as_obj().expect("complete event object");
+        assert_eq!(exec.get("name").and_then(|v| v.as_str()), Some("execute"));
+        assert_eq!(exec.get("dur").and_then(|v| v.as_u64()), Some(42));
+        assert_eq!(exec.get("pid").and_then(|v| v.as_u64()), Some(ctx.id));
+        // The document round-trips through the parser (loadable JSON).
+        let text = format!("{doc}");
+        assert!(Json::parse(&text).is_ok(), "export is not valid JSON");
+        clear();
+    }
+
+    #[test]
+    fn rings_are_bounded_per_request_and_globally() {
+        let _g = locked();
+        set_enabled(true);
+        clear();
+        let ctx = mint();
+        let t0 = Instant::now();
+        for _ in 0..(RING_CAP + 40) {
+            record(ctx.id, "op", t0, 1_000);
+        }
+        assert_eq!(event_count(), RING_CAP as u64);
+
+        let first = mint();
+        for _ in 0..MAX_REQUESTS + 3 {
+            let _ = mint();
+        }
+        // The earliest rings (ctx, first) were evicted to stay bounded.
+        instant(first.id, "late");
+        set_enabled(false);
+        let rings = lock_rings();
+        assert!(rings.len() <= MAX_REQUESTS + 1, "rings unbounded");
+        assert!(!rings.contains_key(&ctx.id), "oldest ring not evicted");
+        drop(rings);
+        clear();
+    }
+
+    #[test]
+    fn scopes_nest_and_restore() {
+        let _g = locked();
+        assert_eq!(current(), 0);
+        let outer = enter(7);
+        assert_eq!(current(), 7);
+        {
+            let _inner = enter(9);
+            assert_eq!(current(), 9);
+        }
+        assert_eq!(current(), 7);
+        drop(outer);
+        assert_eq!(current(), 0);
+    }
+}

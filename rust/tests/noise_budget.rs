@@ -1,0 +1,87 @@
+//! Per-ciphertext noise accounting through the full HERA transcipher:
+//! the analytic budget must fall monotonically stage by stage, stay
+//! positive at the output, and upper-bound the measured decrypt error.
+//!
+//! Everything lives in one `#[test]`: the obs level trace is a process
+//! global, so a second traced evaluation running concurrently would
+//! interleave its stage points into the trajectory under test.
+
+use presto::he::ckks::CkksContext;
+use presto::he::transcipher::{CkksCipherProfile, CkksTranscipher};
+use presto::params::CkksParams;
+use presto::util::rng::SplitMix64;
+
+#[test]
+fn hera_budget_falls_monotonically_and_bounds_decrypt_error() {
+    let profile = CkksCipherProfile::hera_toy();
+    let levels = profile.required_levels();
+    let ctx = CkksContext::builder(CkksParams::with_shape(32, levels))
+        .seed(21)
+        .build()
+        .unwrap();
+    let mut rng = SplitMix64::new(6);
+    let key = profile.sample_key(21);
+    let server = CkksTranscipher::setup(profile.clone(), &ctx, &key, &mut rng).unwrap();
+
+    let nonce = 9;
+    let blocks = 8usize.min(ctx.slots());
+    let counters: Vec<u64> = (0..blocks as u64).collect();
+    let mut wrng = SplitMix64::new(4);
+    let data: Vec<Vec<f64>> = (0..blocks)
+        .map(|_| (0..profile.l).map(|_| wrng.next_f64() * 2.0 - 1.0).collect())
+        .collect();
+    let sym: Vec<Vec<f64>> = data
+        .iter()
+        .zip(&counters)
+        .map(|(m, &c)| profile.encrypt_block(&key, nonce, c, m))
+        .collect();
+
+    presto::obs::set_enabled(true);
+    presto::obs::reset();
+    let cts = server.transcipher(&ctx, nonce, &counters, &sym).unwrap();
+    let trace = presto::obs::level_trace();
+    presto::obs::set_enabled(false);
+
+    // The trajectory covers the evaluation — initial ARK, the interior
+    // rounds, the final stage — with the budget strictly decreasing.
+    assert_eq!(
+        trace.len(),
+        profile.rounds + 1,
+        "expected ark_in + {} interior rounds + fin, got {:?}",
+        profile.rounds - 1,
+        trace.iter().map(|p| p.stage).collect::<Vec<_>>()
+    );
+    assert_eq!(trace[0].stage, "ark_in");
+    assert_eq!(trace.last().unwrap().stage, "fin");
+    for w in trace.windows(2) {
+        assert!(
+            w[1].budget_bits < w[0].budget_bits,
+            "budget must fall monotonically: {} bits at {} -> {} bits at {}",
+            w[0].budget_bits,
+            w[0].stage,
+            w[1].budget_bits,
+            w[1].stage
+        );
+        assert!(w[0].budget_bits.is_finite() && w[1].budget_bits.is_finite());
+    }
+
+    // Every output is still decryptable on paper (positive budget), and
+    // the measured slot error is below both the analytic bound and the
+    // documented end-to-end bound.
+    let bound_doc = profile.error_bound();
+    for (i, ct) in cts.iter().enumerate() {
+        let budget = ct.budget_bits();
+        assert!(budget > 0.0, "element {i}: budget {budget} bits exhausted");
+        let analytic = ct.noise_bound_slots();
+        let d = ctx.decrypt_real(ct);
+        for (blk, row) in data.iter().enumerate() {
+            let err = (d[blk] - row[i]).abs();
+            assert!(
+                err <= analytic,
+                "element {i} block {blk}: measured error {err:.3e} exceeds \
+                 analytic bound {analytic:.3e}"
+            );
+            assert!(err < bound_doc, "element {i} block {blk}: {err:.3e}");
+        }
+    }
+}

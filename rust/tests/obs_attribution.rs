@@ -1,0 +1,94 @@
+//! Attribution properties of the span profiler under the fork/join hot
+//! path: `charge_fork`'s wall-clock cap must keep serial self-times
+//! partitioning the enclosing wall time, bound parallel self-times by the
+//! machine's parallelism, and leave per-op call counts bit-identical
+//! between serial and parallel runs.
+//!
+//! One `#[test]` on purpose: the profiler registry is a process global.
+
+use presto::he::ckks::CkksContext;
+use presto::he::transcipher::{CkksCipherProfile, CkksTranscipher};
+use presto::params::CkksParams;
+use presto::util::rng::SplitMix64;
+use std::collections::BTreeMap;
+
+/// Run one transcipher evaluation at the given thread count under an
+/// enclosing span; return (enclosing wall ns, Σ self ns, per-op calls).
+fn profiled_run(threads: usize) -> (u128, u128, BTreeMap<&'static str, u64>) {
+    let profile = CkksCipherProfile::rubato_toy();
+    let ctx = CkksContext::builder(CkksParams::with_shape(
+        256,
+        profile.required_levels(),
+    ))
+    .seed(7)
+    .threads(threads)
+    .build()
+    .unwrap();
+    let mut rng = SplitMix64::new(2);
+    let key = profile.sample_key(5);
+    let server = CkksTranscipher::setup(profile.clone(), &ctx, &key, &mut rng).unwrap();
+    let blocks = 4usize;
+    let counters: Vec<u64> = (0..blocks as u64).collect();
+    let data = vec![vec![0.25; profile.l]; blocks];
+    let sym: Vec<Vec<f64>> = data
+        .iter()
+        .zip(&counters)
+        .map(|(m, &c)| profile.encrypt_block(&key, 3, c, m))
+        .collect();
+
+    presto::obs::set_enabled(true);
+    presto::obs::reset();
+    {
+        let _g = presto::obs::span("test/enclosing");
+        let out = server.transcipher(&ctx, 3, &counters, &sym).unwrap();
+        std::hint::black_box(&out);
+    }
+    let snap = presto::obs::snapshot();
+    presto::obs::set_enabled(false);
+
+    let wall = snap
+        .iter()
+        .find(|o| o.name == "test/enclosing")
+        .expect("enclosing span recorded")
+        .total_ns;
+    let sum_self: u128 = snap.iter().map(|o| o.self_ns).sum();
+    let calls: BTreeMap<&'static str, u64> =
+        snap.iter().map(|o| (o.name, o.calls)).collect();
+    (wall, sum_self, calls)
+}
+
+#[test]
+fn fork_charge_is_capped_by_wall_clock() {
+    let (wall_1, self_1, calls_1) = profiled_run(1);
+    // Serial: every span runs on the caller thread, so self-times
+    // partition the enclosing wall time (small tolerance for the
+    // bookkeeping around span entry/exit).
+    assert!(
+        self_1 as f64 <= wall_1 as f64 * 1.05,
+        "serial Σ self {self_1} ns exceeds wall {wall_1} ns"
+    );
+
+    let par = presto::util::par::available();
+    let (wall_n, self_n, calls_n) = profiled_run(0);
+    // Parallel: `charge_fork` caps each fork's charge at the caller's
+    // wait, so total attributed self time cannot exceed wall × cores.
+    assert!(
+        self_n as f64 <= wall_n as f64 * par as f64 * 1.05,
+        "parallel Σ self {self_n} ns exceeds wall {wall_n} ns × {par} threads"
+    );
+
+    // The thread knob moves wall clock only: the work — op names and
+    // per-op call counts — is identical between runs.
+    assert_eq!(
+        calls_1.keys().collect::<Vec<_>>(),
+        calls_n.keys().collect::<Vec<_>>(),
+        "serial and parallel runs recorded different op sets"
+    );
+    for (op, &c1) in &calls_1 {
+        assert_eq!(
+            c1, calls_n[op],
+            "op {op}: {c1} calls serial vs {} parallel",
+            calls_n[op]
+        );
+    }
+}

@@ -1,0 +1,49 @@
+#!/usr/bin/env bash
+# Perf-regression gate: compare a fresh quick-mode BENCH_table5.json against
+# the committed baseline and fail on a per-scheme blocks/s drop beyond the
+# allowed percentage.
+#
+#   tools/check_bench_regression.sh <baseline.json> <current.json> [max_drop_pct]
+#
+# The committed baseline (BENCH_table5.json at the repo root) carries
+# deliberately conservative throughputs so ordinary CI-runner jitter never
+# trips the gate; only a real (>max_drop_pct, default 35%) regression fails.
+# Exit codes: 0 = within budget, 1 = regression or missing scheme, 2 = usage.
+set -euo pipefail
+
+usage() {
+  echo "usage: $0 <baseline.json> <current.json> [max_drop_pct]" >&2
+  exit 2
+}
+[ $# -ge 2 ] || usage
+baseline=$1
+current=$2
+max_drop=${3:-35}
+[ -r "$baseline" ] || { echo "cannot read baseline $baseline" >&2; exit 2; }
+[ -r "$current" ] || { echo "cannot read current $current" >&2; exit 2; }
+
+fail=0
+for scheme in $(jq -r '.rows[].scheme' "$baseline"); do
+  base=$(jq -r --arg sc "$scheme" \
+    '[.rows[] | select(.scheme == $sc) | .throughput_blocks_per_s] | first' \
+    "$baseline")
+  cur=$(jq -r --arg sc "$scheme" \
+    '[.rows[] | select(.scheme == $sc) | .throughput_blocks_per_s] | first // empty' \
+    "$current")
+  if [ -z "$cur" ] || [ "$cur" = "null" ]; then
+    echo "FAIL $scheme: missing from $current" >&2
+    fail=1
+    continue
+  fi
+  ok=$(jq -n --argjson b "$base" --argjson c "$cur" --argjson d "$max_drop" \
+    '$c >= $b * (1 - $d / 100)')
+  drop=$(jq -n --argjson b "$base" --argjson c "$cur" \
+    '((1 - $c / $b) * 1000 | round) / 10')
+  if [ "$ok" = "true" ]; then
+    echo "OK   $scheme: $cur blocks/s vs baseline $base (drop ${drop}%, limit ${max_drop}%)"
+  else
+    echo "FAIL $scheme: $cur blocks/s vs baseline $base (drop ${drop}% exceeds ${max_drop}%)" >&2
+    fail=1
+  fi
+done
+exit $fail
