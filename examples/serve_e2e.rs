@@ -1,84 +1,165 @@
-//! End-to-end serving driver (experiment E11): the full three-layer stack
-//! on a real workload.
+//! End-to-end streaming-serving driver: the sharded session stack on a
+//! synthetic multi-session workload, offline (no PJRT artifact needed).
 //!
-//! Loads the AOT-compiled JAX/Pallas keystream artifact (L1+L2, built by
-//! `make artifacts`), starts the Rust coordinator (L3: dynamic batcher +
-//! decoupled RNG pool + PJRT executor), drives it with a Poisson request
-//! stream of real-valued feature vectors, validates every response by
-//! decrypting it, and reports latency/throughput.
+//! Opens N per-user transcipher sessions against a K-shard
+//! [`SessionManager`], streams batches of symmetric blocks through each
+//! (`push_blocks` → incremental `CompletedBatch`es), exercises the typed
+//! backpressure path when the bounded queues fill, decrypt-validates every
+//! output ciphertext, and verifies the drain guarantee: every accepted
+//! batch is delivered, none dropped.
 //!
-//! Run with: `make artifacts && cargo run --release --example serve_e2e`
+//! Run: `cargo run --release --example serve_e2e -- --shards 2 --queue-cap 4`
+//! Flags: `--shards K --queue-cap N --sessions N --pushes N --blocks N
+//! --output-level L --ring N --seed N --metrics PATH --prometheus`
 //!
-//! Besides the round-trip validation and the metrics report, this driver
-//! enables the span profiler and prints the per-operation breakdown table,
-//! the Prometheus text exposition, and the JSON metrics snapshot (queue
-//! wait, queue depth, rejected requests, remaining-level gauges included).
+//! Exits non-zero if any batch fails to decrypt within the profile's
+//! documented error bound or any accepted batch is not delivered. The
+//! legacy XLA-artifact serving loop lives in `presto serve --shards 0`.
 
-use presto::cipher::{build_cipher, SecretKey};
-use presto::coordinator::{BatchPolicy, EncryptServer, ServerConfig};
-use presto::params::ParamSet;
-use presto::workload::WorkloadGen;
-use presto::xof::XofKind;
+use presto::coordinator::{CompletedBatch, SessionConfig, SessionManager};
+use presto::he::transcipher::CkksCipherProfile;
+use presto::params::CkksParams;
+use presto::util::cli::Args;
+use presto::util::error::Result;
+use presto::util::rng::SplitMix64;
+use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
 fn main() {
-    let params = ParamSet::rubato_128l();
-    let sessions = 4;
-    let requests = 4000;
-    let cfg = ServerConfig {
-        params,
-        xof: XofKind::AesCtr,
-        policy: BatchPolicy {
-            batch_size: 8, // the paper's lane count
-            max_wait: Duration::from_millis(2),
-        },
-        rng_depth: 16, // the paper's small decoupled FIFO
-        rng_workers: 2,
-        sessions,
-        artifact_dir: Some("artifacts".into()),
-        executor_threads: 0, // software fallback fans out per-lane keystreams
-    };
-    let server = EncryptServer::start(cfg).expect("run `make artifacts` first");
-    presto::obs::set_enabled(true);
-    presto::obs::reset();
-    println!("encryption service up: {} via PJRT, {} sessions", params.name, sessions);
+    let args = Args::from_env();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
 
-    // Poisson arrivals of normalized feature vectors.
-    let mut wl = WorkloadGen::new(&params, 5_000.0, sessions, 7);
-    let reqs = wl.take(requests);
-    let originals: Vec<Vec<f64>> = reqs.iter().map(|r| r.message.clone()).collect();
+fn run(args: &Args) -> Result<()> {
+    let shards = args.parsed_or("shards", 2usize).unwrap_or(2);
+    let queue_cap = args.parsed_or("queue-cap", 4usize).unwrap_or(4);
+    let sessions = args.parsed_or("sessions", 2u64).unwrap_or(2);
+    let pushes = args.parsed_or("pushes", 3usize).unwrap_or(3);
+    let blocks = args.parsed_or("blocks", 4usize).unwrap_or(4);
+    let ring = args.parsed_or("ring", 64usize).unwrap_or(64);
+    let output_level = args.parsed_or("output-level", 0usize).unwrap_or(0);
+    let seed = args.parsed_or("seed", 2026u64).unwrap_or(2026);
 
+    let profile = CkksCipherProfile::rubato_toy();
+    let levels = profile.required_levels() + output_level;
+    let cfg = SessionConfig::builder(profile)
+        .ckks(CkksParams::with_shape(ring, levels))
+        .seed(seed)
+        .shards(shards)
+        .queue_cap(queue_cap)
+        .output_level(output_level)
+        .build()?;
+    let mgr = SessionManager::start(cfg)?;
+    let l = mgr.config().profile.l;
+    let bound = mgr.config().profile.error_bound();
+    let blocks = blocks.min(mgr.batch_capacity());
+    println!(
+        "streaming stack up: {shards} shards, queue cap {queue_cap}, {sessions} sessions × {pushes} pushes × {blocks} blocks, output level {output_level}"
+    );
+
+    let mut handles = Vec::new();
+    for id in 1..=sessions {
+        handles.push(mgr.open_session(id)?);
+    }
+    let mut rng = SplitMix64::new(seed ^ 0xE2E);
+    let mut pushed: HashMap<(u64, u64), Vec<Vec<f64>>> = HashMap::new();
+    let mut completed: Vec<CompletedBatch> = Vec::new();
+    let mut backpressure_hits = 0u64;
+    let mut incremental = false;
     let t0 = Instant::now();
-    let rxs: Vec<_> = reqs
-        .into_iter()
-        .map(|r| server.submit(r).expect("server accepting requests"))
-        .collect();
-    let responses: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    for _push in 0..pushes {
+        for sess in handles.iter_mut() {
+            let data: Vec<Vec<f64>> = (0..blocks)
+                .map(|_| (0..l).map(|_| rng.next_f64() * 2.0 - 1.0).collect())
+                .collect();
+            loop {
+                match sess.push_blocks(&data) {
+                    Ok(ticket) => {
+                        pushed.insert((sess.id(), ticket.0), data);
+                        break;
+                    }
+                    Err(e) if e.is_backpressure() => {
+                        // Bounded queue at work: drain completions, retry.
+                        // Rejected pushes burn no stream counters.
+                        backpressure_hits += 1;
+                        for r in sess.drain_completed() {
+                            completed.push(r?);
+                        }
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(e) => return Err(e.into()),
+                }
+            }
+            // A batch completing while later pushes are still being
+            // submitted is the streaming property the stack exists for.
+            for r in sess.drain_completed() {
+                incremental = true;
+                completed.push(r?);
+            }
+        }
+    }
+    for sess in handles.iter_mut() {
+        while sess.in_flight() > 0 {
+            completed.push(sess.wait_next(Duration::from_secs(120))?);
+        }
+    }
     let wall = t0.elapsed().as_secs_f64();
 
-    // Validate every ciphertext by decrypting with the session key.
-    let codec = server.codec();
-    let cipher = build_cipher(params, XofKind::AesCtr);
-    let f = params.field();
-    let mut checked = 0;
-    for (resp, msg) in responses.iter().zip(&originals) {
-        let key = SecretKey::generate(&params, resp.session + 1);
-        let ks = cipher.keystream(&key, resp.nonce, resp.counter).ks;
-        for (i, &orig) in msg.iter().enumerate() {
-            let dec = codec.decode(f.sub(resp.ciphertext[i], ks[i]));
-            assert!(
-                (dec - orig).abs() <= codec.quantization_bound() + 1e-9,
-                "request {} element {i}: {dec} vs {orig}",
-                resp.id
+    // Validate: every accepted batch delivered, every output decrypts.
+    let mut max_err = 0.0f64;
+    for b in &completed {
+        let data = pushed
+            .remove(&(b.session, b.ticket.0))
+            .unwrap_or_else(|| panic!("unexpected ticket {:?}", b.ticket));
+        assert_eq!(b.ciphertexts.len(), l);
+        for (i, ct) in b.ciphertexts.iter().enumerate() {
+            assert_eq!(
+                ct.level(),
+                output_level,
+                "output level {} != requested {output_level}",
+                ct.level()
             );
+            let d = mgr.context().decrypt_real(ct);
+            for (blk, row) in data.iter().enumerate() {
+                max_err = max_err.max((d[blk] - row[i]).abs());
+            }
         }
-        checked += 1;
     }
-    println!("validated {checked}/{requests} responses (exact round trips)");
-    let snap = server.metrics().snapshot();
+    assert!(
+        pushed.is_empty(),
+        "{} accepted batches never delivered",
+        pushed.len()
+    );
+    assert!(
+        max_err < bound,
+        "max decrypt error {max_err:.3e} exceeds bound {bound:.1e}"
+    );
+    println!(
+        "validated {} batches: max_err {max_err:.3e} < bound {bound:.1e}, {backpressure_hits} backpressure rejections, incremental arrival: {incremental}",
+        completed.len()
+    );
+
+    let snap = mgr.metrics().snapshot();
     println!("{}", snap.report(wall));
-    println!("\n{}", presto::obs::report());
-    println!("--- prometheus ---\n{}", snap.prometheus());
-    println!("--- json snapshot ---\n{}", snap.to_json());
-    server.shutdown();
+    for sh in &snap.shards {
+        assert_eq!(
+            sh.accepted, sh.completed_batches,
+            "shard {}: accepted {} != completed {} (dropped accepted work!)",
+            sh.shard, sh.accepted, sh.completed_batches
+        );
+    }
+    if args.flag("prometheus") {
+        println!("--- prometheus ---\n{}", snap.prometheus());
+    }
+    if let Some(path) = args.get("metrics") {
+        std::fs::write(path, format!("{}\n", snap.to_json()))
+            .map_err(|e| presto::util::error::Error::msg(format!("writing {path}: {e}")))?;
+        println!("metrics snapshot written to {path}");
+    }
+    drop(handles);
+    mgr.shutdown();
+    Ok(())
 }

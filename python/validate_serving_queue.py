@@ -1,0 +1,220 @@
+#!/usr/bin/env python3
+"""Mirror of the serving-stack ShardQueue (rust/src/coordinator/shard.rs).
+
+Ports the bounded-queue push/pop/drain state machine line-by-line and
+asserts the invariants the Rust tests (rust/tests/serving_stack.rs,
+shard.rs unit tests) pin:
+
+  * push never blocks; rejections are typed and ordered
+    Draining > QueueFull > Shedding
+  * hitting the hard cap arms hysteretic shedding (when watermark > 0);
+    shedding disarms only once 2 * depth <= watermark
+  * pop returns None only when draining AND empty — every accepted job
+    is handed out exactly once, FIFO
+  * drain-then-stop under concurrency: however a drain races submitters,
+    accepted == delivered (nothing dropped, nothing duplicated)
+"""
+
+import random
+import threading
+from collections import deque
+
+
+class Draining(Exception):
+    pass
+
+
+class QueueFull(Exception):
+    pass
+
+
+class Shedding(Exception):
+    pass
+
+
+class ShardQueue:
+    """Line-by-line mirror of ShardQueue::{push, pop, drain}."""
+
+    def __init__(self, index, cap, watermark):
+        assert cap >= 1
+        assert watermark < cap
+        self.index = index
+        self.cap = cap
+        self.watermark = watermark
+        self.jobs = deque()
+        self.draining = False
+        self.shedding = False
+        self.lock = threading.Lock()
+        self.cv = threading.Condition(self.lock)
+
+    def push(self, job):
+        with self.cv:
+            if self.draining:
+                raise Draining(self.index)
+            depth = len(self.jobs)
+            if depth >= self.cap:
+                if self.watermark > 0:
+                    self.shedding = True
+                raise QueueFull(self.index, depth, self.cap)
+            if self.watermark > 0:
+                if self.shedding:
+                    if 2 * depth <= self.watermark:
+                        self.shedding = False
+                    else:
+                        raise Shedding(self.index, depth, self.watermark)
+                elif depth >= self.watermark:
+                    self.shedding = True
+                    raise Shedding(self.index, depth, self.watermark)
+            self.jobs.append(job)
+            self.cv.notify()
+
+    def pop(self):
+        with self.cv:
+            while True:
+                if self.jobs:
+                    return self.jobs.popleft()
+                if self.draining:
+                    return None
+                self.cv.wait()
+
+    def drain(self):
+        with self.cv:
+            self.draining = True
+            self.cv.notify_all()
+
+
+def check_typed_rejections_and_fifo():
+    q = ShardQueue(0, cap=3, watermark=0)  # watermark 0: hard cap only
+    for i in range(3):
+        q.push(i)
+    try:
+        q.push(99)
+        raise AssertionError("push past cap must reject")
+    except QueueFull as e:
+        assert e.args == (0, 3, 3)
+    assert not q.shedding, "watermark 0 must never arm shedding"
+    assert [q.pop() for _ in range(3)] == [0, 1, 2], "FIFO"
+    q.drain()
+    assert q.pop() is None
+    try:
+        q.push(1)
+        raise AssertionError("push after drain must reject")
+    except Draining:
+        pass
+    print("ok:   typed rejections, FIFO, drain-then-stop, watermark=0 path")
+
+
+def check_hysteresis():
+    q = ShardQueue(2, cap=8, watermark=6)
+    for i in range(6):
+        q.push(i)  # depth 0..5 all below watermark
+    try:
+        q.push(6)
+        raise AssertionError("depth at watermark must shed")
+    except Shedding as e:
+        assert e.args == (2, 6, 6)
+    assert q.shedding
+    # Shedding stays armed until depth drains to watermark/2 == 3.
+    for _ in range(2):
+        q.pop()  # depth 4: 2*4 > 6, still shedding
+    try:
+        q.push(7)
+        raise AssertionError("still above half-watermark")
+    except Shedding:
+        pass
+    q.pop()  # depth 3: 2*3 <= 6, next push disarms and is accepted
+    q.push(8)
+    assert not q.shedding
+    # Hard cap also arms shedding (recovery is hysteretic from there too).
+    q2 = ShardQueue(1, cap=4, watermark=3)
+    for i in range(3):
+        q2.jobs.append(i)  # seed below cap without tripping watermark
+    q2.jobs.append(3)
+    try:
+        q2.push(4)
+        raise AssertionError("at cap must reject")
+    except QueueFull:
+        pass
+    assert q2.shedding, "cap hit must arm shedding"
+    print("ok:   hysteresis arms at watermark and cap, disarms at half")
+
+
+def check_drain_race_loses_nothing(trials=60):
+    rng = random.Random(2026)
+    for trial in range(trials):
+        q = ShardQueue(0, cap=4, watermark=0)
+        accepted = []
+        delivered = []
+        stop = threading.Event()
+
+        def submitter():
+            for i in range(200):
+                try:
+                    q.push(i)
+                    accepted.append(i)
+                except QueueFull:
+                    continue
+                except Draining:
+                    return
+
+        def worker():
+            while True:
+                job = q.pop()
+                if job is None:
+                    return
+                delivered.append(job)
+
+        ts = threading.Thread(target=submitter)
+        tw = threading.Thread(target=worker)
+        ts.start()
+        tw.start()
+        # Drain at a random phase of the race.
+        for _ in range(rng.randrange(0, 500)):
+            pass
+        q.drain()
+        ts.join()
+        tw.join()
+        assert delivered == accepted, (
+            f"trial {trial}: accepted {len(accepted)} != delivered {len(delivered)}"
+        )
+    print(f"ok:   {trials}-trial drain race: accepted == delivered, FIFO order")
+
+
+def check_session_counter_bookkeeping():
+    """Mirror of TranscipherSession counter semantics: counters are peeked
+    for the push and advanced only on accept, so a rejected push burns
+    nothing and a retry reuses the same range."""
+    cap = 2
+    position = 0
+    ticket = 0
+    issued = []
+    q = ShardQueue(0, cap=cap, watermark=0)
+    rejects = 0
+    while ticket < 7:
+        blocks = 3
+        counters = list(range(position, position + blocks))  # peek
+        try:
+            q.push((ticket, counters))
+        except QueueFull:
+            rejects += 1
+            got = q.pop()  # emulate the worker draining one job
+            issued.append(got)
+            continue  # position/ticket unchanged: retry reuses the range
+        position += blocks  # advance only on accept
+        ticket += 1
+    q.drain()
+    while (j := q.pop()) is not None:
+        issued.append(j)
+    assert rejects > 0, "cap-2 queue must push back in this loop"
+    assert [t for t, _ in issued] == list(range(7)), "tickets sequential"
+    flat = [c for _, cs in issued for c in cs]
+    assert flat == list(range(21)), "counter ranges contiguous, none burned"
+    print("ok:   session counters peek-then-advance; rejects burn nothing")
+
+
+if __name__ == "__main__":
+    check_typed_rejections_and_fifo()
+    check_hysteresis()
+    check_drain_race_loses_nothing()
+    check_session_counter_bookkeeping()
+    print("all serving-queue mirrors pass")

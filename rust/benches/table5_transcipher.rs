@@ -160,6 +160,101 @@ fn bench_ckks(
     Json::Obj(row)
 }
 
+/// Streaming serving stack row: the same Rubato transcipher work driven
+/// through the sharded `SessionManager` (sessions pinned to K CKKS worker
+/// pools, bounded queues, incremental delivery) instead of one direct
+/// engine call. Rows carry `kind: "serve"` plus the shard/session shape so
+/// the perf-regression gate can keep comparing the direct rows
+/// (`kind // "direct" == "direct"`) scheme-by-scheme while these ride
+/// along in the trajectory.
+fn bench_serve(
+    profile: CkksCipherProfile,
+    ring: usize,
+    shards: usize,
+    sessions: u64,
+    pushes: usize,
+    iters: usize,
+    threads: usize,
+) -> Json {
+    use presto::coordinator::{SessionConfig, SessionManager};
+    let scheme = format!("{:?}", profile.scheme).to_lowercase();
+    let name = format!(
+        "serving stack {scheme} (N={ring}, {shards} shard(s), {sessions} sessions × {pushes} pushes)"
+    );
+    let rounds = profile.rounds;
+    let levels = profile.required_levels();
+    let l = profile.l;
+    // Queue sized so the bench itself never hits backpressure: the timed
+    // quantity is shard execution, not retry loops. Shedding is disabled
+    // for the same reason.
+    let cfg = SessionConfig::builder(profile)
+        .ckks(CkksParams::with_shape(ring, levels))
+        .seed(2026)
+        .shards(shards)
+        .queue_cap(sessions as usize * pushes + 1)
+        .shed_watermark(0)
+        .threads(threads)
+        .build()
+        .expect("valid serving config");
+    let mgr = SessionManager::start(cfg).expect("serving stack starts");
+    let capacity = mgr.batch_capacity();
+    let mut rng = SplitMix64::new(13);
+    let data: Vec<Vec<f64>> = (0..capacity)
+        .map(|_| (0..l).map(|_| rng.next_f64() * 2.0 - 1.0).collect())
+        .collect();
+    let total_blocks = sessions as usize * pushes * capacity;
+    let r = bench(&name, iters, || {
+        // Sessions are per-iteration (they drop and free their ids); the
+        // manager — contexts, encrypted keys, workers — is set up once.
+        let mut handles: Vec<_> = (1..=sessions)
+            .map(|id| mgr.open_session(id).expect("session opens"))
+            .collect();
+        for _ in 0..pushes {
+            for s in handles.iter_mut() {
+                s.push_blocks(&data).expect("queue sized for the workload");
+            }
+        }
+        for s in handles.iter_mut() {
+            while s.in_flight() > 0 {
+                let b = s
+                    .wait_next(std::time::Duration::from_secs(120))
+                    .expect("accepted batch completes");
+                std::hint::black_box(&b);
+            }
+        }
+    });
+    println!(
+        "{}  ({} blocks/iter across {} shard(s), {:.1} blocks/s)",
+        r.report(),
+        total_blocks,
+        shards,
+        r.throughput(total_blocks as f64)
+    );
+    let key_bytes = mgr.context().switch_key_bytes() * shards as u64;
+    mgr.shutdown();
+
+    let mut row = BTreeMap::new();
+    row.insert("name".into(), Json::Str(name));
+    row.insert("kind".into(), Json::Str("serve".into()));
+    row.insert("scheme".into(), Json::Str(scheme));
+    row.insert("shards".into(), num(shards as f64));
+    row.insert("sessions".into(), num(sessions as f64));
+    row.insert("pushes".into(), num(pushes as f64));
+    row.insert("rounds".into(), num(rounds as f64));
+    row.insert("levels".into(), num(levels as f64));
+    row.insert("ring".into(), num(ring as f64));
+    row.insert("blocks_per_eval".into(), num(capacity as f64));
+    row.insert("threads".into(), num(threads as f64));
+    row.insert("latency_ns".into(), latency_json(&r.ns));
+    row.insert(
+        "throughput_blocks_per_s".into(),
+        num(r.throughput(total_blocks as f64)),
+    );
+    row.insert("key_memory_bytes".into(), num(key_bytes as f64));
+    row.insert("stages".into(), Json::Arr(Vec::new()));
+    Json::Obj(row)
+}
+
 fn main() {
     let quick = std::env::var("PRESTO_BENCH_QUICK").is_ok();
     // Quick mode (CI): toy ring, enough for schema + trend checks. Full
@@ -199,7 +294,7 @@ fn main() {
 
     // RNS-CKKS: slot-batched HERA and Rubato profiles. HERA at r=2
     // (7 levels); Rubato's toy profile r=2 is its full depth (5 levels).
-    let rows = vec![
+    let mut rows = vec![
         bench_ckks(
             &format!("RNS-CKKS HERA r=2 (N={ring}, 7 levels)"),
             CkksCipherProfile::hera_toy(),
@@ -215,6 +310,22 @@ fn main() {
             threads,
         ),
     ];
+    // Streaming serving stack at 1 and 2 shards (quick mode only: the
+    // shard-count sweep is a CI trend, not a paper-scale measurement). The
+    // direct rows above stay the perf-gate's comparison set.
+    if quick {
+        for shards in [1usize, 2] {
+            rows.push(bench_serve(
+                CkksCipherProfile::rubato_toy(),
+                ring,
+                shards,
+                2,
+                2,
+                3,
+                threads,
+            ));
+        }
+    }
 
     let mut doc = BTreeMap::new();
     doc.insert("bench".into(), Json::Str("table5_transcipher".into()));

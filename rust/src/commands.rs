@@ -26,8 +26,17 @@ COMMANDS:
                  RNS-CKKS transcipher-serving demo (client blocks in,
                  CKKS ciphertexts out, decrypt-checked).
     serve      --params <set> [--batch B] [--rate R] [--requests N] [--artifact PATH]
+                 [--shards K] [--queue-cap N] [--output-level L]
                  [--breakdown] [--prometheus] [--metrics PATH] [--trace-out PATH]
                  Run the client-side encryption service (L3 coordinator).
+                 --shards K > 0 switches to the sharded streaming
+                 transcipher stack: K CKKS worker pools, per-user sessions
+                 ([--sessions N] [--pushes N] [--blocks N] [--ring N]
+                 [--rounds N] [--seed N]), bounded queues with typed
+                 backpressure, and graceful drain. --queue-cap bounds the
+                 request queue on both paths (0 = unbounded legacy queue);
+                 --output-level keeps L CKKS levels on every output for
+                 deeper post-processing (sharded path only).
                  --breakdown prints the span profiler's per-operation table;
                  --prometheus prints the metrics in Prometheus text format;
                  --metrics writes a JSON metrics snapshot to PATH;

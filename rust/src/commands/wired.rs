@@ -22,8 +22,13 @@ fn params_from(args: &Args) -> Result<ParamSet, String> {
 }
 
 /// `presto serve` — run the encryption service against a synthetic Poisson
-/// workload and report latency/throughput.
+/// workload and report latency/throughput. With `--shards K` (K > 0) the
+/// command instead drives the sharded streaming transcipher stack.
 pub fn serve_impl(args: &Args) -> i32 {
+    let shards = args.parsed_or("shards", 0usize).unwrap_or(0);
+    if shards > 0 {
+        return serve_sessions(args, shards);
+    }
     let p = match params_from(args) {
         Ok(p) => p,
         Err(e) => return fail(e),
@@ -43,6 +48,7 @@ pub fn serve_impl(args: &Args) -> i32 {
         policy: BatchPolicy {
             batch_size: batch,
             max_wait: Duration::from_millis(2),
+            queue_cap: args.parsed_or("queue-cap", 0usize).unwrap_or(0),
         },
         rng_depth: args.parsed_or("rng-depth", 16usize).unwrap_or(16),
         rng_workers: args.parsed_or("rng-workers", 2usize).unwrap_or(2),
@@ -98,6 +104,175 @@ pub fn serve_impl(args: &Args) -> i32 {
     }
     server.shutdown();
     0
+}
+
+/// `presto serve --shards K`: drive the sharded streaming transcipher
+/// stack — per-user sessions pushing symmetric blocks, K CKKS worker
+/// pools, typed backpressure handled with poll-and-retry, decrypt-checked
+/// outputs, and a graceful drain at the end.
+fn serve_sessions(args: &Args, shards: usize) -> i32 {
+    use presto::coordinator::{SessionConfig, SessionManager};
+    use presto::he::transcipher::CkksCipherProfile;
+    use presto::params::CkksParams;
+    use presto::util::rng::SplitMix64;
+    use std::collections::HashMap;
+
+    let p = match params_from(args) {
+        Ok(p) => p,
+        Err(e) => return fail(e),
+    };
+    let rounds = args.parsed_or("rounds", 2usize).unwrap_or(2);
+    let ring = args.parsed_or("ring", 64usize).unwrap_or(64);
+    if !ring.is_power_of_two() || ring < 8 {
+        return fail(format!("--ring {ring} must be a power of two ≥ 8"));
+    }
+    let sessions = args.parsed_or("sessions", 2u64).unwrap_or(2);
+    let pushes = args.parsed_or("pushes", 3usize).unwrap_or(3);
+    let blocks = args.parsed_or("blocks", 4usize).unwrap_or(4);
+    let queue_cap = args.parsed_or("queue-cap", 8usize).unwrap_or(8);
+    let output_level = args.parsed_or("output-level", 0usize).unwrap_or(0);
+    let seed = args.parsed_or("seed", 2026u64).unwrap_or(2026);
+    if sessions == 0 || pushes == 0 || blocks == 0 {
+        return fail("--sessions, --pushes and --blocks must all be ≥ 1");
+    }
+    let profile = CkksCipherProfile::from_params(&p, rounds.max(1));
+    let levels = profile.required_levels() + output_level;
+    let cfg = match SessionConfig::builder(profile)
+        .ckks(CkksParams::with_shape(ring, levels))
+        .seed(seed)
+        .shards(shards)
+        .queue_cap(queue_cap)
+        .output_level(output_level)
+        .threads(args.parsed_or("threads", 0usize).unwrap_or(0))
+        .build()
+    {
+        Ok(c) => c,
+        Err(e) => return fail(e),
+    };
+    let mgr = match SessionManager::start(cfg) {
+        Ok(m) => m,
+        Err(e) => return fail(e),
+    };
+    if args.flag("breakdown") {
+        presto::obs::set_enabled(true);
+        presto::obs::reset();
+    }
+    let trace_out = args.get("trace-out");
+    if trace_out.is_some() {
+        presto::obs::trace::set_enabled(true);
+        presto::obs::trace::clear();
+    }
+    let blocks = blocks.min(mgr.batch_capacity());
+    println!(
+        "serving {} streaming ({} sessions × {pushes} pushes × {blocks} blocks, {shards} shards, queue cap {queue_cap}, output level {output_level})",
+        p.name, sessions,
+    );
+
+    let l = mgr.config().profile.l;
+    let bound = mgr.config().profile.error_bound();
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    let mut pushed: HashMap<(u64, u64), Vec<Vec<f64>>> = HashMap::new();
+    for id in 1..=sessions {
+        match mgr.open_session(id) {
+            Ok(s) => handles.push(s),
+            Err(e) => return fail(e),
+        }
+    }
+    let mut rng = SplitMix64::new(seed ^ 0xD475); // data seed
+    let mut completed = Vec::new();
+    let mut backpressure_hits = 0u64;
+    for push in 0..pushes {
+        for sess in handles.iter_mut() {
+            let data: Vec<Vec<f64>> = (0..blocks)
+                .map(|_| (0..l).map(|_| rng.next_f64() * 2.0 - 1.0).collect())
+                .collect();
+            // Poll-and-retry on backpressure: drain whatever has completed,
+            // give the worker a moment, resubmit (counters are not burned
+            // by rejected pushes, so the retry reuses the same stream
+            // positions).
+            loop {
+                match sess.push_blocks(&data) {
+                    Ok(ticket) => {
+                        pushed.insert((sess.id(), ticket.0), data);
+                        break;
+                    }
+                    Err(e) if e.is_backpressure() => {
+                        backpressure_hits += 1;
+                        completed.extend(sess.drain_completed());
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(e) => return fail(format!("session {} push {push}: {e}", sess.id())),
+                }
+            }
+        }
+    }
+    for sess in handles.iter_mut() {
+        while sess.in_flight() > 0 {
+            match sess.wait_next(Duration::from_secs(120)) {
+                Ok(b) => completed.push(Ok(b)),
+                Err(e) => return fail(e),
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let mut max_err = 0.0f64;
+    let mut batches_ok = 0u64;
+    for r in completed {
+        let b = match r {
+            Ok(b) => b,
+            Err(e) => return fail(e),
+        };
+        let data = match pushed.remove(&(b.session, b.ticket.0)) {
+            Some(d) => d,
+            None => return fail(format!("unexpected ticket {:?}", b.ticket)),
+        };
+        for (i, ct) in b.ciphertexts.iter().enumerate() {
+            if ct.level() != output_level {
+                return fail(format!(
+                    "output at level {} but --output-level {output_level}",
+                    ct.level()
+                ));
+            }
+            let d = mgr.context().decrypt_real(ct);
+            for (blk, row) in data.iter().enumerate() {
+                max_err = max_err.max((d[blk] - row[i]).abs());
+            }
+        }
+        batches_ok += 1;
+    }
+    if !pushed.is_empty() {
+        return fail(format!("{} accepted batches never completed", pushed.len()));
+    }
+    let snap = mgr.metrics().snapshot();
+    println!(
+        "{{\"sessions\":{sessions},\"shards\":{shards},\"batches\":{batches_ok},\"backpressure_hits\":{backpressure_hits},\"max_err\":{max_err:.3e},\"bound\":{bound:.1e},\"wall_s\":{wall:.3}}}"
+    );
+    println!("{}", snap.report(wall));
+    if args.flag("breakdown") {
+        println!("{}", presto::obs::report());
+    }
+    if args.flag("prometheus") {
+        println!("{}", snap.prometheus());
+    }
+    if let Some(path) = args.get("metrics") {
+        if let Err(e) = std::fs::write(path, format!("{}\n", snap.to_json())) {
+            return fail(format!("writing metrics snapshot to {path}: {e}"));
+        }
+    }
+    if let Some(path) = trace_out {
+        if let Err(e) = std::fs::write(path, format!("{}\n", presto::obs::trace::export())) {
+            return fail(format!("writing Chrome trace to {path}: {e}"));
+        }
+    }
+    drop(handles);
+    mgr.shutdown();
+    if max_err < bound {
+        0
+    } else {
+        eprintln!("error bound exceeded");
+        1
+    }
 }
 
 /// `presto simulate` — run the cycle-accurate simulator for one design.

@@ -6,8 +6,7 @@
 //! dynamic-batching policy of serving systems, applied to the client-side
 //! encryption engine.
 
-use crate::bail;
-use crate::util::error::Result;
+use super::shard::SubmitError;
 use crate::workload::Request;
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
@@ -21,6 +20,11 @@ pub struct BatchPolicy {
     /// Maximum time the oldest request may wait before a partial batch is
     /// released.
     pub max_wait: Duration,
+    /// Bound on the queue depth: a submit finding `queue_cap` requests
+    /// already waiting is rejected with [`SubmitError::QueueFull`] instead
+    /// of growing the queue without limit. 0 = unbounded (the legacy
+    /// behavior; backpressure applied upstream by the workload driver).
+    pub queue_cap: usize,
 }
 
 impl Default for BatchPolicy {
@@ -28,6 +32,7 @@ impl Default for BatchPolicy {
         BatchPolicy {
             batch_size: 8,
             max_wait: Duration::from_millis(1),
+            queue_cap: 0,
         }
     }
 }
@@ -78,17 +83,25 @@ impl Batcher {
         self.policy
     }
 
-    /// Enqueue one request (never blocks; the queue is unbounded and
-    /// backpressure is applied upstream by the workload driver). A request
-    /// racing [`Batcher::close`] is **rejected with a typed error**, never
-    /// a panic — shutdown is an ordinary event on a serving path and must
-    /// not kill the submitting thread.
-    pub fn submit(&self, req: Request) -> Result<()> {
+    /// Enqueue one request. Never blocks: a request racing
+    /// [`Batcher::close`] is rejected with [`SubmitError::Closed`] and a
+    /// submit finding the queue at `policy.queue_cap` (when bounded) gets
+    /// [`SubmitError::QueueFull`] — both typed, never a panic — shutdown
+    /// and overload are ordinary events on a serving path and must not
+    /// kill the submitting thread.
+    pub fn submit(&self, req: Request) -> std::result::Result<(), SubmitError> {
         let mut inner = self.inner.lock().unwrap();
         if inner.closed {
-            bail!("batcher closed: request {} rejected during shutdown", req.id);
+            return Err(SubmitError::Closed { request: req.id });
         }
-        let trace = crate::obs::trace::mint();
+        if self.policy.queue_cap > 0 && inner.queue.len() >= self.policy.queue_cap {
+            return Err(SubmitError::QueueFull {
+                shard: 0,
+                depth: inner.queue.len(),
+                cap: self.policy.queue_cap,
+            });
+        }
+        let trace = crate::obs::trace::mint_for_session(req.session);
         crate::obs::trace::instant(trace.id, "enqueue");
         inner.queue.push_back(Queued {
             req,
@@ -163,6 +176,7 @@ mod tests {
         let b = Batcher::new(BatchPolicy {
             batch_size: 4,
             max_wait: Duration::from_secs(10),
+            queue_cap: 0,
         });
         for i in 0..4 {
             b.submit(req(i)).unwrap();
@@ -179,6 +193,7 @@ mod tests {
         let b = Batcher::new(BatchPolicy {
             batch_size: 8,
             max_wait: Duration::from_millis(20),
+            queue_cap: 0,
         });
         b.submit(req(1)).unwrap();
         let t0 = Instant::now();
@@ -192,6 +207,7 @@ mod tests {
         let b = Batcher::new(BatchPolicy {
             batch_size: 4,
             max_wait: Duration::from_secs(10),
+            queue_cap: 0,
         });
         b.submit(req(1)).unwrap();
         b.submit(req(2)).unwrap();
@@ -199,6 +215,35 @@ mod tests {
         assert!(b.submit(req(3)).is_err(), "submit after close must be rejected");
         assert_eq!(b.next_batch().unwrap().len(), 2);
         assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn bounded_queue_rejects_overflow_without_losing_accepted() {
+        let b = Batcher::new(BatchPolicy {
+            batch_size: 8,
+            max_wait: Duration::from_secs(10),
+            queue_cap: 3,
+        });
+        for i in 0..3 {
+            b.submit(req(i)).unwrap();
+        }
+        let err = b.submit(req(3)).unwrap_err();
+        assert_eq!(
+            err,
+            SubmitError::QueueFull {
+                shard: 0,
+                depth: 3,
+                cap: 3
+            }
+        );
+        assert!(err.is_backpressure());
+        // The rejection left the accepted requests intact and FIFO.
+        b.close();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(
+            batch.iter().map(|q| q.req.id).collect::<Vec<_>>(),
+            [0, 1, 2]
+        );
     }
 
     #[test]
@@ -211,6 +256,7 @@ mod tests {
             let b = Arc::new(Batcher::new(BatchPolicy {
                 batch_size: 4,
                 max_wait: Duration::from_micros(200),
+                queue_cap: 0,
             }));
             let accepted = Arc::new(Mutex::new(Vec::<u64>::new()));
             let submitters: Vec<_> = (0..3u64)
@@ -257,6 +303,7 @@ mod tests {
         let b = Arc::new(Batcher::new(BatchPolicy {
             batch_size: 8,
             max_wait: Duration::from_millis(1),
+            queue_cap: 0,
         }));
         let n: u64 = 2000;
         let producer = {

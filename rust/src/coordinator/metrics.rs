@@ -34,9 +34,20 @@ struct Inner {
     budget_low: bool,
     last_budget_warning_level: u64,
     noise_budget_bits: f64,
+    /// Per-shard serving series (empty on single-executor paths).
+    shards: Vec<ShardStats>,
     e2e_latency: Option<LatencyHistogram>,
     exec_latency: Option<LatencyHistogram>,
     queue_wait: Option<LatencyHistogram>,
+}
+
+#[derive(Debug, Default, Clone)]
+struct ShardStats {
+    cap: u64,
+    depth: u64,
+    accepted: u64,
+    rejected: u64,
+    completed: u64,
 }
 
 /// Summary of one latency series (computed under the registry lock).
@@ -64,6 +75,25 @@ impl LatencySummary {
             },
         }
     }
+}
+
+/// Per-shard serving snapshot (one entry per worker pool).
+#[derive(Debug, Clone, Copy)]
+pub struct ShardSnapshot {
+    /// Shard index.
+    pub shard: usize,
+    /// Queue depth at the last observation.
+    pub queue_depth: u64,
+    /// Configured queue capacity.
+    pub queue_cap: u64,
+    /// Queue occupancy in [0, 1] (depth / cap; 0 when unbounded).
+    pub occupancy: f64,
+    /// Submissions accepted by this shard's queue.
+    pub accepted: u64,
+    /// Submissions rejected (queue-full / shedding / draining).
+    pub rejected: u64,
+    /// Batches delivered by this shard's worker (success or typed error).
+    pub completed_batches: u64,
 }
 
 /// A point-in-time snapshot of the registry.
@@ -97,6 +127,8 @@ pub struct MetricsSnapshot {
     pub noise_budget_bits: f64,
     /// Request-trace events currently buffered (see [`crate::obs::trace`]).
     pub trace_events: u64,
+    /// Per-shard serving series (empty on single-executor paths).
+    pub shards: Vec<ShardSnapshot>,
     /// End-to-end request latency (enqueue → response).
     pub e2e: LatencySummary,
     /// Executor (keystream+encrypt) latency per batch.
@@ -182,6 +214,58 @@ impl Metrics {
         self.lock().queue_depth = depth as u64;
     }
 
+    /// Declare the shard fleet: `n` shards, each with a bounded queue of
+    /// `cap`. Zeroes the per-shard series so every shard is visible in the
+    /// exposition from startup, not only after its first event.
+    pub fn init_shards(&self, n: usize, cap: usize) {
+        let mut m = self.lock();
+        m.shards = vec![
+            ShardStats {
+                cap: cap as u64,
+                ..ShardStats::default()
+            };
+            n
+        ];
+    }
+
+    fn shard_mut(m: &mut Inner, shard: usize) -> &mut ShardStats {
+        // Tolerate an unseen index (recorder racing `init_shards`): grow
+        // rather than drop the observation.
+        if shard >= m.shards.len() {
+            m.shards.resize(shard + 1, ShardStats::default());
+        }
+        &mut m.shards[shard]
+    }
+
+    /// Observe one shard's queue depth; the aggregate `queue_depth` gauge
+    /// becomes the sum across shards so existing dashboards keep working.
+    pub fn observe_shard_depth(&self, shard: usize, depth: usize) {
+        let mut m = self.lock();
+        Self::shard_mut(&mut m, shard).depth = depth as u64;
+        m.queue_depth = m.shards.iter().map(|s| s.depth).sum();
+    }
+
+    /// Count one accepted submission on `shard`.
+    pub fn record_shard_accepted(&self, shard: usize) {
+        let mut m = self.lock();
+        Self::shard_mut(&mut m, shard).accepted += 1;
+    }
+
+    /// Count one rejected submission on `shard` (queue-full, shedding, or
+    /// draining). Also bumps the aggregate `rejected` series — callers must
+    /// not additionally call [`record_rejected`](Metrics::record_rejected).
+    pub fn record_shard_rejected(&self, shard: usize) {
+        let mut m = self.lock();
+        Self::shard_mut(&mut m, shard).rejected += 1;
+        m.rejected += 1;
+    }
+
+    /// Count one batch delivered by `shard`'s worker.
+    pub fn record_shard_batch(&self, shard: usize) {
+        let mut m = self.lock();
+        Self::shard_mut(&mut m, shard).completed += 1;
+    }
+
     /// Set the noise-budget gauges: level remaining on the latest output
     /// ciphertext and the total chain length.
     pub fn set_level_budget(&self, output_level: usize, levels_total: usize) {
@@ -230,6 +314,24 @@ impl Metrics {
         let e2e = LatencySummary::of(m.e2e_latency.as_ref());
         let exec = LatencySummary::of(m.exec_latency.as_ref());
         let queue_wait = LatencySummary::of(m.queue_wait.as_ref());
+        let shards = m
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(k, s)| ShardSnapshot {
+                shard: k,
+                queue_depth: s.depth,
+                queue_cap: s.cap,
+                occupancy: if s.cap > 0 {
+                    s.depth as f64 / s.cap as f64
+                } else {
+                    0.0
+                },
+                accepted: s.accepted,
+                rejected: s.rejected,
+                completed_batches: s.completed,
+            })
+            .collect();
         MetricsSnapshot {
             requests: m.requests,
             rejected: m.rejected,
@@ -244,6 +346,7 @@ impl Metrics {
             last_budget_warning_level: m.last_budget_warning_level,
             noise_budget_bits: m.noise_budget_bits,
             trace_events: crate::obs::trace::event_count(),
+            shards,
             e2e,
             exec,
             queue_wait,
@@ -290,6 +393,18 @@ impl MetricsSnapshot {
         }
         if self.trace_events > 0 {
             s.push_str(&format!("\ntrace events    {}", self.trace_events));
+        }
+        for sh in &self.shards {
+            s.push_str(&format!(
+                "\nshard {}         depth {}/{} ({:.0}% full), {} accepted, {} rejected, {} batches",
+                sh.shard,
+                sh.queue_depth,
+                sh.queue_cap,
+                sh.occupancy * 100.0,
+                sh.accepted,
+                sh.rejected,
+                sh.completed_batches,
+            ));
         }
         s
     }
@@ -393,6 +508,63 @@ impl MetricsSnapshot {
             "Executor latency per batch.",
             &self.exec,
         );
+        // Per-shard labeled series. The unlabeled aggregates above stay in
+        // place for existing dashboards/jq queries; these add the per-shard
+        // breakdown under the same metric family names. (Emitted directly
+        // after every closure's last use — the closures hold a mutable
+        // borrow of `out`.)
+        if !self.shards.is_empty() {
+            out.push_str(
+                "# HELP presto_shard_queue_depth Queue depth per shard.\n\
+                 # TYPE presto_shard_queue_depth gauge\n",
+            );
+            for s in &self.shards {
+                out.push_str(&format!(
+                    "presto_queue_depth{{shard=\"{}\"}} {}\n",
+                    s.shard, s.queue_depth
+                ));
+            }
+            out.push_str(
+                "# HELP presto_shard_occupancy Queue occupancy (depth/capacity) per shard.\n\
+                 # TYPE presto_shard_occupancy gauge\n",
+            );
+            for s in &self.shards {
+                out.push_str(&format!(
+                    "presto_shard_occupancy{{shard=\"{}\"}} {}\n",
+                    s.shard, s.occupancy
+                ));
+            }
+            out.push_str(
+                "# HELP presto_shard_accepted_total Submissions accepted per shard.\n\
+                 # TYPE presto_shard_accepted_total counter\n",
+            );
+            for s in &self.shards {
+                out.push_str(&format!(
+                    "presto_shard_accepted_total{{shard=\"{}\"}} {}\n",
+                    s.shard, s.accepted
+                ));
+            }
+            out.push_str(
+                "# HELP presto_shard_rejected_total Submissions rejected per shard.\n\
+                 # TYPE presto_shard_rejected_total counter\n",
+            );
+            for s in &self.shards {
+                out.push_str(&format!(
+                    "presto_shard_rejected_total{{shard=\"{}\"}} {}\n",
+                    s.shard, s.rejected
+                ));
+            }
+            out.push_str(
+                "# HELP presto_shard_batches_total Batches delivered per shard.\n\
+                 # TYPE presto_shard_batches_total counter\n",
+            );
+            for s in &self.shards {
+                out.push_str(&format!(
+                    "presto_shard_batches_total{{shard=\"{}\"}} {}\n",
+                    s.shard, s.completed_batches
+                ));
+            }
+        }
         out
     }
 
@@ -426,6 +598,28 @@ impl MetricsSnapshot {
         );
         o.insert("noise_budget_bits".into(), num(self.noise_budget_bits));
         o.insert("trace_events".into(), num(self.trace_events as f64));
+        o.insert(
+            "shards".into(),
+            Json::Arr(
+                self.shards
+                    .iter()
+                    .map(|s| {
+                        let mut sh = BTreeMap::new();
+                        sh.insert("shard".into(), num(s.shard as f64));
+                        sh.insert("queue_depth".into(), num(s.queue_depth as f64));
+                        sh.insert("queue_cap".into(), num(s.queue_cap as f64));
+                        sh.insert("occupancy".into(), num(s.occupancy));
+                        sh.insert("accepted".into(), num(s.accepted as f64));
+                        sh.insert("rejected".into(), num(s.rejected as f64));
+                        sh.insert(
+                            "completed_batches".into(),
+                            num(s.completed_batches as f64),
+                        );
+                        Json::Obj(sh)
+                    })
+                    .collect(),
+            ),
+        );
         o.insert("e2e_latency".into(), latency(&self.e2e));
         o.insert("queue_wait".into(), latency(&self.queue_wait));
         o.insert("exec_latency".into(), latency(&self.exec));
@@ -553,6 +747,68 @@ mod tests {
         assert_eq!(back.get("requests").and_then(Json::as_u64), Some(1));
         assert_eq!(back.get("output_level").and_then(Json::as_u64), Some(3));
         assert!(back.get("e2e_latency").and_then(|j| j.get("mean_ns")).is_some());
+    }
+
+    #[test]
+    fn per_shard_series_accumulate_and_aggregate() {
+        let m = Metrics::new();
+        m.init_shards(2, 8);
+        m.record_shard_accepted(0);
+        m.record_shard_accepted(0);
+        m.record_shard_accepted(1);
+        m.record_shard_rejected(1);
+        m.record_shard_batch(0);
+        m.observe_shard_depth(0, 3);
+        m.observe_shard_depth(1, 5);
+        let s = m.snapshot();
+        assert_eq!(s.shards.len(), 2);
+        assert_eq!(s.shards[0].accepted, 2);
+        assert_eq!(s.shards[0].completed_batches, 1);
+        assert_eq!(s.shards[0].queue_depth, 3);
+        assert_eq!(s.shards[0].queue_cap, 8);
+        assert!((s.shards[0].occupancy - 3.0 / 8.0).abs() < 1e-12);
+        assert_eq!(s.shards[1].rejected, 1);
+        // Aggregates stay live: depth sums across shards, rejections flow
+        // into the global series the perf gate queries.
+        assert_eq!(s.queue_depth, 8);
+        assert_eq!(s.rejected, 1);
+        assert!(s.report(1.0).contains("shard 1"));
+    }
+
+    #[test]
+    fn prometheus_labels_per_shard_and_keeps_aggregates() {
+        let m = Metrics::new();
+        m.init_shards(2, 4);
+        m.record_shard_accepted(1);
+        m.observe_shard_depth(1, 2);
+        let text = m.snapshot().prometheus();
+        // Labeled per-shard series...
+        assert!(text.contains("presto_queue_depth{shard=\"0\"} 0"), "{text}");
+        assert!(text.contains("presto_queue_depth{shard=\"1\"} 2"), "{text}");
+        assert!(text.contains("presto_shard_occupancy{shard=\"1\"} 0.5"));
+        assert!(text.contains("presto_shard_accepted_total{shard=\"1\"} 1"));
+        assert!(text.contains("presto_shard_rejected_total{shard=\"0\"} 0"));
+        assert!(text.contains("presto_shard_batches_total{shard=\"1\"} 0"));
+        // ...and the unlabeled aggregate gauge survives for old queries.
+        assert!(text.contains("\npresto_queue_depth 2\n"), "{text}");
+    }
+
+    #[test]
+    fn shard_series_flow_to_json() {
+        let m = Metrics::new();
+        m.init_shards(1, 4);
+        m.record_shard_accepted(0);
+        m.record_shard_batch(0);
+        let j = m.snapshot().to_json().to_string();
+        let back = Json::parse(&j).unwrap();
+        let shards = back.get("shards").and_then(Json::as_arr).unwrap();
+        assert_eq!(shards.len(), 1);
+        assert_eq!(shards[0].get("accepted").and_then(Json::as_u64), Some(1));
+        assert_eq!(
+            shards[0].get("completed_batches").and_then(Json::as_u64),
+            Some(1)
+        );
+        assert_eq!(shards[0].get("queue_cap").and_then(Json::as_u64), Some(4));
     }
 
     #[test]

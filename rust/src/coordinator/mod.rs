@@ -17,17 +17,32 @@
 //!   ([`server::TranscipherService`]): client symmetric ciphertexts in,
 //!   RNS-CKKS ciphertexts out, slot-batched up to N/2 blocks per
 //!   homomorphic evaluation.
-//! * [`metrics`] — counters and latency histograms.
+//! * [`metrics`] — counters and latency histograms, now with per-shard
+//!   queue-depth/occupancy/rejection series.
+//! * [`session`] + [`shard`] — the streaming serving stack: per-user
+//!   [`session::TranscipherSession`]s (nonce + resumable counter state,
+//!   streaming `push_blocks` → incremental ciphertext batches) opened from
+//!   a [`session::SessionManager`] that pins them by hash onto K
+//!   independent CKKS worker pools with bounded queues, typed
+//!   backpressure ([`shard::SubmitError`]), load-shedding watermarks, and
+//!   drain-then-stop graceful shutdown.
 
 pub mod batcher;
 pub mod metrics;
 pub mod rngpool;
 pub mod server;
+pub mod session;
+pub mod shard;
 
 pub use batcher::{BatchPolicy, Batcher, Queued};
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use metrics::{Metrics, MetricsSnapshot, ShardSnapshot};
 pub use rngpool::{RandomnessBundle, RngPool};
 pub use server::{
     EncryptServer, Engine, Response, ServerConfig, TranscipherBlock, TranscipherConfig,
     TranscipherConfigBuilder, TranscipherService,
 };
+pub use session::{
+    CompletedBatch, SessionConfig, SessionConfigBuilder, SessionManager, Ticket,
+    TranscipherSession,
+};
+pub use shard::{Shard, SubmitError};

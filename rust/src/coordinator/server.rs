@@ -16,11 +16,11 @@ use crate::arith::Elem;
 use crate::bail;
 use crate::cipher::{build_cipher, SecretKey, StreamCipher};
 use crate::he::ckks::{Ciphertext as CkksCiphertext, CkksContext};
-use crate::he::transcipher::{CkksCipherProfile, CkksTranscipher};
+use crate::he::transcipher::{CkksCipherProfile, CkksTranscipher, StreamCursor};
 use crate::params::{CkksParams, ParamSet};
 use crate::rtf::RtfCodec;
 use crate::runtime::{KeystreamExecutable, Runtime};
-use crate::util::error::{Context, Result};
+use crate::util::error::{Context, Error, Result};
 use crate::util::rng::SplitMix64;
 use crate::workload::Request;
 use crate::xof::XofKind;
@@ -223,7 +223,7 @@ impl EncryptServer {
         if let Err(e) = self.batcher.submit(req) {
             self.pending.lock().unwrap().remove(&id);
             self.metrics.record_rejected();
-            return Err(e.wrap("submit rejected"));
+            return Err(Error::from(e).wrap("submit rejected"));
         }
         Ok(rx)
     }
@@ -535,7 +535,7 @@ pub struct TranscipherService {
     server: CkksTranscipher,
     sym_key: Vec<f64>,
     metrics: Arc<Metrics>,
-    next_counter: u64,
+    cursor: StreamCursor,
 }
 
 impl TranscipherService {
@@ -561,13 +561,14 @@ impl TranscipherService {
             .context("TranscipherService::start")?;
         let metrics = Arc::new(Metrics::new());
         metrics.set_key_bytes(ctx.switch_key_bytes());
+        let cursor = StreamCursor::new(cfg.nonce);
         Ok(TranscipherService {
             cfg,
             ctx,
             server,
             sym_key,
             metrics,
-            next_counter: 0,
+            cursor,
         })
     }
 
@@ -611,8 +612,7 @@ impl TranscipherService {
             .iter()
             .map(|m| {
                 assert!(m.len() <= l, "block longer than keystream length l = {l}");
-                let counter = self.next_counter;
-                self.next_counter += 1;
+                let counter = self.cursor.take(1).start;
                 let mut padded = m.clone();
                 padded.resize(l, 0.0);
                 TranscipherBlock {
@@ -626,6 +626,18 @@ impl TranscipherService {
                 }
             })
             .collect()
+    }
+
+    /// The service's stream position (next unused counter) — persist and
+    /// restore via [`resume_at`](TranscipherService::resume_at) to continue
+    /// a client stream across restarts without counter reuse.
+    pub fn stream_position(&self) -> u64 {
+        self.cursor.position()
+    }
+
+    /// Resume the client-side stream at a saved position.
+    pub fn resume_at(&mut self, next_counter: u64) {
+        self.cursor = StreamCursor::resume(self.cfg.nonce, next_counter);
     }
 
     /// Server half: transcipher one batch of symmetric ciphertexts into
@@ -659,45 +671,14 @@ impl TranscipherService {
         let counters: Vec<u64> = blocks.iter().map(|b| b.counter).collect();
         let sym: Vec<Vec<f64>> = blocks.iter().map(|b| b.data.clone()).collect();
         crate::obs::trace::record(tr.id, "batch_assemble", t0, t0.elapsed().as_nanos());
-        let t_exec = Instant::now();
-        let out = {
-            let _req = crate::obs::trace::enter(tr.id);
-            self.server
-                .transcipher(&self.ctx, self.cfg.nonce, &counters, &sym)?
+        let exec = BatchExec {
+            ctx: &self.ctx,
+            engine: &self.server,
+            metrics: &self.metrics,
+            levels_total: self.cfg.ckks.levels,
+            nonce: self.cfg.nonce,
         };
-        crate::obs::trace::record(tr.id, "execute", t_exec, t_exec.elapsed().as_nanos());
-        let dt = t0.elapsed().as_nanos() as u64;
-        let t_post = Instant::now();
-        // Noise-budget telemetry: gauge the level and analytic budget bits
-        // remaining on the output, and emit one structured warning event —
-        // rate-limited to the high→low crossing, not every batch — when the
-        // chain is nearly spent; a downstream consumer expecting even one
-        // more multiplication will fail.
-        let remaining = out[0].level();
-        let min_budget = out
-            .iter()
-            .map(|c| c.budget_bits())
-            .fold(f64::INFINITY, f64::min);
-        self.metrics.set_noise_budget_bits(min_budget);
-        if self.metrics.record_budget_event(remaining, self.cfg.ckks.levels) {
-            eprintln!(
-                "{{\"event\":\"noise_budget_low\",\"remaining_levels\":{remaining},\
-                 \"levels_total\":{},\"min_budget_bits\":{min_budget:.1},\
-                 \"scheme\":\"{:?}\",\"rounds\":{}}}",
-                self.cfg.ckks.levels, self.cfg.profile.scheme, self.cfg.profile.rounds,
-            );
-        }
-        for _ in blocks {
-            self.metrics.record_request(dt);
-        }
-        crate::obs::trace::record(tr.id, "post_process", t_post, t_post.elapsed().as_nanos());
-        self.metrics.record_batch(
-            blocks.len(),
-            self.batch_capacity(),
-            (self.cfg.profile.l * blocks.len()) as u64,
-            dt,
-        );
-        Ok(out)
+        execute_transcipher_batch(&exec, tr.id, t0, &counters, &sym)
     }
 
     /// Transcipher a batch and apply a cross-block slot linear layer
@@ -727,6 +708,77 @@ impl TranscipherService {
     }
 }
 
+/// Everything a worker needs to execute one transcipher batch: the CKKS
+/// context, the encrypted-key engine, and the metrics sink. Shared between
+/// [`TranscipherService::transcipher`] (the single-context path) and the
+/// sharded workers in [`super::shard`], so both report identical trace
+/// stages, latency series, and noise-budget telemetry.
+pub(crate) struct BatchExec<'a> {
+    /// The executing CKKS context.
+    pub ctx: &'a CkksContext,
+    /// The encrypted-key transcipher engine bound to `ctx`.
+    pub engine: &'a CkksTranscipher,
+    /// Metrics sink (requests, batches, noise telemetry).
+    pub metrics: &'a Metrics,
+    /// Total levels in the modulus chain (budget-warning denominator).
+    pub levels_total: usize,
+    /// Stream nonce for this batch's keystream.
+    pub nonce: u64,
+}
+
+/// Execute one assembled transcipher batch: homomorphic evaluation under
+/// the request's trace scope, execute/post_process trace records, noise
+/// budget telemetry with the crossing-rate-limited structured warning, and
+/// the per-request/per-batch latency series. `enqueued_at` anchors the
+/// end-to-end clock so queue wait is included on queued paths.
+pub(crate) fn execute_transcipher_batch(
+    ex: &BatchExec<'_>,
+    trace_id: u64,
+    enqueued_at: Instant,
+    counters: &[u64],
+    sym: &[Vec<f64>],
+) -> Result<Vec<CkksCiphertext>> {
+    let t_exec = Instant::now();
+    let out = {
+        let _req = crate::obs::trace::enter(trace_id);
+        ex.engine.transcipher(ex.ctx, ex.nonce, counters, sym)?
+    };
+    crate::obs::trace::record(trace_id, "execute", t_exec, t_exec.elapsed().as_nanos());
+    let dt = enqueued_at.elapsed().as_nanos() as u64;
+    let t_post = Instant::now();
+    // Noise-budget telemetry: gauge the level and analytic budget bits
+    // remaining on the output, and emit one structured warning event —
+    // rate-limited to the high→low crossing, not every batch — when the
+    // chain is nearly spent; a downstream consumer expecting even one
+    // more multiplication will fail.
+    let remaining = out[0].level();
+    let min_budget = out
+        .iter()
+        .map(|c| c.budget_bits())
+        .fold(f64::INFINITY, f64::min);
+    ex.metrics.set_noise_budget_bits(min_budget);
+    if ex.metrics.record_budget_event(remaining, ex.levels_total) {
+        let profile = ex.engine.profile();
+        eprintln!(
+            "{{\"event\":\"noise_budget_low\",\"remaining_levels\":{remaining},\
+             \"levels_total\":{},\"min_budget_bits\":{min_budget:.1},\
+             \"scheme\":\"{:?}\",\"rounds\":{}}}",
+            ex.levels_total, profile.scheme, profile.rounds,
+        );
+    }
+    for _ in sym {
+        ex.metrics.record_request(dt);
+    }
+    crate::obs::trace::record(trace_id, "post_process", t_post, t_post.elapsed().as_nanos());
+    ex.metrics.record_batch(
+        sym.len(),
+        ex.ctx.slots(),
+        (ex.engine.profile().l * sym.len()) as u64,
+        dt,
+    );
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -741,6 +793,7 @@ mod tests {
             policy: BatchPolicy {
                 batch_size: 4,
                 max_wait: std::time::Duration::from_millis(1),
+                queue_cap: 0,
             },
             ..ServerConfig::default()
         };
@@ -845,6 +898,7 @@ mod tests {
             policy: BatchPolicy {
                 batch_size: 4,
                 max_wait: std::time::Duration::from_millis(50),
+                queue_cap: 0,
             },
             ..ServerConfig::default()
         };

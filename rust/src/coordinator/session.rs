@@ -1,0 +1,664 @@
+//! Session layer of the streaming serving stack: per-user
+//! [`TranscipherSession`]s opened from a [`SessionManager`], streaming
+//! symmetric blocks in and receiving CKKS ciphertext batches out
+//! incrementally as shards complete them.
+//!
+//! The API shape follows the `EncryptionSession`/`encrypt_stream` pattern:
+//! a session is cheap, holds the client-side stream state (nonce +
+//! resumable counter cursor), and pushes work without blocking —
+//! backpressure comes back as a typed [`SubmitError`], completed batches
+//! arrive on the session's private channel via [`TranscipherSession::try_next`]
+//! / [`wait_next`](TranscipherSession::wait_next).
+//!
+//! Sessions are pinned to shards by hashing the session id, so one
+//! session's stream stays FIFO on one worker while different sessions
+//! spread across the fleet. Every shard derives identical key material
+//! from the manager seed, which makes outputs bit-identical regardless of
+//! shard count — the property the serving tests pin.
+
+use super::metrics::Metrics;
+use super::shard::{Job, Shard, ShardQueue, SubmitError};
+use crate::bail;
+use crate::he::ckks::{Ciphertext as CkksCiphertext, CkksContext};
+use crate::he::transcipher::{CkksCipherProfile, StreamCursor};
+use crate::params::CkksParams;
+use crate::util::error::Result;
+use crate::util::rng::SplitMix64;
+use std::collections::HashSet;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Handle for one accepted batch submission, unique within its session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Ticket(pub u64);
+
+/// One completed streaming batch: the CKKS ciphertexts for the blocks
+/// accepted under `ticket` (output i holds message element i of every
+/// block, one block per slot).
+#[derive(Debug, Clone)]
+pub struct CompletedBatch {
+    /// The ticket returned by the accepting `push_blocks`.
+    pub ticket: Ticket,
+    /// Owning session id.
+    pub session: u64,
+    /// Stream counters consumed by this batch (one per block).
+    pub counters: Vec<u64>,
+    /// Transciphered outputs (l ciphertexts, slot b = block b).
+    pub ciphertexts: Vec<CkksCiphertext>,
+}
+
+/// Configuration for the sharded streaming stack.
+#[derive(Debug, Clone)]
+pub struct SessionConfig {
+    /// Cipher profile (HERA or Rubato shape).
+    pub profile: CkksCipherProfile,
+    /// CKKS parameters; `ckks.levels` must cover
+    /// `profile.required_levels() + output_level`.
+    pub ckks: CkksParams,
+    /// Deterministic seed for all key material (symmetric key, CKKS keys,
+    /// key-upload randomness). Same seed ⇒ bit-identical outputs at any
+    /// shard count.
+    pub seed: u64,
+    /// Number of independent CKKS worker pools.
+    pub shards: usize,
+    /// Bounded queue capacity per shard.
+    pub queue_cap: usize,
+    /// Load-shedding watermark per shard (0 disables shedding; must be
+    /// below `queue_cap`). Submits are rejected once depth reaches the
+    /// watermark and recover only after draining to half of it.
+    pub shed_watermark: usize,
+    /// CKKS levels to leave on every output ciphertext (0 = the classic
+    /// fully-consumed output; k > 0 provisions k extra chain levels so
+    /// consumers can run k more multiplicative stages).
+    pub output_level: usize,
+    /// Nonce base: session `id` streams under nonce `nonce_base + id`, so
+    /// distinct sessions never share a keystream.
+    pub nonce_base: u64,
+}
+
+impl SessionConfig {
+    /// Validating builder with the smallest workable defaults (ring 64,
+    /// one shard, queue capacity 16).
+    pub fn builder(profile: CkksCipherProfile) -> SessionConfigBuilder {
+        SessionConfigBuilder {
+            profile,
+            ckks: None,
+            seed: 2026,
+            shards: 1,
+            queue_cap: 16,
+            shed_watermark: None,
+            output_level: 0,
+            nonce_base: 1000,
+            threads: None,
+        }
+    }
+}
+
+/// Fluent, validating constructor for [`SessionConfig`].
+#[derive(Debug, Clone)]
+pub struct SessionConfigBuilder {
+    profile: CkksCipherProfile,
+    ckks: Option<CkksParams>,
+    seed: u64,
+    shards: usize,
+    queue_cap: usize,
+    shed_watermark: Option<usize>,
+    output_level: usize,
+    nonce_base: u64,
+    threads: Option<usize>,
+}
+
+impl SessionConfigBuilder {
+    /// Explicit CKKS parameters (otherwise the smallest chain covering the
+    /// profile plus `output_level` is derived at `build`).
+    pub fn ckks(mut self, params: CkksParams) -> Self {
+        self.ckks = Some(params);
+        self
+    }
+
+    /// Deterministic seed for key material.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Shard count (independent CKKS worker pools).
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.shards = shards;
+        self
+    }
+
+    /// Per-shard bounded queue capacity.
+    pub fn queue_cap(mut self, cap: usize) -> Self {
+        self.queue_cap = cap;
+        self
+    }
+
+    /// Load-shedding watermark (0 disables; default `queue_cap * 3 / 4`).
+    pub fn shed_watermark(mut self, watermark: usize) -> Self {
+        self.shed_watermark = Some(watermark);
+        self
+    }
+
+    /// Levels to keep on output ciphertexts for post-processing.
+    pub fn output_level(mut self, level: usize) -> Self {
+        self.output_level = level;
+        self
+    }
+
+    /// Nonce base for per-session stream nonces.
+    pub fn nonce_base(mut self, base: u64) -> Self {
+        self.nonce_base = base;
+        self
+    }
+
+    /// Worker-thread knob for each shard's CKKS hot path (0 = all cores).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads);
+        self
+    }
+
+    /// Validate and produce the configuration.
+    pub fn build(self) -> Result<SessionConfig> {
+        if self.shards == 0 {
+            bail!("need at least one shard");
+        }
+        if self.queue_cap == 0 {
+            bail!("queue capacity must be at least 1");
+        }
+        let need = self.profile.required_levels() + self.output_level;
+        let mut ckks = self
+            .ckks
+            .unwrap_or_else(|| CkksParams::with_shape(64, need));
+        if let Some(t) = self.threads {
+            ckks.threads = t;
+        }
+        if ckks.levels < need {
+            bail!(
+                "CKKS chain has {} levels but the {:?} profile with output_level {} needs {need}",
+                ckks.levels,
+                self.profile.scheme,
+                self.output_level
+            );
+        }
+        let shed_watermark = self
+            .shed_watermark
+            .unwrap_or_else(|| self.queue_cap * 3 / 4);
+        if shed_watermark >= self.queue_cap {
+            bail!(
+                "shedding watermark {shed_watermark} must be below queue capacity {}",
+                self.queue_cap
+            );
+        }
+        ckks.validate()
+            .map_err(|e| e.wrap("SessionConfig::builder"))?;
+        Ok(SessionConfig {
+            profile: self.profile,
+            ckks,
+            seed: self.seed,
+            shards: self.shards,
+            queue_cap: self.queue_cap,
+            shed_watermark,
+            output_level: self.output_level,
+            nonce_base: self.nonce_base,
+        })
+    }
+}
+
+/// Owns the shard fleet and opens sessions. Dropping the manager drains
+/// every shard (accepted batches still complete and are delivered to any
+/// live session receivers).
+pub struct SessionManager {
+    cfg: SessionConfig,
+    shards: Vec<Shard>,
+    sym_key: Arc<Vec<f64>>,
+    metrics: Arc<Metrics>,
+    /// Session ids currently open — duplicate ids are rejected because a
+    /// reused id would reuse the session nonce (keystream reuse).
+    open: Arc<Mutex<HashSet<u64>>>,
+}
+
+impl SessionManager {
+    /// Build every shard's CKKS context + encrypted-key engine (identical
+    /// key material per shard, derived from `cfg.seed`) and start the
+    /// worker fleet.
+    pub fn start(cfg: SessionConfig) -> Result<SessionManager> {
+        let need = cfg.profile.required_levels() + cfg.output_level;
+        if cfg.shards == 0 {
+            bail!("need at least one shard");
+        }
+        if cfg.queue_cap == 0 {
+            bail!("queue capacity must be at least 1");
+        }
+        if cfg.shed_watermark >= cfg.queue_cap {
+            bail!(
+                "shedding watermark {} must be below queue capacity {}",
+                cfg.shed_watermark,
+                cfg.queue_cap
+            );
+        }
+        if cfg.ckks.levels < need {
+            bail!(
+                "CKKS chain has {} levels but the {:?} profile with output_level {} needs {need}",
+                cfg.ckks.levels,
+                cfg.profile.scheme,
+                cfg.output_level
+            );
+        }
+        let metrics = Arc::new(Metrics::new());
+        metrics.init_shards(cfg.shards, cfg.queue_cap);
+        let sym_key = Arc::new(cfg.profile.sample_key(cfg.seed ^ 0x5359_4D4B)); // "SYMK"
+        let mut shards = Vec::with_capacity(cfg.shards);
+        for k in 0..cfg.shards {
+            shards.push(Shard::start(
+                k,
+                cfg.profile.clone(),
+                cfg.ckks,
+                cfg.seed,
+                &sym_key,
+                cfg.queue_cap,
+                cfg.shed_watermark,
+                Arc::clone(&metrics),
+            )?);
+        }
+        let key_bytes: u64 = shards.iter().map(|s| s.context().switch_key_bytes()).sum();
+        metrics.set_key_bytes(key_bytes);
+        Ok(SessionManager {
+            cfg,
+            shards,
+            sym_key,
+            metrics,
+            open: Arc::new(Mutex::new(HashSet::new())),
+        })
+    }
+
+    /// Deterministic session → shard pinning (SplitMix64 finalizer as the
+    /// hash, so pinning is stable across runs and platforms).
+    pub fn shard_of(&self, session_id: u64) -> usize {
+        (SplitMix64::new(session_id).next_u64() % self.cfg.shards as u64) as usize
+    }
+
+    /// Open a fresh session (stream counter starts at 0). A duplicate id
+    /// for a still-open session is rejected: it would reuse the session
+    /// nonce and therefore the keystream.
+    pub fn open_session(&self, id: u64) -> Result<TranscipherSession> {
+        self.session_at(id, 0)
+    }
+
+    /// Reopen a session at a saved stream position (e.g. after a client
+    /// reconnect), continuing the keystream at `next_counter` without
+    /// reusing any earlier counter.
+    pub fn resume_session(&self, id: u64, next_counter: u64) -> Result<TranscipherSession> {
+        self.session_at(id, next_counter)
+    }
+
+    fn session_at(&self, id: u64, next_counter: u64) -> Result<TranscipherSession> {
+        {
+            let mut open = self.open.lock().unwrap_or_else(|p| p.into_inner());
+            if !open.insert(id) {
+                bail!("session {id} is already open (nonce reuse refused)");
+            }
+        }
+        let shard = self.shard_of(id);
+        let (tx, rx) = channel();
+        Ok(TranscipherSession {
+            id,
+            shard,
+            capacity: self.batch_capacity(),
+            profile: self.cfg.profile.clone(),
+            sym_key: Arc::clone(&self.sym_key),
+            cursor: StreamCursor::resume(self.cfg.nonce_base.wrapping_add(id), next_counter),
+            queue: Arc::clone(self.shards[shard].queue()),
+            tx,
+            rx,
+            next_ticket: 0,
+            in_flight: 0,
+            open: Arc::clone(&self.open),
+            metrics: Arc::clone(&self.metrics),
+        })
+    }
+
+    /// The configuration in force.
+    pub fn config(&self) -> &SessionConfig {
+        &self.cfg
+    }
+
+    /// Serving metrics (shared by every shard).
+    pub fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// Shard count.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Maximum blocks per pushed batch (the slot count).
+    pub fn batch_capacity(&self) -> usize {
+        self.shards[0].context().slots()
+    }
+
+    /// The CKKS context (shard 0's — all shards hold bit-identical key
+    /// material, so this is *the* decryption context for tests/examples).
+    pub fn context(&self) -> &Arc<CkksContext> {
+        self.shards[0].context()
+    }
+
+    /// Current queue depth of shard `k` (for load balancers / tests).
+    pub fn shard_depth(&self, k: usize) -> usize {
+        self.shards[k].depth()
+    }
+
+    /// Graceful drain-then-stop: stop intake on every shard (subsequent
+    /// pushes get [`SubmitError::Draining`]), then join workers after they
+    /// deliver every accepted batch.
+    pub fn shutdown(mut self) {
+        for s in &self.shards {
+            s.drain();
+        }
+        for s in &mut self.shards {
+            s.join();
+        }
+    }
+}
+
+/// One client's streaming handle: push symmetric blocks, receive completed
+/// CKKS ciphertext batches incrementally on the session's private channel.
+pub struct TranscipherSession {
+    id: u64,
+    shard: usize,
+    capacity: usize,
+    profile: CkksCipherProfile,
+    sym_key: Arc<Vec<f64>>,
+    cursor: StreamCursor,
+    queue: Arc<ShardQueue>,
+    tx: Sender<Result<CompletedBatch>>,
+    rx: Receiver<Result<CompletedBatch>>,
+    next_ticket: u64,
+    in_flight: usize,
+    open: Arc<Mutex<HashSet<u64>>>,
+    metrics: Arc<Metrics>,
+}
+
+impl TranscipherSession {
+    /// Session id.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// The shard this session is pinned to.
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// The session's stream nonce.
+    pub fn nonce(&self) -> u64 {
+        self.cursor.nonce()
+    }
+
+    /// The next unused stream counter (persist this to `resume_session`
+    /// after a reconnect).
+    pub fn position(&self) -> u64 {
+        self.cursor.position()
+    }
+
+    /// Batches accepted but not yet received by this session.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    /// Maximum blocks per push (the slot count).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Symmetric-encrypt `blocks` (each of length ≤ l, zero-padded) with
+    /// the session keystream and submit them to the session's shard.
+    /// Never blocks: a full or shedding queue returns the typed
+    /// backpressure error *without consuming stream counters*, so a
+    /// retried push reuses the same counters and no keystream is wasted.
+    pub fn push_blocks(&mut self, blocks: &[Vec<f64>]) -> std::result::Result<Ticket, SubmitError> {
+        if blocks.is_empty() {
+            return Err(SubmitError::Invalid("empty batch".into()));
+        }
+        if blocks.len() > self.capacity {
+            return Err(SubmitError::Invalid(format!(
+                "batch of {} blocks exceeds slot capacity {}",
+                blocks.len(),
+                self.capacity
+            )));
+        }
+        let l = self.profile.l;
+        if let Some(bad) = blocks.iter().find(|b| b.len() > l) {
+            return Err(SubmitError::Invalid(format!(
+                "block of {} values exceeds keystream length l = {l}",
+                bad.len()
+            )));
+        }
+        // Peek the counter range without advancing: counters are burned
+        // only once the shard accepts the batch.
+        let start = self.cursor.position();
+        let n = blocks.len() as u64;
+        if start.checked_add(n).is_none() {
+            return Err(SubmitError::Invalid("stream counter exhausted".into()));
+        }
+        let nonce = self.cursor.nonce();
+        let counters: Vec<u64> = (start..start + n).collect();
+        let sym: Vec<Vec<f64>> = blocks
+            .iter()
+            .zip(&counters)
+            .map(|(m, &counter)| {
+                let mut padded = m.clone();
+                padded.resize(l, 0.0);
+                self.profile
+                    .encrypt_block(&self.sym_key, nonce, counter, &padded)
+            })
+            .collect();
+        let tr = crate::obs::trace::mint_for_session(self.id);
+        crate::obs::trace::instant(tr.id, "enqueue");
+        let ticket = self.next_ticket;
+        let job = Job {
+            ticket,
+            session: self.id,
+            nonce,
+            counters,
+            sym,
+            reply: self.tx.clone(),
+            trace: tr.id,
+            enqueued_at: Instant::now(),
+        };
+        match self.queue.push(job) {
+            Ok(()) => {
+                self.cursor.advance(n);
+                self.next_ticket += 1;
+                self.in_flight += 1;
+                self.metrics.record_shard_accepted(self.shard);
+                self.metrics.observe_shard_depth(self.shard, self.queue.depth());
+                Ok(Ticket(ticket))
+            }
+            Err(e) => {
+                self.metrics.record_shard_rejected(self.shard);
+                Err(e)
+            }
+        }
+    }
+
+    /// Non-blocking poll for the next completed batch (FIFO per session).
+    /// `None` means nothing has completed yet; `Some(Err(..))` delivers a
+    /// shard-side execution failure for an accepted batch.
+    pub fn try_next(&mut self) -> Option<Result<CompletedBatch>> {
+        match self.rx.try_recv() {
+            Ok(r) => {
+                self.in_flight = self.in_flight.saturating_sub(1);
+                Some(r)
+            }
+            Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => None,
+        }
+    }
+
+    /// Block up to `timeout` for the next completed batch.
+    pub fn wait_next(&mut self, timeout: Duration) -> Result<CompletedBatch> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => {
+                self.in_flight = self.in_flight.saturating_sub(1);
+                r
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                bail!(
+                    "session {}: no batch completed within {timeout:?} ({} in flight)",
+                    self.id,
+                    self.in_flight
+                )
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                bail!(
+                    "session {}: serving stack shut down with {} batches in flight",
+                    self.id,
+                    self.in_flight
+                )
+            }
+        }
+    }
+
+    /// Drain every completed batch currently available without blocking.
+    pub fn drain_completed(&mut self) -> Vec<Result<CompletedBatch>> {
+        let mut out = Vec::new();
+        while let Some(r) = self.try_next() {
+            out.push(r);
+        }
+        out
+    }
+}
+
+impl Drop for TranscipherSession {
+    fn drop(&mut self) {
+        self.open
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .remove(&self.id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_builder() -> SessionConfigBuilder {
+        SessionConfig::builder(CkksCipherProfile::rubato_toy())
+    }
+
+    #[test]
+    fn builder_defaults_cover_profile_and_output_level() {
+        let cfg = toy_builder().output_level(2).build().unwrap();
+        assert_eq!(
+            cfg.ckks.levels,
+            cfg.profile.required_levels() + 2,
+            "derived chain must fund the output level"
+        );
+        assert_eq!(cfg.shards, 1);
+        assert_eq!(cfg.queue_cap, 16);
+        assert_eq!(cfg.shed_watermark, 12); // 3/4 of the cap
+    }
+
+    #[test]
+    fn builder_rejects_bad_shapes() {
+        assert!(toy_builder().shards(0).build().is_err());
+        assert!(toy_builder().queue_cap(0).build().is_err());
+        // Watermark at/above capacity is a misconfiguration.
+        let err = toy_builder()
+            .queue_cap(4)
+            .shed_watermark(4)
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("watermark"), "{err}");
+        // Explicit params too shallow for the requested output level.
+        let profile = CkksCipherProfile::rubato_toy();
+        let levels = profile.required_levels();
+        let err = SessionConfig::builder(profile)
+            .ckks(CkksParams::with_shape(32, levels))
+            .output_level(1)
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("output_level 1"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_session_id_is_refused_until_dropped() {
+        let profile = CkksCipherProfile::rubato_toy();
+        let cfg = SessionConfig::builder(profile.clone())
+            .ckks(CkksParams::with_shape(32, profile.required_levels()))
+            .queue_cap(4)
+            .shed_watermark(0)
+            .seed(9)
+            .build()
+            .unwrap();
+        let mgr = SessionManager::start(cfg).unwrap();
+        let s1 = mgr.open_session(7).unwrap();
+        let err = mgr.open_session(7).unwrap_err();
+        assert!(err.to_string().contains("already open"), "{err}");
+        drop(s1);
+        // The id is free again once the session is gone.
+        let s2 = mgr.resume_session(7, 42).unwrap();
+        assert_eq!(s2.position(), 42);
+        assert_eq!(s2.nonce(), mgr.config().nonce_base.wrapping_add(7));
+        drop(s2);
+        mgr.shutdown();
+    }
+
+    #[test]
+    fn shard_pinning_is_deterministic_and_in_range() {
+        let profile = CkksCipherProfile::rubato_toy();
+        let cfg = SessionConfig::builder(profile.clone())
+            .ckks(CkksParams::with_shape(32, profile.required_levels()))
+            .shards(3)
+            .queue_cap(2)
+            .shed_watermark(0)
+            .seed(10)
+            .build()
+            .unwrap();
+        let mgr = SessionManager::start(cfg).unwrap();
+        for id in 0..32 {
+            let k = mgr.shard_of(id);
+            assert!(k < 3);
+            assert_eq!(k, mgr.shard_of(id), "pinning must be stable");
+        }
+        // The SplitMix64 finalizer spreads consecutive ids across shards.
+        let hit: HashSet<usize> = (0..32).map(|id| mgr.shard_of(id)).collect();
+        assert!(hit.len() > 1, "32 sessions all landed on one of 3 shards");
+        mgr.shutdown();
+    }
+
+    #[test]
+    fn push_validates_before_touching_counters() {
+        let profile = CkksCipherProfile::rubato_toy();
+        let cfg = SessionConfig::builder(profile.clone())
+            .ckks(CkksParams::with_shape(32, profile.required_levels()))
+            .queue_cap(4)
+            .shed_watermark(0)
+            .seed(11)
+            .build()
+            .unwrap();
+        let mgr = SessionManager::start(cfg).unwrap();
+        let mut s = mgr.open_session(1).unwrap();
+        let l = mgr.config().profile.l;
+        assert!(matches!(
+            s.push_blocks(&[]),
+            Err(SubmitError::Invalid(_))
+        ));
+        let oversized = vec![vec![0.0; l + 1]];
+        assert!(matches!(
+            s.push_blocks(&oversized),
+            Err(SubmitError::Invalid(_))
+        ));
+        let too_many = vec![vec![0.0; l]; s.capacity() + 1];
+        assert!(matches!(
+            s.push_blocks(&too_many),
+            Err(SubmitError::Invalid(_))
+        ));
+        // No counter was consumed by any rejected push.
+        assert_eq!(s.position(), 0);
+        drop(s);
+        mgr.shutdown();
+    }
+}

@@ -1,0 +1,489 @@
+//! Sharded execution layer of the streaming serving stack: K independent
+//! CKKS worker pools, each owning one context + encrypted-key engine and a
+//! bounded job queue with explicit backpressure.
+//!
+//! Replaces the single executor thread for transcipher serving. Every
+//! shard builds its own [`CkksContext`] (once, at startup) from the *same*
+//! seed, so the encrypted symmetric key — and therefore every transcipher
+//! output — is bit-identical no matter which shard executes a batch;
+//! sessions are pinned to shards by hashing the session id (see
+//! [`super::session::SessionManager::shard_of`]) for key/nonce locality.
+//!
+//! Backpressure is explicit and typed: [`ShardQueue::push`] never blocks.
+//! A full queue rejects with [`SubmitError::QueueFull`]; a load-shedding
+//! watermark rejects with [`SubmitError::Shedding`] *before* the hard cap
+//! is hit and recovers hysteretically (the queue must drain to half the
+//! watermark before submits are accepted again, so a saturated shard sheds
+//! in bursts instead of oscillating every request). Graceful shutdown is
+//! drain-then-stop: [`ShardQueue::drain`] stops intake (submits get
+//! [`SubmitError::Draining`]) while the worker keeps executing until every
+//! accepted job has been delivered — accepted batches are never dropped.
+
+use super::metrics::Metrics;
+use super::server::{execute_transcipher_batch, BatchExec};
+use super::session::{CompletedBatch, Ticket};
+use crate::he::ckks::CkksContext;
+use crate::he::transcipher::{CkksCipherProfile, CkksTranscipher};
+use crate::params::CkksParams;
+use crate::util::error::{Context, Error, Result};
+use crate::util::rng::SplitMix64;
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// Typed submission error for the bounded serving queues. `submit` never
+/// blocks: callers get one of these instead and decide whether to retry,
+/// back off, or surface the rejection — the contract a load balancer or
+/// client SDK needs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The shard's queue is at its hard capacity.
+    QueueFull {
+        /// Shard index.
+        shard: usize,
+        /// Queue depth at rejection.
+        depth: usize,
+        /// Configured capacity.
+        cap: usize,
+    },
+    /// The shard is load-shedding: depth crossed the watermark and has not
+    /// yet drained back to half of it (hysteresis).
+    Shedding {
+        /// Shard index.
+        shard: usize,
+        /// Queue depth at rejection.
+        depth: usize,
+        /// Configured shedding watermark.
+        watermark: usize,
+    },
+    /// The shard is draining for shutdown; no new work is accepted.
+    Draining {
+        /// Shard index.
+        shard: usize,
+    },
+    /// The legacy batcher was closed (shutdown race on the unsharded path).
+    Closed {
+        /// Rejected request id.
+        request: u64,
+    },
+    /// The submission itself was malformed (empty batch, oversized block…).
+    Invalid(String),
+}
+
+impl SubmitError {
+    /// True for transient backpressure (retry after draining is sensible).
+    pub fn is_backpressure(&self) -> bool {
+        matches!(
+            self,
+            SubmitError::QueueFull { .. } | SubmitError::Shedding { .. }
+        )
+    }
+
+    /// True when the serving stack is shutting down (retry is pointless).
+    pub fn is_shutdown(&self) -> bool {
+        matches!(self, SubmitError::Draining { .. } | SubmitError::Closed { .. })
+    }
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::QueueFull { shard, depth, cap } => write!(
+                f,
+                "shard {shard} queue full: depth {depth} at capacity {cap}, request rejected (backpressure)"
+            ),
+            SubmitError::Shedding {
+                shard,
+                depth,
+                watermark,
+            } => write!(
+                f,
+                "shard {shard} shedding load: depth {depth} over watermark {watermark}, request rejected"
+            ),
+            SubmitError::Draining { shard } => write!(
+                f,
+                "shard {shard} draining: request rejected during shutdown"
+            ),
+            SubmitError::Closed { request } => write!(
+                f,
+                "batcher closed: request {request} rejected during shutdown"
+            ),
+            SubmitError::Invalid(msg) => write!(f, "invalid submission rejected: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+impl From<SubmitError> for Error {
+    fn from(e: SubmitError) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// One accepted unit of work: a client-encrypted batch plus the reply
+/// channel of the session that submitted it.
+pub(crate) struct Job {
+    /// Session-scoped ticket (returned to the submitter).
+    pub ticket: u64,
+    /// Owning session id (trace correlation).
+    pub session: u64,
+    /// Session nonce (keystream stream id).
+    pub nonce: u64,
+    /// Stream counters, one per block.
+    pub counters: Vec<u64>,
+    /// Symmetric ciphertext blocks c = m + z, each of length l.
+    pub sym: Vec<Vec<f64>>,
+    /// Where the completed (or failed) batch is delivered.
+    pub reply: Sender<Result<CompletedBatch>>,
+    /// Trace correlation id minted at submission.
+    pub trace: u64,
+    /// When the submission was accepted (queue-wait accounting).
+    pub enqueued_at: Instant,
+}
+
+#[derive(Default)]
+struct QState {
+    jobs: VecDeque<Job>,
+    draining: bool,
+    shedding: bool,
+}
+
+/// Bounded FIFO with typed backpressure and drain-then-stop shutdown.
+pub(crate) struct ShardQueue {
+    index: usize,
+    cap: usize,
+    /// Shedding watermark (0 disables shedding; only the hard cap applies).
+    watermark: usize,
+    inner: Mutex<QState>,
+    cv: Condvar,
+}
+
+impl ShardQueue {
+    pub(crate) fn new(index: usize, cap: usize, watermark: usize) -> ShardQueue {
+        assert!(cap >= 1, "queue capacity must be at least 1");
+        assert!(watermark < cap, "watermark must be below capacity");
+        ShardQueue {
+            index,
+            cap,
+            watermark,
+            inner: Mutex::new(QState::default()),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, QState> {
+        // A panic while holding the lock must not take the queue (and the
+        // drain path with it) down; keep serving.
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Enqueue a job. Never blocks: returns a typed error when the shard is
+    /// draining, the queue is at capacity, or the load-shedding watermark
+    /// has been crossed (hysteresis: once shedding, submits stay rejected
+    /// until the queue drains to `watermark / 2`).
+    pub(crate) fn push(&self, job: Job) -> std::result::Result<(), SubmitError> {
+        let mut s = self.lock();
+        if s.draining {
+            return Err(SubmitError::Draining { shard: self.index });
+        }
+        let depth = s.jobs.len();
+        if depth >= self.cap {
+            // Hitting the hard cap also arms the shedding state so recovery
+            // is hysteretic from here too.
+            if self.watermark > 0 {
+                s.shedding = true;
+            }
+            return Err(SubmitError::QueueFull {
+                shard: self.index,
+                depth,
+                cap: self.cap,
+            });
+        }
+        if self.watermark > 0 {
+            if s.shedding {
+                if 2 * depth <= self.watermark {
+                    s.shedding = false;
+                } else {
+                    return Err(SubmitError::Shedding {
+                        shard: self.index,
+                        depth,
+                        watermark: self.watermark,
+                    });
+                }
+            } else if depth >= self.watermark {
+                s.shedding = true;
+                return Err(SubmitError::Shedding {
+                    shard: self.index,
+                    depth,
+                    watermark: self.watermark,
+                });
+            }
+        }
+        s.jobs.push_back(job);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Pop the next job, blocking while the queue is empty and open.
+    /// Returns `None` only when draining *and* empty — every job accepted
+    /// before the drain is still handed out.
+    pub(crate) fn pop(&self) -> Option<Job> {
+        let mut s = self.lock();
+        loop {
+            if let Some(job) = s.jobs.pop_front() {
+                return Some(job);
+            }
+            if s.draining {
+                return None;
+            }
+            s = self.cv.wait(s).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    /// Stop intake (subsequent pushes get [`SubmitError::Draining`]);
+    /// queued jobs still drain through `pop`.
+    pub(crate) fn drain(&self) {
+        self.lock().draining = true;
+        self.cv.notify_all();
+    }
+
+    /// Current depth.
+    pub(crate) fn depth(&self) -> usize {
+        self.lock().jobs.len()
+    }
+
+    /// Whether the shedding state is armed (tests).
+    #[cfg(test)]
+    pub(crate) fn shedding(&self) -> bool {
+        self.lock().shedding
+    }
+}
+
+/// One worker pool: a CKKS context + encrypted-key transcipher engine built
+/// once at startup, a bounded queue, and a worker thread executing batches
+/// FIFO and replying to the owning sessions.
+pub struct Shard {
+    index: usize,
+    queue: Arc<ShardQueue>,
+    ctx: Arc<CkksContext>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Shard {
+    /// Build the shard's context and engine (deterministic from `seed`, so
+    /// every shard of a manager holds bit-identical key material) and spawn
+    /// its worker thread.
+    pub(crate) fn start(
+        index: usize,
+        profile: CkksCipherProfile,
+        ckks: CkksParams,
+        seed: u64,
+        sym_key: &[f64],
+        queue_cap: usize,
+        watermark: usize,
+        metrics: Arc<Metrics>,
+    ) -> Result<Shard> {
+        let ctx = Arc::new(
+            CkksContext::builder(ckks)
+                .seed(seed)
+                .build()
+                .with_context(|| format!("shard {index} context"))?,
+        );
+        let mut rng = SplitMix64::new(seed ^ 0x454E_434B); // "ENCK"
+        let engine = Arc::new(
+            CkksTranscipher::setup(profile, &ctx, sym_key, &mut rng)
+                .with_context(|| format!("shard {index} key upload"))?,
+        );
+        let queue = Arc::new(ShardQueue::new(index, queue_cap, watermark));
+        let levels_total = ckks.levels;
+        let worker = {
+            let ctx = Arc::clone(&ctx);
+            let queue = Arc::clone(&queue);
+            std::thread::spawn(move || {
+                shard_loop(index, ctx, engine, queue, metrics, levels_total)
+            })
+        };
+        Ok(Shard {
+            index,
+            queue,
+            ctx,
+            worker: Some(worker),
+        })
+    }
+
+    /// Shard index.
+    pub fn index(&self) -> usize {
+        self.index
+    }
+
+    /// The shard's CKKS context (identical across a manager's shards).
+    pub fn context(&self) -> &Arc<CkksContext> {
+        &self.ctx
+    }
+
+    /// The shard's queue handle (sessions push through this).
+    pub(crate) fn queue(&self) -> &Arc<ShardQueue> {
+        &self.queue
+    }
+
+    /// Current queue depth.
+    pub fn depth(&self) -> usize {
+        self.queue.depth()
+    }
+
+    /// Stop intake; queued jobs keep executing.
+    pub(crate) fn drain(&self) {
+        self.queue.drain();
+    }
+
+    /// Join the worker (after `drain`); all accepted jobs are delivered.
+    pub(crate) fn join(&mut self) {
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Shard {
+    fn drop(&mut self) {
+        // A manager dropped without an explicit shutdown still drains: no
+        // accepted batch is lost, and the worker thread never leaks.
+        self.queue.drain();
+        self.join();
+    }
+}
+
+fn shard_loop(
+    index: usize,
+    ctx: Arc<CkksContext>,
+    engine: Arc<CkksTranscipher>,
+    queue: Arc<ShardQueue>,
+    metrics: Arc<Metrics>,
+    levels_total: usize,
+) {
+    while let Some(job) = queue.pop() {
+        metrics.observe_shard_depth(index, queue.depth());
+        let wait = job.enqueued_at.elapsed();
+        metrics.record_queue_wait(wait.as_nanos() as u64);
+        crate::obs::trace::record(job.trace, "queue_wait", job.enqueued_at, wait.as_nanos());
+        let exec = BatchExec {
+            ctx: &ctx,
+            engine: &engine,
+            metrics: &metrics,
+            levels_total,
+            nonce: job.nonce,
+        };
+        let result =
+            execute_transcipher_batch(&exec, job.trace, job.enqueued_at, &job.counters, &job.sym)
+                .map(|ciphertexts| CompletedBatch {
+                    ticket: Ticket(job.ticket),
+                    session: job.session,
+                    counters: job.counters.clone(),
+                    ciphertexts,
+                })
+                .map_err(|e| e.wrap(format!("shard {index}")));
+        // Delivered (success or typed failure) — the no-drops guarantee.
+        metrics.record_shard_batch(index);
+        let _ = job.reply.send(result);
+        metrics.observe_shard_depth(index, queue.depth());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn job(ticket: u64, reply: Sender<Result<CompletedBatch>>) -> Job {
+        Job {
+            ticket,
+            session: 1,
+            nonce: 1000,
+            counters: vec![ticket],
+            sym: vec![vec![0.0; 4]],
+            reply,
+            trace: 0,
+            enqueued_at: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn bounded_queue_rejects_at_cap_with_typed_error() {
+        let (tx, _rx) = channel();
+        let q = ShardQueue::new(3, 2, 0); // no watermark: pure hard cap
+        q.push(job(1, tx.clone())).unwrap();
+        q.push(job(2, tx.clone())).unwrap();
+        let err = q.push(job(3, tx.clone())).unwrap_err();
+        assert_eq!(
+            err,
+            SubmitError::QueueFull {
+                shard: 3,
+                depth: 2,
+                cap: 2
+            }
+        );
+        assert!(err.is_backpressure() && !err.is_shutdown());
+        // The rejection lost nothing: both accepted jobs are still queued.
+        assert_eq!(q.depth(), 2);
+        assert_eq!(q.pop().unwrap().ticket, 1);
+        assert_eq!(q.pop().unwrap().ticket, 2);
+    }
+
+    #[test]
+    fn shedding_watermark_has_hysteresis() {
+        let (tx, _rx) = channel();
+        let q = ShardQueue::new(0, 8, 4);
+        for t in 0..4 {
+            q.push(job(t, tx.clone())).unwrap();
+        }
+        // Depth 4 = watermark: shedding arms and rejects.
+        let err = q.push(job(4, tx.clone())).unwrap_err();
+        assert!(matches!(err, SubmitError::Shedding { depth: 4, watermark: 4, .. }));
+        assert!(q.shedding());
+        // Draining to depth 3 is not enough (must reach watermark / 2 = 2).
+        let _ = q.pop();
+        assert!(q.push(job(5, tx.clone())).is_err());
+        // At depth 2 the state disarms and submits flow again.
+        let _ = q.pop();
+        assert!(q.push(job(6, tx.clone())).is_ok());
+        assert!(!q.shedding());
+    }
+
+    #[test]
+    fn drain_rejects_new_work_but_hands_out_accepted_jobs() {
+        let (tx, _rx) = channel();
+        let q = ShardQueue::new(1, 4, 0);
+        q.push(job(1, tx.clone())).unwrap();
+        q.push(job(2, tx.clone())).unwrap();
+        q.drain();
+        let err = q.push(job(3, tx.clone())).unwrap_err();
+        assert_eq!(err, SubmitError::Draining { shard: 1 });
+        assert!(err.is_shutdown());
+        assert!(err.to_string().contains("rejected during shutdown"), "{err}");
+        assert_eq!(q.pop().unwrap().ticket, 1);
+        assert_eq!(q.pop().unwrap().ticket, 2);
+        assert!(q.pop().is_none(), "drained empty queue must terminate pop");
+    }
+
+    #[test]
+    fn submit_error_display_is_actionable() {
+        let e = SubmitError::QueueFull {
+            shard: 2,
+            depth: 8,
+            cap: 8,
+        };
+        let s = e.to_string();
+        assert!(s.contains("shard 2") && s.contains("backpressure"), "{s}");
+        let e = SubmitError::Shedding {
+            shard: 0,
+            depth: 6,
+            watermark: 6,
+        };
+        assert!(e.to_string().contains("watermark"), "{e}");
+        let wrapped: Error = e.into();
+        assert!(wrapped.to_string().contains("shedding load"));
+    }
+}

@@ -415,21 +415,6 @@ impl CkksContext {
         }
     }
 
-    /// Generate a context deterministically from `seed`, with rotation keys
-    /// for the given left-rotation step counts.
-    #[deprecated(
-        since = "0.2.0",
-        note = "use CkksContext::builder(params).seed(..).rotations(..).build() — \
-                it validates instead of panicking and carries the thread knob"
-    )]
-    pub fn generate(params: CkksParams, seed: u64, rotations: &[usize]) -> CkksContext {
-        Self::builder(params)
-            .seed(seed)
-            .rotations(rotations)
-            .build()
-            .expect("invalid CKKS parameters")
-    }
-
     /// Parameters.
     pub fn params(&self) -> &CkksParams {
         &self.params

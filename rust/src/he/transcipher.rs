@@ -853,10 +853,84 @@ impl CkksTranscipher {
     }
 }
 
+/// Resumable position in one session's keystream: a nonce (the stream id)
+/// plus the next unused counter. Sessions persist `position()` and later
+/// [`resume`](StreamCursor::resume) at it, so a reconnect continues the
+/// stream without ever reusing a (nonce, counter) pair — the invariant
+/// symmetric-keystream security depends on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamCursor {
+    nonce: u64,
+    next: u64,
+}
+
+impl StreamCursor {
+    /// A fresh stream under `nonce`, starting at counter 0.
+    pub fn new(nonce: u64) -> StreamCursor {
+        StreamCursor { nonce, next: 0 }
+    }
+
+    /// Resume a stream at a saved position (`next_counter` = the first
+    /// counter not yet consumed).
+    pub fn resume(nonce: u64, next_counter: u64) -> StreamCursor {
+        StreamCursor {
+            nonce,
+            next: next_counter,
+        }
+    }
+
+    /// The stream id.
+    pub fn nonce(&self) -> u64 {
+        self.nonce
+    }
+
+    /// The next unused counter (persist this across reconnects).
+    pub fn position(&self) -> u64 {
+        self.next
+    }
+
+    /// Consume the next `n` counters, returning their range. Panics on
+    /// u64 exhaustion (2^64 blocks is unreachable in practice; callers
+    /// that must not panic check `position()` headroom first).
+    pub fn take(&mut self, n: u64) -> std::ops::Range<u64> {
+        let start = self.next;
+        self.next = start
+            .checked_add(n)
+            .expect("stream counter space exhausted");
+        start..self.next
+    }
+
+    /// Advance past `n` counters reserved externally (used when counters
+    /// are peeked before a fallible submit and burned only on acceptance).
+    pub fn advance(&mut self, n: u64) {
+        self.next = self
+            .next
+            .checked_add(n)
+            .expect("stream counter space exhausted");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::he::bfv::BfvParams;
+
+    #[test]
+    fn stream_cursor_take_resume_and_advance() {
+        let mut c = StreamCursor::new(77);
+        assert_eq!(c.nonce(), 77);
+        assert_eq!(c.position(), 0);
+        assert_eq!(c.take(4), 0..4);
+        assert_eq!(c.take(2), 4..6);
+        assert_eq!(c.position(), 6);
+        // A resumed cursor continues exactly where the saved one stopped.
+        let mut r = StreamCursor::resume(77, c.position());
+        assert_eq!(r.take(3), 6..9);
+        // Peek-then-advance (the fallible-submit pattern) matches take.
+        let start = r.position();
+        r.advance(5);
+        assert_eq!(r.position(), start + 5);
+    }
 
     fn setup() -> (ToyCipher, SecretKeyHe, Vec<u64>, SplitMix64) {
         let cipher = ToyCipher::new(ToyParams::demo());

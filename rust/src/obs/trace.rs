@@ -88,6 +88,9 @@ struct RequestRing {
     events: Vec<TraceEvent>,
     /// Events discarded because the ring was full.
     dropped: u64,
+    /// Owning session, when the request was minted through
+    /// [`mint_for_session`]: its requests share one exported track.
+    session: Option<u64>,
 }
 
 /// Correlation id for one request, minted at submission.
@@ -95,7 +98,14 @@ struct RequestRing {
 pub struct TraceCtx {
     /// Process-unique request id (> 0).
     pub id: u64,
+    /// Owning session id, when minted through [`mint_for_session`].
+    pub session: Option<u64>,
 }
+
+/// Exported `pid` offset for session tracks. Session ids and request ids
+/// share the Chrome-trace pid namespace; offsetting session pids far above
+/// any realistic request count keeps the two track families disjoint.
+pub const SESSION_PID_BASE: u64 = 1 << 32;
 
 /// Globally enable/disable tracing. Pins the timestamp epoch on enable.
 pub fn set_enabled(on: bool) {
@@ -115,6 +125,19 @@ pub fn enabled() -> bool {
 /// while disabled (so a request submitted before `set_enabled(true)` still
 /// has a valid id); the ring is only allocated when tracing is on.
 pub fn mint() -> TraceCtx {
+    mint_inner(None)
+}
+
+/// Mint a correlation id owned by `session`: the request records into its
+/// own bounded ring as usual, but the export groups every ring of one
+/// session onto a shared `pid` track (`SESSION_PID_BASE + session`,
+/// process-named `session {s}`), so a session's requests read as one
+/// timeline with the request id preserved in each event's `args`.
+pub fn mint_for_session(session: u64) -> TraceCtx {
+    mint_inner(Some(session))
+}
+
+fn mint_inner(session: Option<u64>) -> TraceCtx {
     let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
     if enabled() {
         let mut rings = lock_rings();
@@ -122,9 +145,15 @@ pub fn mint() -> TraceCtx {
             let oldest = *rings.keys().next().expect("non-empty map");
             rings.remove(&oldest);
         }
-        rings.insert(id, RequestRing::default());
+        rings.insert(
+            id,
+            RequestRing {
+                session,
+                ..RequestRing::default()
+            },
+        );
     }
-    TraceCtx { id }
+    TraceCtx { id, session }
 }
 
 /// RAII guard restoring the previous request scope on drop.
@@ -223,12 +252,20 @@ pub fn export() -> Json {
     let rings = lock_rings();
     let mut events = Vec::new();
     for (&req, ring) in rings.iter() {
+        // Session-owned rings share one pid track per session (offset past
+        // the request-id namespace); standalone requests keep pid = req.
+        // A ring evicted and re-registered mid-flight loses its session tag
+        // and falls back to a request track — bounded memory wins.
+        let (pid, track_name) = match ring.session {
+            Some(s) => (SESSION_PID_BASE + s, format!("session {s}")),
+            None => (req, format!("request {req}")),
+        };
         let mut meta = BTreeMap::new();
         meta.insert("name".to_string(), Json::Str("process_name".to_string()));
         meta.insert("ph".to_string(), Json::Str("M".to_string()));
-        meta.insert("pid".to_string(), Json::Num(req as f64));
+        meta.insert("pid".to_string(), Json::Num(pid as f64));
         let mut margs = BTreeMap::new();
-        margs.insert("name".to_string(), Json::Str(format!("request {req}")));
+        margs.insert("name".to_string(), Json::Str(track_name));
         if ring.dropped > 0 {
             margs.insert("dropped_events".to_string(), Json::Num(ring.dropped as f64));
         }
@@ -248,8 +285,14 @@ pub fn export() -> Json {
             } else {
                 o.insert("dur".to_string(), Json::Num(ev.dur_us as f64));
             }
-            o.insert("pid".to_string(), Json::Num(req as f64));
+            o.insert("pid".to_string(), Json::Num(pid as f64));
             o.insert("tid".to_string(), Json::Num(ev.tid as f64));
+            if ring.session.is_some() {
+                // Preserve the request id on the shared session track.
+                let mut args = BTreeMap::new();
+                args.insert("request".to_string(), Json::Num(req as f64));
+                o.insert("args".to_string(), Json::Obj(args));
+            }
             events.push(Json::Obj(o));
         }
     }
@@ -343,6 +386,68 @@ mod tests {
         assert!(rings.len() <= MAX_REQUESTS + 1, "rings unbounded");
         assert!(!rings.contains_key(&ctx.id), "oldest ring not evicted");
         drop(rings);
+        clear();
+    }
+
+    #[test]
+    fn session_requests_share_one_exported_track() {
+        let _g = locked();
+        set_enabled(true);
+        clear();
+        let a = mint_for_session(5);
+        let b = mint_for_session(5);
+        let lone = mint();
+        assert_eq!(a.session, Some(5));
+        assert!(lone.session.is_none());
+        instant(a.id, "enqueue");
+        instant(b.id, "enqueue");
+        instant(lone.id, "enqueue");
+        set_enabled(false);
+        let doc = export();
+        let evs = doc
+            .as_obj()
+            .and_then(|o| o.get("traceEvents"))
+            .and_then(|v| v.as_arr())
+            .unwrap();
+        let pid_of = |want_req: u64| -> u64 {
+            evs.iter()
+                .filter_map(|e| e.as_obj())
+                .find(|o| {
+                    o.get("args")
+                        .and_then(|a| a.get("request"))
+                        .and_then(|r| r.as_u64())
+                        == Some(want_req)
+                })
+                .and_then(|o| o.get("pid").and_then(|p| p.as_u64()))
+                .expect("session event with request arg")
+        };
+        // Both session requests land on the same session pid track...
+        assert_eq!(pid_of(a.id), SESSION_PID_BASE + 5);
+        assert_eq!(pid_of(a.id), pid_of(b.id));
+        // ...named for the session, while the sessionless request keeps the
+        // legacy request track untouched.
+        let names: Vec<String> = evs
+            .iter()
+            .filter_map(|e| e.as_obj())
+            .filter(|o| o.get("ph").and_then(|p| p.as_str()) == Some("M"))
+            .filter_map(|o| {
+                o.get("args")
+                    .and_then(|a| a.get("name"))
+                    .and_then(|n| n.as_str())
+                    .map(str::to_string)
+            })
+            .collect();
+        assert!(names.contains(&"session 5".to_string()), "{names:?}");
+        assert!(names.contains(&format!("request {}", lone.id)), "{names:?}");
+        let lone_ev = evs
+            .iter()
+            .filter_map(|e| e.as_obj())
+            .find(|o| {
+                o.get("ph").and_then(|p| p.as_str()) == Some("i")
+                    && o.get("pid").and_then(|p| p.as_u64()) == Some(lone.id)
+            })
+            .expect("sessionless instant keeps pid = request id");
+        assert!(lone_ev.get("args").is_none());
         clear();
     }
 

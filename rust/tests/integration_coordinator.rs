@@ -17,6 +17,7 @@ fn xla_server(p: ParamSet, sessions: u64) -> EncryptServer {
         policy: BatchPolicy {
             batch_size: 8,
             max_wait: Duration::from_millis(2),
+            queue_cap: 0,
         },
         rng_depth: 16,
         rng_workers: 2,

@@ -1,0 +1,294 @@
+//! Streaming serving stack acceptance: per-user sessions on the sharded
+//! transcipher fleet. Pins the contracts the stack exists for —
+//! incremental delivery while later pushes are still being submitted,
+//! typed backpressure from the bounded queues without losing accepted
+//! work, drain-then-stop shutdown delivering every accepted batch, and
+//! bit-identical outputs at any shard count (all shards derive the same
+//! key material from the manager seed).
+
+use presto::coordinator::{
+    CompletedBatch, SessionConfig, SessionManager, SubmitError, Ticket,
+};
+use presto::he::ckks::Ciphertext;
+use presto::he::transcipher::CkksCipherProfile;
+use presto::params::CkksParams;
+use presto::util::rng::SplitMix64;
+use std::collections::HashMap;
+use std::time::Duration;
+
+const RING: usize = 32;
+
+fn manager(shards: usize, queue_cap: usize, seed: u64, output_level: usize) -> SessionManager {
+    let profile = CkksCipherProfile::rubato_toy();
+    let levels = profile.required_levels() + output_level;
+    let cfg = SessionConfig::builder(profile)
+        .ckks(CkksParams::with_shape(RING, levels))
+        .seed(seed)
+        .shards(shards)
+        .queue_cap(queue_cap)
+        .shed_watermark(0)
+        .output_level(output_level)
+        .build()
+        .expect("valid serving config");
+    SessionManager::start(cfg).expect("serving stack starts")
+}
+
+fn batch(rng: &mut SplitMix64, blocks: usize, l: usize) -> Vec<Vec<f64>> {
+    (0..blocks)
+        .map(|_| (0..l).map(|_| rng.next_f64() * 2.0 - 1.0).collect())
+        .collect()
+}
+
+/// Decrypt-check one completed batch against the plaintext blocks it was
+/// pushed with (ciphertext i holds message element i, slot b = block b).
+fn check_decrypt(mgr: &SessionManager, b: &CompletedBatch, data: &[Vec<f64>]) {
+    let bound = mgr.config().profile.error_bound();
+    assert_eq!(b.ciphertexts.len(), mgr.config().profile.l);
+    for (i, ct) in b.ciphertexts.iter().enumerate() {
+        assert_eq!(ct.level(), mgr.config().output_level);
+        let d = mgr.context().decrypt_real(ct);
+        for (blk, row) in data.iter().enumerate() {
+            let err = (d[blk] - row[i]).abs();
+            assert!(
+                err < bound,
+                "session {} ticket {:?} block {blk} elem {i}: err {err:.3e} ≥ {bound:.1e}",
+                b.session,
+                b.ticket
+            );
+        }
+    }
+}
+
+/// Two concurrent sessions on a two-shard fleet, three pushes each. The
+/// wait between pushes proves incremental streaming: the first batch is
+/// received *before* the last one is submitted.
+#[test]
+fn two_sessions_stream_incrementally_across_two_shards() {
+    let mgr = manager(2, 8, 77, 0);
+    let l = mgr.config().profile.l;
+    let blocks = 3.min(mgr.batch_capacity());
+    let mut rng = SplitMix64::new(5);
+    let mut sessions: Vec<_> = (1..=2)
+        .map(|id| mgr.open_session(id).expect("session opens"))
+        .collect();
+    let mut pushed: HashMap<(u64, u64), Vec<Vec<f64>>> = HashMap::new();
+    let mut completed: Vec<CompletedBatch> = Vec::new();
+    let pushes = 3;
+    for p in 0..pushes {
+        for s in sessions.iter_mut() {
+            let data = batch(&mut rng, blocks, l);
+            let t = s.push_blocks(&data).expect("queue has room");
+            pushed.insert((s.id(), t.0), data);
+            if p + 1 < pushes {
+                // Receive this batch before the next push goes out: the
+                // streaming property (no wait-for-the-whole-stream).
+                completed.push(s.wait_next(Duration::from_secs(120)).expect("batch completes"));
+            }
+        }
+    }
+    for s in sessions.iter_mut() {
+        while s.in_flight() > 0 {
+            completed.push(s.wait_next(Duration::from_secs(120)).expect("batch completes"));
+        }
+        // Three pushes consumed exactly three counter ranges.
+        assert_eq!(s.position(), (pushes * blocks) as u64);
+    }
+    assert_eq!(completed.len(), 2 * pushes);
+    for b in &completed {
+        // Counters are the session-sequential range for the ticket.
+        let start = b.ticket.0 * blocks as u64;
+        let want: Vec<u64> = (start..start + blocks as u64).collect();
+        assert_eq!(b.counters, want, "session {} stream order", b.session);
+        let data = pushed
+            .remove(&(b.session, b.ticket.0))
+            .expect("delivered batch was pushed exactly once");
+        check_decrypt(&mgr, b, &data);
+    }
+    assert!(pushed.is_empty(), "every accepted batch must be delivered");
+    drop(sessions);
+    mgr.shutdown();
+}
+
+fn run_fixed_workload(shards: usize) -> Vec<((u64, u64), Vec<Ciphertext>)> {
+    let mgr = manager(shards, 8, 123, 0);
+    let l = mgr.config().profile.l;
+    let mut rng = SplitMix64::new(999);
+    let mut out = Vec::new();
+    let mut sessions: Vec<_> = (1..=2)
+        .map(|id| mgr.open_session(id).expect("session opens"))
+        .collect();
+    for _ in 0..2 {
+        for s in sessions.iter_mut() {
+            let data = batch(&mut rng, 2, l);
+            s.push_blocks(&data).expect("queue has room");
+        }
+    }
+    for s in sessions.iter_mut() {
+        while s.in_flight() > 0 {
+            let b = s.wait_next(Duration::from_secs(120)).expect("batch completes");
+            out.push(((b.session, b.ticket.0), b.ciphertexts));
+        }
+    }
+    drop(sessions);
+    mgr.shutdown();
+    out.sort_by_key(|(k, _)| *k);
+    out
+}
+
+/// The same seed + workload produces bit-identical ciphertexts whether the
+/// fleet has one shard or two: every shard derives identical key material,
+/// so shard pinning is invisible in the outputs.
+#[test]
+fn outputs_bit_identical_across_shard_counts() {
+    let one = run_fixed_workload(1);
+    let two = run_fixed_workload(2);
+    assert_eq!(one.len(), two.len());
+    for ((ka, ca), (kb, cb)) in one.iter().zip(&two) {
+        assert_eq!(ka, kb);
+        assert_eq!(ca.len(), cb.len());
+        for (x, y) in ca.iter().zip(cb) {
+            assert_eq!(x.c0, y.c0, "c0 differs for {ka:?}");
+            assert_eq!(x.c1, y.c1, "c1 differs for {ka:?}");
+            assert_eq!(x.scale, y.scale);
+        }
+    }
+}
+
+/// A full bounded queue rejects with the typed backpressure error, burns
+/// no stream counters, and loses none of the previously accepted tickets.
+#[test]
+fn queue_full_is_typed_and_loses_no_accepted_work() {
+    let mgr = manager(1, 1, 31, 0);
+    let l = mgr.config().profile.l;
+    let mut s = mgr.open_session(1).expect("session opens");
+    let mut rng = SplitMix64::new(8);
+    let data = batch(&mut rng, 1, l);
+    let target = 5u64;
+    let mut queue_full = 0u64;
+    let mut completed: Vec<CompletedBatch> = Vec::new();
+    let mut accepted = 0u64;
+    while accepted < target {
+        let position = s.position();
+        match s.push_blocks(&data) {
+            Ok(t) => {
+                assert_eq!(t.0, accepted, "tickets are session-sequential");
+                accepted += 1;
+            }
+            Err(SubmitError::QueueFull { shard, cap, .. }) => {
+                assert_eq!((shard, cap), (0, 1));
+                // Rejected pushes reuse the same counters on retry.
+                assert_eq!(s.position(), position);
+                queue_full += 1;
+                for r in s.drain_completed() {
+                    completed.push(r.expect("accepted batch executes"));
+                }
+                std::thread::yield_now();
+            }
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    while s.in_flight() > 0 {
+        completed.push(s.wait_next(Duration::from_secs(120)).expect("batch completes"));
+    }
+    // With a capacity-1 queue and multi-millisecond CKKS evaluations, the
+    // push loop must outrun the worker at least once.
+    assert!(queue_full > 0, "cap-1 queue never pushed back");
+    let got: Vec<u64> = completed.iter().map(|b| b.ticket.0).collect();
+    assert_eq!(got, (0..target).collect::<Vec<_>>(), "FIFO, nothing lost");
+    let snap = mgr.metrics().snapshot();
+    assert_eq!(snap.shards[0].accepted, target);
+    assert_eq!(snap.shards[0].rejected, queue_full);
+    drop(s);
+    mgr.shutdown();
+}
+
+/// Submitting after shutdown began gets the typed shutdown error (not
+/// backpressure), while the batch accepted before the drain is still
+/// delivered.
+#[test]
+fn submit_during_drain_is_typed_and_accepted_work_survives() {
+    let mgr = manager(1, 4, 41, 0);
+    let l = mgr.config().profile.l;
+    let mut s = mgr.open_session(1).expect("session opens");
+    let mut rng = SplitMix64::new(3);
+    let data = batch(&mut rng, 1, l);
+    s.push_blocks(&data).expect("accepted before drain");
+    let position = s.position();
+    mgr.shutdown();
+    let err = s.push_blocks(&data).expect_err("draining queue must reject");
+    assert!(matches!(err, SubmitError::Draining { shard: 0 }), "{err}");
+    assert!(err.is_shutdown() && !err.is_backpressure());
+    assert!(err.to_string().contains("shutdown"), "{err}");
+    // The rejected push burned no counters…
+    assert_eq!(s.position(), position);
+    // …and the batch accepted before the drain was executed and delivered.
+    let b = s.wait_next(Duration::from_secs(120)).expect("drained batch arrives");
+    assert_eq!(b.ticket, Ticket(0));
+    assert_eq!(b.ciphertexts.len(), l);
+}
+
+/// Race a streaming submitter against shutdown at several phases: however
+/// the drain lands, every accepted batch is delivered — none dropped, and
+/// post-drain pushes fail with the typed shutdown error.
+#[test]
+fn shutdown_race_delivers_every_accepted_batch() {
+    for trial in 0..3u64 {
+        let mgr = manager(2, 4, 200 + trial, 0);
+        let l = mgr.config().profile.l;
+        let mut s = mgr.open_session(1).expect("session opens");
+        let worker = std::thread::spawn(move || {
+            let mut rng = SplitMix64::new(trial);
+            let mut accepted = 0u64;
+            let mut delivered = 0u64;
+            for _ in 0..20 {
+                let data = batch(&mut rng, 1, l);
+                match s.push_blocks(&data) {
+                    Ok(_) => accepted += 1,
+                    Err(e) if e.is_backpressure() => {
+                        for r in s.drain_completed() {
+                            r.expect("accepted batch executes");
+                            delivered += 1;
+                        }
+                    }
+                    Err(e) if e.is_shutdown() => break,
+                    Err(e) => panic!("unexpected submit error: {e}"),
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            while s.in_flight() > 0 {
+                s.wait_next(Duration::from_secs(120))
+                    .expect("accepted batch survives the drain");
+                delivered += 1;
+            }
+            (accepted, delivered)
+        });
+        std::thread::sleep(Duration::from_millis(3 + 7 * trial));
+        mgr.shutdown();
+        let (accepted, delivered) = worker.join().expect("submitter thread");
+        assert_eq!(
+            accepted, delivered,
+            "trial {trial}: drain dropped accepted work"
+        );
+    }
+}
+
+/// `output_level > 0` provisions extra chain levels: outputs arrive at the
+/// requested level (ready for more multiplicative depth) and still decrypt
+/// within the profile bound.
+#[test]
+fn output_level_keeps_levels_for_post_processing() {
+    let mgr = manager(1, 4, 55, 1);
+    let l = mgr.config().profile.l;
+    let mut s = mgr.open_session(1).expect("session opens");
+    let mut rng = SplitMix64::new(21);
+    let data = batch(&mut rng, 2, l);
+    s.push_blocks(&data).expect("queue has room");
+    let b = s.wait_next(Duration::from_secs(120)).expect("batch completes");
+    for ct in &b.ciphertexts {
+        assert_eq!(ct.level(), 1, "one level left for post-processing");
+    }
+    check_decrypt(&mgr, &b, &data);
+    assert_eq!(mgr.metrics().snapshot().output_level, 1);
+    drop(s);
+    mgr.shutdown();
+}
