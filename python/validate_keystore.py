@@ -1,0 +1,173 @@
+#!/usr/bin/env python3
+"""Mirror of the KeyStore LRU state machine (rust/src/he/ckks/keystore.rs).
+
+Mirrors `KeyStore::rotation_key` bookkeeping line-by-line — hit path
+(recency refresh), miss path (evict-before-generate, counter updates,
+peak tracking) — and fuzzes it against an independent reference model
+built on a plain ordered dict. Asserts, over randomized access
+sequences:
+
+  * resident bytes NEVER exceed the budget, even transiently (the
+    eviction loop runs before the newcomer is inserted, and the
+    newcomer's size is known a priori);
+  * the resident set and its LRU order match the reference model;
+  * hit/miss/eviction counters match the reference model;
+  * peak_resident_bytes is the true high-water mark;
+  * undeclared steps error without touching any state;
+  * regeneration is deterministic: the "key bytes" of step r (modeled
+    as a hash of (seed, domain, r)) are identical on every
+    (re)generation regardless of order and eviction history.
+
+Run: python3 python/validate_keystore.py
+"""
+
+import random
+
+ROT_RNG_DOMAIN = 0x524F_544B_0000_0000
+
+
+def key_material(seed: int, step: int) -> int:
+    """Stand-in for the per-step key streams: depends only on (seed, step)."""
+    # Mirrors the stream derivation shape: seed ^ domain ^ step feeds an RNG.
+    x = (seed ^ ROT_RNG_DOMAIN ^ step) & 0xFFFFFFFFFFFFFFFF
+    # SplitMix64 scramble, same constants as util/rng.rs.
+    x = (x + 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF
+    z = x
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & 0xFFFFFFFFFFFFFFFF
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & 0xFFFFFFFFFFFFFFFF
+    return z ^ (z >> 31)
+
+
+class KeyStoreMirror:
+    """Line-by-line mirror of KeyStore::rotation_key's bookkeeping."""
+
+    def __init__(self, seed, allowed, budget_bytes, per_key_bytes):
+        self.seed = seed
+        self.allowed = set(allowed)
+        self.budget = budget_bytes
+        self.per_key = per_key_bytes
+        self.resident = {}   # step -> key material
+        self.order = []      # front = LRU, back = MRU
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.resident_bytes = 0
+        self.peak = 0
+
+    def rotation_key(self, step):
+        if step in self.resident:
+            self.hits += 1
+            self.order.remove(step)
+            self.order.append(step)
+            return self.resident[step]
+        if step not in self.allowed:
+            raise KeyError(f"no rotation key for step {step}")
+        self.misses += 1
+        if self.budget > 0:
+            while self.resident_bytes + self.per_key > self.budget:
+                if not self.order:
+                    break
+                lru = self.order.pop(0)
+                if lru in self.resident:
+                    del self.resident[lru]
+                    self.resident_bytes -= self.per_key
+                    self.evictions += 1
+        key = key_material(self.seed, step)
+        self.resident[step] = key
+        self.order.append(step)
+        self.resident_bytes += self.per_key
+        self.peak = max(self.peak, self.resident_bytes)
+        return key
+
+
+def run_trial(rng, trial):
+    steps = sorted(rng.sample(range(1, 64), rng.randint(1, 8)))
+    per_key = rng.choice([1, 8, 4096, 1 << 20])
+    # Budget: 0 (unbounded) or room for 1..len(steps)+1 keys.
+    cap_keys = rng.randint(1, len(steps) + 1)
+    budget = rng.choice([0, cap_keys * per_key])
+    seed = rng.getrandbits(64)
+    store = KeyStoreMirror(seed, steps, budget, per_key)
+
+    # Independent reference: ordered-dict LRU with capacity in keys.
+    ref_order = []
+    ref_hits = ref_misses = ref_evictions = 0
+    first_material = {}
+
+    max_resident = 0
+    for _ in range(rng.randint(20, 400)):
+        if rng.random() < 0.05:
+            bad = 101  # never declared
+            before = (store.hits, store.misses, store.evictions,
+                      store.resident_bytes, list(store.order))
+            try:
+                store.rotation_key(bad)
+            except KeyError:
+                pass
+            else:
+                raise AssertionError("undeclared step did not error")
+            after = (store.hits, store.misses, store.evictions,
+                     store.resident_bytes, list(store.order))
+            # Miss counter DOES tick before the authorization check in the
+            # Rust? No — the Rust checks authorization before misses += 1.
+            assert before == after, f"trial {trial}: error path mutated state"
+            continue
+        step = rng.choice(steps)
+        key = store.rotation_key(step)
+
+        # Determinism across regenerations and orders.
+        if step in first_material:
+            assert key == first_material[step], \
+                f"trial {trial}: step {step} regenerated different material"
+        else:
+            first_material[step] = key
+
+        # Reference LRU bookkeeping.
+        if step in ref_order:
+            ref_hits += 1
+            ref_order.remove(step)
+            ref_order.append(step)
+        else:
+            ref_misses += 1
+            if budget > 0:
+                while (len(ref_order) + 1) * per_key > budget and ref_order:
+                    ref_order.pop(0)
+                    ref_evictions += 1
+            ref_order.append(step)
+
+        assert store.order == ref_order, \
+            f"trial {trial}: LRU order diverged {store.order} vs {ref_order}"
+        assert set(store.resident) == set(ref_order)
+        assert (store.hits, store.misses, store.evictions) == \
+            (ref_hits, ref_misses, ref_evictions), \
+            f"trial {trial}: counters diverged"
+        assert store.resident_bytes == len(ref_order) * per_key
+        if budget > 0:
+            assert store.resident_bytes <= budget, \
+                f"trial {trial}: resident {store.resident_bytes} > budget {budget}"
+            assert store.peak <= budget, \
+                f"trial {trial}: peak {store.peak} > budget {budget}"
+        max_resident = max(max_resident, store.resident_bytes)
+    assert store.peak == max_resident, \
+        f"trial {trial}: peak {store.peak} != observed max {max_resident}"
+
+    # Cross-order determinism: a fresh store touched in reverse produces
+    # identical material for every step.
+    store2 = KeyStoreMirror(seed, steps, 0, per_key)
+    for step in reversed(steps):
+        assert store2.rotation_key(step) == key_material(seed, step)
+    for step, mat in first_material.items():
+        assert key_material(seed, step) == mat
+
+
+def main():
+    rng = random.Random(0xC0FFEE)
+    trials = 500
+    for t in range(trials):
+        run_trial(rng, t)
+    print(f"keystore LRU mirror: {trials} fuzzed trials OK "
+          "(budget cap, LRU order, counters, peak, determinism, error path)")
+
+
+if __name__ == "__main__":
+    main()

@@ -60,8 +60,10 @@ fn bench_ckks(
     threads: usize,
 ) -> Json {
     let params = CkksParams::with_shape(ring, profile.required_levels());
-    // One rotation key: enough to measure hybrid key-switch time (every
-    // Galois element adds the same O(L) single Q·P key).
+    // One declared rotation step: enough to measure hybrid key-switch time
+    // (every Galois element adds the same O(L) single Q·P key). The key
+    // materializes lazily on the first rotate below, so the key-memory
+    // figure recorded at the end reflects it as resident.
     let ctx = CkksContext::builder(params)
         .seed(5)
         .rotations(&[1])
@@ -230,7 +232,9 @@ fn bench_serve(
         shards,
         r.throughput(total_blocks as f64)
     );
-    let key_bytes = mgr.context().switch_key_bytes() * shards as u64;
+    // One shared read-only key store across all shards: key residency is
+    // O(1) in shard count, not O(shards) — report it unmultiplied.
+    let key_bytes = mgr.context().switch_key_bytes();
     mgr.shutdown();
 
     let mut row = BTreeMap::new();
@@ -251,6 +255,117 @@ fn bench_serve(
         num(r.throughput(total_blocks as f64)),
     );
     row.insert("key_memory_bytes".into(), num(key_bytes as f64));
+    row.insert("stages".into(), Json::Arr(Vec::new()));
+    Json::Obj(row)
+}
+
+/// Key-memory-under-eviction row: the HERA transcipher + a 3-step slot
+/// linear layer, once with an unbounded key store and once with a budget
+/// that holds only 2 of the 3 rotation keys — forcing LRU eviction and
+/// deterministic regeneration on every pass. The row records the budget,
+/// the peak resident bytes (asserted ≤ budget), the hit/miss/eviction
+/// counters, the regeneration wall time, and whether the bounded outputs
+/// were bit-identical to the unbounded ones (asserted). `kind: "keycache"`
+/// keeps it out of the perf gate's direct-row comparison set.
+fn bench_keycache(ring: usize, iters: usize, threads: usize) -> Json {
+    let profile = CkksCipherProfile::hera_toy();
+    let scheme = format!("{:?}", profile.scheme).to_lowercase();
+    let levels = profile.required_levels() + 1; // one level for slot_linear
+    let steps = [1usize, 2, 3];
+    let build = |budget: u64| {
+        CkksContext::builder(CkksParams::with_shape(ring, levels))
+            .seed(5)
+            .rotations(&steps)
+            .key_cache_bytes(budget)
+            .threads(threads)
+            .build()
+            .expect("valid CKKS parameters")
+    };
+    let unbounded = build(0);
+    let per_key = unbounded.key_store().per_key_bytes();
+    let budget = 2 * per_key;
+    let bounded = build(budget);
+
+    let mut rng = SplitMix64::new(1);
+    let key = profile.sample_key(3);
+    let mut rng2 = SplitMix64::new(1);
+    let engine_u = CkksTranscipher::setup(profile.clone(), &unbounded, &key, &mut rng)
+        .expect("setup");
+    let engine_b = CkksTranscipher::setup(profile.clone(), &bounded, &key, &mut rng2)
+        .expect("setup");
+    let batch = bounded.slots();
+    let counters: Vec<u64> = (0..batch as u64).collect();
+    let blocks: Vec<Vec<f64>> = counters
+        .iter()
+        .map(|&c| profile.encrypt_block(&key, 1, c, &vec![0.5; profile.l]))
+        .collect();
+    let diags: Vec<(usize, Vec<f64>)> = steps
+        .iter()
+        .map(|&s| (s, vec![1.0 / steps.len() as f64; batch]))
+        .collect();
+    let run = |ctx: &CkksContext, engine: &CkksTranscipher| {
+        let cts = engine.transcipher(ctx, 1, &counters, &blocks).expect("transcipher");
+        let out: Vec<_> = cts
+            .iter()
+            .map(|ct| engine.slot_linear(ctx, ct, &diags).expect("declared steps"))
+            .collect();
+        out
+    };
+    let reference = run(&unbounded, &engine_u);
+
+    let name = format!(
+        "key cache {scheme} (N={ring}, 3 rotations, budget = 2 keys, LRU eviction)"
+    );
+    let mut last: Vec<presto::he::ckks::Ciphertext> = Vec::new();
+    let r = bench(&name, iters, || {
+        last = run(&bounded, &engine_b);
+        std::hint::black_box(&last);
+    });
+    let bit_identical = last.len() == reference.len()
+        && last
+            .iter()
+            .zip(&reference)
+            .all(|(a, b)| a.c0 == b.c0 && a.c1 == b.c1);
+    assert!(bit_identical, "bounded-store outputs diverged from unbounded");
+    let stats = bounded.key_store().stats();
+    assert!(stats.evictions > 0, "budget of 2 keys must evict with 3 steps");
+    assert!(
+        stats.peak_resident_bytes <= budget,
+        "peak resident {} B exceeds budget {} B",
+        stats.peak_resident_bytes,
+        budget
+    );
+    println!("{}", r.report());
+    println!(
+        "key cache: budget {:.1} KiB, peak {:.1} KiB, {} hits, {} misses, {} evictions, {:.2} ms regen, bit-identical to unbounded",
+        budget as f64 / 1024.0,
+        stats.peak_resident_bytes as f64 / 1024.0,
+        stats.hits,
+        stats.misses,
+        stats.evictions,
+        stats.regen_ns_total as f64 / 1e6,
+    );
+
+    let mut row = BTreeMap::new();
+    row.insert("name".into(), Json::Str(name));
+    row.insert("kind".into(), Json::Str("keycache".into()));
+    row.insert("scheme".into(), Json::Str(scheme));
+    row.insert("ring".into(), num(ring as f64));
+    row.insert("levels".into(), num(levels as f64));
+    row.insert("rotations".into(), num(steps.len() as f64));
+    row.insert("threads".into(), num(threads as f64));
+    row.insert("budget_bytes".into(), num(budget as f64));
+    row.insert("per_key_bytes".into(), num(per_key as f64));
+    row.insert(
+        "peak_resident_key_bytes".into(),
+        num(stats.peak_resident_bytes as f64),
+    );
+    row.insert("key_cache_hits".into(), num(stats.hits as f64));
+    row.insert("key_cache_misses".into(), num(stats.misses as f64));
+    row.insert("key_cache_evictions".into(), num(stats.evictions as f64));
+    row.insert("regen_ns_total".into(), num(stats.regen_ns_total as f64));
+    row.insert("bit_identical".into(), Json::Bool(bit_identical));
+    row.insert("latency_ns".into(), latency_json(&r.ns));
     row.insert("stages".into(), Json::Arr(Vec::new()));
     Json::Obj(row)
 }
@@ -325,6 +440,12 @@ fn main() {
                 threads,
             ));
         }
+    }
+    // Key-memory row under eviction pressure: bounded LRU store vs
+    // unbounded, bit-identity asserted. Quick mode only (it is a
+    // correctness/memory trend, not a paper-scale measurement).
+    if quick {
+        rows.push(bench_keycache(ring, 3, threads));
     }
 
     let mut doc = BTreeMap::new();

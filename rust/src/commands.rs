@@ -21,12 +21,13 @@ COMMANDS:
     encrypt    --params <set> [--seed N] [--nonce N] [--counter N] --values a,b,c
                  RtF-encode and encrypt a real-valued vector.
     transcipher --params <set> [--rounds N] [--ring N] [--blocks N] [--seed N]
-                 [--threads N] [--breakdown] [--prometheus] [--metrics PATH]
-                 [--trace-out PATH]
+                 [--threads N] [--key-cache-bytes B] [--breakdown]
+                 [--prometheus] [--metrics PATH] [--trace-out PATH]
                  RNS-CKKS transcipher-serving demo (client blocks in,
                  CKKS ciphertexts out, decrypt-checked).
     serve      --params <set> [--batch B] [--rate R] [--requests N] [--artifact PATH]
                  [--shards K] [--queue-cap N] [--output-level L]
+                 [--key-cache-bytes B]
                  [--breakdown] [--prometheus] [--metrics PATH] [--trace-out PATH]
                  Run the client-side encryption service (L3 coordinator).
                  --shards K > 0 switches to the sharded streaming
@@ -36,7 +37,9 @@ COMMANDS:
                  backpressure, and graceful drain. --queue-cap bounds the
                  request queue on both paths (0 = unbounded legacy queue);
                  --output-level keeps L CKKS levels on every output for
-                 deeper post-processing (sharded path only).
+                 deeper post-processing (sharded path only);
+                 --key-cache-bytes bounds resident Galois rotation keys
+                 (LRU; evicted keys regenerate from the seed; 0 = keep all).
                  --breakdown prints the span profiler's per-operation table;
                  --prometheus prints the metrics in Prometheus text format;
                  --metrics writes a JSON metrics snapshot to PATH;
@@ -197,6 +200,10 @@ pub fn transcipher(args: &Args) -> i32 {
         Ok(t) => t,
         Err(e) => return fail(e),
     };
+    let key_cache_bytes = match args.parsed_or("key-cache-bytes", 0u64) {
+        Ok(b) => b,
+        Err(e) => return fail(e),
+    };
     let profile = CkksCipherProfile::from_params(&p, rounds);
     let levels = profile.required_levels();
     let cfg = match TranscipherConfig::builder(profile)
@@ -204,6 +211,7 @@ pub fn transcipher(args: &Args) -> i32 {
         .seed(args.parsed_or("seed", 2026u64).unwrap_or(2026))
         .nonce(1000)
         .threads(threads)
+        .key_cache_bytes(key_cache_bytes)
         .build()
     {
         Ok(c) => c,

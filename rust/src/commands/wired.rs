@@ -144,6 +144,7 @@ fn serve_sessions(args: &Args, shards: usize) -> i32 {
         .queue_cap(queue_cap)
         .output_level(output_level)
         .threads(args.parsed_or("threads", 0usize).unwrap_or(0))
+        .key_cache_bytes(args.parsed_or("key-cache-bytes", 0u64).unwrap_or(0))
         .build()
     {
         Ok(c) => c,

@@ -6,6 +6,7 @@
 //! summarizes the histograms *under* the lock instead of cloning them out,
 //! so the critical section stays O(buckets) rather than O(allocations).
 
+use crate::he::ckks::KeyStoreStats;
 use crate::util::json::Json;
 use crate::util::stats::LatencyHistogram;
 use std::collections::BTreeMap;
@@ -34,6 +35,11 @@ struct Inner {
     budget_low: bool,
     last_budget_warning_level: u64,
     noise_budget_bits: f64,
+    key_cache_hits: u64,
+    key_cache_misses: u64,
+    key_cache_evictions: u64,
+    key_cache_regen_ns_total: u64,
+    key_cache_peak_bytes: u64,
     /// Per-shard serving series (empty on single-executor paths).
     shards: Vec<ShardStats>,
     e2e_latency: Option<LatencyHistogram>,
@@ -48,6 +54,7 @@ struct ShardStats {
     accepted: u64,
     rejected: u64,
     completed: u64,
+    key_cache_bytes: u64,
 }
 
 /// Summary of one latency series (computed under the registry lock).
@@ -94,6 +101,12 @@ pub struct ShardSnapshot {
     pub rejected: u64,
     /// Batches delivered by this shard's worker (success or typed error).
     pub completed_batches: u64,
+    /// Cache-resident evaluation-key bytes visible from this shard. All
+    /// shards of a [`SessionManager`](crate::coordinator::SessionManager)
+    /// share one read-only [`KeyStore`](crate::he::ckks::KeyStore), so the
+    /// series reports the same value on every shard — a deliberate signal
+    /// that key residency is O(1), not O(shards).
+    pub key_cache_bytes: u64,
 }
 
 /// A point-in-time snapshot of the registry.
@@ -127,6 +140,16 @@ pub struct MetricsSnapshot {
     pub noise_budget_bits: f64,
     /// Request-trace events currently buffered (see [`crate::obs::trace`]).
     pub trace_events: u64,
+    /// Rotation-key cache hits (lazy [`KeyStore`](crate::he::ckks::KeyStore)).
+    pub key_cache_hits: u64,
+    /// Rotation-key cache misses (each one triggered a lazy generation).
+    pub key_cache_misses: u64,
+    /// Rotation keys evicted under the byte budget.
+    pub key_cache_evictions: u64,
+    /// Total nanoseconds spent generating/regenerating rotation keys.
+    pub key_cache_regen_ns_total: u64,
+    /// High-water mark of cache-resident rotation-key bytes.
+    pub key_cache_peak_bytes: u64,
     /// Per-shard serving series (empty on single-executor paths).
     pub shards: Vec<ShardSnapshot>,
     /// End-to-end request latency (enqueue → response).
@@ -174,6 +197,25 @@ impl Metrics {
     /// Set the resident evaluation-key memory gauge (bytes).
     pub fn set_key_bytes(&self, bytes: u64) {
         self.lock().key_bytes = bytes;
+    }
+
+    /// Observe the shared key store from `shard`'s vantage point: refresh
+    /// the live `key_bytes` gauge, the per-shard `key_cache_bytes` series,
+    /// and the cumulative hit/miss/eviction/regen counters.
+    ///
+    /// [`KeyStoreStats`] is cumulative since store creation and the store
+    /// is shared across shards, so counters are *set* (last observation
+    /// wins), not added — adding would double-count each shard's view of
+    /// the same store.
+    pub fn observe_key_cache(&self, shard: usize, key_bytes: u64, stats: KeyStoreStats) {
+        let mut m = self.lock();
+        m.key_bytes = key_bytes;
+        m.key_cache_hits = stats.hits;
+        m.key_cache_misses = stats.misses;
+        m.key_cache_evictions = stats.evictions;
+        m.key_cache_regen_ns_total = stats.regen_ns_total;
+        m.key_cache_peak_bytes = m.key_cache_peak_bytes.max(stats.peak_resident_bytes);
+        Self::shard_mut(&mut m, shard).key_cache_bytes = stats.resident_bytes;
     }
 
     /// Record executor-only work (e.g. a post-processing pass on an
@@ -330,6 +372,7 @@ impl Metrics {
                 accepted: s.accepted,
                 rejected: s.rejected,
                 completed_batches: s.completed,
+                key_cache_bytes: s.key_cache_bytes,
             })
             .collect();
         MetricsSnapshot {
@@ -346,6 +389,11 @@ impl Metrics {
             last_budget_warning_level: m.last_budget_warning_level,
             noise_budget_bits: m.noise_budget_bits,
             trace_events: crate::obs::trace::event_count(),
+            key_cache_hits: m.key_cache_hits,
+            key_cache_misses: m.key_cache_misses,
+            key_cache_evictions: m.key_cache_evictions,
+            key_cache_regen_ns_total: m.key_cache_regen_ns_total,
+            key_cache_peak_bytes: m.key_cache_peak_bytes,
             shards,
             e2e,
             exec,
@@ -393,6 +441,17 @@ impl MetricsSnapshot {
         }
         if self.trace_events > 0 {
             s.push_str(&format!("\ntrace events    {}", self.trace_events));
+        }
+        if self.key_cache_hits + self.key_cache_misses > 0 {
+            let regen_ms = self.key_cache_regen_ns_total as f64 / 1e6;
+            s.push_str(&format!(
+                "\nkey cache       {} hits, {} misses, {} evictions, {:.2} ms regen, peak {:.1} KiB",
+                self.key_cache_hits,
+                self.key_cache_misses,
+                self.key_cache_evictions,
+                regen_ms,
+                self.key_cache_peak_bytes as f64 / 1024.0,
+            ));
         }
         for sh in &self.shards {
             s.push_str(&format!(
@@ -443,6 +502,26 @@ impl MetricsSnapshot {
             "Times the remaining-level budget hit the warning threshold.",
             self.budget_warnings,
         );
+        counter(
+            "presto_key_cache_hits_total",
+            "Rotation-key cache hits.",
+            self.key_cache_hits,
+        );
+        counter(
+            "presto_key_cache_misses_total",
+            "Rotation-key cache misses (lazy generations).",
+            self.key_cache_misses,
+        );
+        counter(
+            "presto_key_cache_evictions_total",
+            "Rotation keys evicted under the byte budget.",
+            self.key_cache_evictions,
+        );
+        counter(
+            "presto_key_cache_regen_ns_total",
+            "Nanoseconds spent generating or regenerating rotation keys.",
+            self.key_cache_regen_ns_total,
+        );
         let mut gauge = |name: &str, help: &str, v: u64| {
             out.push_str(&format!(
                 "# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}\n"
@@ -477,6 +556,11 @@ impl MetricsSnapshot {
             "presto_trace_events",
             "Request-trace events currently buffered.",
             self.trace_events,
+        );
+        gauge(
+            "presto_key_cache_peak_bytes",
+            "High-water mark of cache-resident rotation-key bytes.",
+            self.key_cache_peak_bytes,
         );
         out.push_str(&format!(
             "# HELP presto_noise_budget_bits Analytic noise budget remaining on the latest output.\n\
@@ -564,6 +648,16 @@ impl MetricsSnapshot {
                     s.shard, s.completed_batches
                 ));
             }
+            out.push_str(
+                "# HELP presto_key_cache_bytes Cache-resident rotation-key bytes seen per shard (shared store).\n\
+                 # TYPE presto_key_cache_bytes gauge\n",
+            );
+            for s in &self.shards {
+                out.push_str(&format!(
+                    "presto_key_cache_bytes{{shard=\"{}\"}} {}\n",
+                    s.shard, s.key_cache_bytes
+                ));
+            }
         }
         out
     }
@@ -598,6 +692,20 @@ impl MetricsSnapshot {
         );
         o.insert("noise_budget_bits".into(), num(self.noise_budget_bits));
         o.insert("trace_events".into(), num(self.trace_events as f64));
+        o.insert("key_cache_hits".into(), num(self.key_cache_hits as f64));
+        o.insert("key_cache_misses".into(), num(self.key_cache_misses as f64));
+        o.insert(
+            "key_cache_evictions".into(),
+            num(self.key_cache_evictions as f64),
+        );
+        o.insert(
+            "key_cache_regen_ns_total".into(),
+            num(self.key_cache_regen_ns_total as f64),
+        );
+        o.insert(
+            "key_cache_peak_bytes".into(),
+            num(self.key_cache_peak_bytes as f64),
+        );
         o.insert(
             "shards".into(),
             Json::Arr(
@@ -615,6 +723,7 @@ impl MetricsSnapshot {
                             "completed_batches".into(),
                             num(s.completed_batches as f64),
                         );
+                        sh.insert("key_cache_bytes".into(), num(s.key_cache_bytes as f64));
                         Json::Obj(sh)
                     })
                     .collect(),
@@ -729,6 +838,11 @@ mod tests {
             "presto_remaining_levels",
             "presto_e2e_latency_ns",
             "presto_key_memory_bytes",
+            "presto_key_cache_hits_total",
+            "presto_key_cache_misses_total",
+            "presto_key_cache_evictions_total",
+            "presto_key_cache_regen_ns_total",
+            "presto_key_cache_peak_bytes",
         ] {
             assert!(text.contains(name), "missing series {name}");
         }
@@ -809,6 +923,49 @@ mod tests {
             Some(1)
         );
         assert_eq!(shards[0].get("queue_cap").and_then(Json::as_u64), Some(4));
+    }
+
+    #[test]
+    fn key_cache_series_flow_to_every_surface() {
+        let m = Metrics::new();
+        m.init_shards(2, 4);
+        let stats = KeyStoreStats {
+            hits: 5,
+            misses: 3,
+            evictions: 1,
+            regen_ns_total: 2_000_000,
+            resident_bytes: 4096,
+            peak_resident_bytes: 8192,
+        };
+        m.observe_key_cache(0, 10_000, stats);
+        m.observe_key_cache(1, 10_000, stats);
+        let s = m.snapshot();
+        // Counters are set from the cumulative store stats, never summed
+        // across shards (both shards observe the same shared store).
+        assert_eq!(s.key_cache_hits, 5);
+        assert_eq!(s.key_cache_misses, 3);
+        assert_eq!(s.key_cache_evictions, 1);
+        assert_eq!(s.key_cache_peak_bytes, 8192);
+        assert_eq!(s.key_bytes, 10_000);
+        assert_eq!(s.shards[0].key_cache_bytes, 4096);
+        assert_eq!(s.shards[1].key_cache_bytes, 4096);
+        assert!(s.report(1.0).contains("key cache       5 hits, 3 misses, 1 evictions"));
+        let text = s.prometheus();
+        assert!(text.contains("presto_key_cache_bytes{shard=\"0\"} 4096"), "{text}");
+        assert!(text.contains("presto_key_cache_bytes{shard=\"1\"} 4096"), "{text}");
+        assert!(text.contains("presto_key_cache_hits_total 5"));
+        assert!(text.contains("presto_key_cache_evictions_total 1"));
+        let back = Json::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(back.get("key_cache_misses").and_then(Json::as_u64), Some(3));
+        assert_eq!(
+            back.get("key_cache_peak_bytes").and_then(Json::as_u64),
+            Some(8192)
+        );
+        let shards = back.get("shards").and_then(Json::as_arr).unwrap();
+        assert_eq!(
+            shards[0].get("key_cache_bytes").and_then(Json::as_u64),
+            Some(4096)
+        );
     }
 
     #[test]

@@ -15,7 +15,7 @@ use super::rngpool::RngPool;
 use crate::arith::Elem;
 use crate::bail;
 use crate::cipher::{build_cipher, SecretKey, StreamCipher};
-use crate::he::ckks::{Ciphertext as CkksCiphertext, CkksContext};
+use crate::he::ckks::{Ciphertext as CkksCiphertext, CkksContext, SecureKey};
 use crate::he::transcipher::{CkksCipherProfile, CkksTranscipher, StreamCursor};
 use crate::params::{CkksParams, ParamSet};
 use crate::rtf::RtfCodec;
@@ -416,10 +416,15 @@ pub struct TranscipherConfig {
     pub seed: u64,
     /// Session nonce (one symmetric-key stream per service instance).
     pub nonce: u64,
-    /// Rotation step counts to generate hoistable Galois keys for (used by
-    /// the post-transcipher slot linear layer). One hybrid Q·P key each —
-    /// O(L) memory per step, reported via [`Metrics`].
+    /// Rotation step counts the service is *authorized* to use (the
+    /// post-transcipher slot linear layer requests them through the lazy
+    /// [`KeyStore`](crate::he::ckks::KeyStore)). Keys materialize on first
+    /// use — one hybrid Q·P key each, O(L) memory per step, reported live
+    /// via [`Metrics`].
     pub rotations: Vec<usize>,
+    /// Rotation-key cache budget in bytes (0 = unbounded). See
+    /// [`CkksContextBuilder::key_cache_bytes`](crate::he::ckks::CkksContextBuilder::key_cache_bytes).
+    pub key_cache_bytes: u64,
 }
 
 impl Default for TranscipherConfig {
@@ -432,6 +437,7 @@ impl Default for TranscipherConfig {
             seed: 2026,
             nonce: 1000,
             rotations: Vec::new(),
+            key_cache_bytes: 0,
         }
     }
 }
@@ -450,6 +456,7 @@ impl TranscipherConfig {
                 seed: 2026,
                 nonce: 1000,
                 rotations: Vec::new(),
+                key_cache_bytes: 0,
             },
         }
     }
@@ -483,6 +490,13 @@ impl TranscipherConfigBuilder {
     /// Rotation step counts for hoistable Galois keys.
     pub fn rotations(mut self, steps: &[usize]) -> Self {
         self.cfg.rotations = steps.to_vec();
+        self
+    }
+
+    /// Rotation-key cache budget in bytes (0 = unbounded). Evicted keys
+    /// are regenerated deterministically from the seed on the next use.
+    pub fn key_cache_bytes(mut self, bytes: u64) -> Self {
+        self.cfg.key_cache_bytes = bytes;
         self
     }
 
@@ -533,7 +547,7 @@ pub struct TranscipherService {
     cfg: TranscipherConfig,
     ctx: CkksContext,
     server: CkksTranscipher,
-    sym_key: Vec<f64>,
+    sym_key: SecureKey<Vec<f64>>,
     metrics: Arc<Metrics>,
     cursor: StreamCursor,
 }
@@ -553,11 +567,12 @@ impl TranscipherService {
         let ctx = CkksContext::builder(cfg.ckks)
             .seed(cfg.seed)
             .rotations(&cfg.rotations)
+            .key_cache_bytes(cfg.key_cache_bytes)
             .build()
             .context("TranscipherService::start")?;
-        let sym_key = cfg.profile.sample_key(cfg.seed ^ 0x5359_4D4B); // "SYMK"
+        let sym_key = SecureKey::new(cfg.profile.sample_key(cfg.seed ^ 0x5359_4D4B)); // "SYMK"
         let mut rng = SplitMix64::new(cfg.seed ^ 0x454E_434B); // "ENCK"
-        let server = CkksTranscipher::setup(cfg.profile.clone(), &ctx, &sym_key, &mut rng)
+        let server = CkksTranscipher::setup(cfg.profile.clone(), &ctx, sym_key.expose(), &mut rng)
             .context("TranscipherService::start")?;
         let metrics = Arc::new(Metrics::new());
         metrics.set_key_bytes(ctx.switch_key_bytes());
@@ -572,8 +587,10 @@ impl TranscipherService {
         })
     }
 
-    /// Resident switching-key memory (relinearization + rotation keys) in
-    /// bytes — O(L) per Galois element under hybrid key switching.
+    /// Cache-resident switching-key memory (relinearization + currently
+    /// resident rotation keys) in bytes — O(L) per Galois element under
+    /// hybrid key switching. Live: lazy generation grows it, LRU eviction
+    /// shrinks it.
     pub fn key_memory_bytes(&self) -> u64 {
         self.ctx.switch_key_bytes()
     }
@@ -618,7 +635,7 @@ impl TranscipherService {
                 TranscipherBlock {
                     counter,
                     data: self.cfg.profile.encrypt_block(
-                        &self.sym_key,
+                        self.sym_key.expose(),
                         self.cfg.nonce,
                         counter,
                         &padded,
@@ -678,7 +695,12 @@ impl TranscipherService {
             levels_total: self.cfg.ckks.levels,
             nonce: self.cfg.nonce,
         };
-        execute_transcipher_batch(&exec, tr.id, t0, &counters, &sym)
+        let out = execute_transcipher_batch(&exec, tr.id, t0, &counters, &sym);
+        // Keep the key-memory gauge live: lazy generation and LRU eviction
+        // both move it between calls.
+        self.metrics
+            .observe_key_cache(0, self.ctx.switch_key_bytes(), self.ctx.key_store().stats());
+        out
     }
 
     /// Transcipher a batch and apply a cross-block slot linear layer
@@ -702,8 +724,11 @@ impl TranscipherService {
             .collect();
         let out = out?;
         // The batch itself was already counted by transcipher(); only the
-        // linear pass's key-switch wall time is added here.
+        // linear pass's key-switch wall time is added here. The linear pass
+        // is what faults rotation keys in, so refresh the key gauges after.
         self.metrics.record_exec(t0.elapsed().as_nanos() as u64);
+        self.metrics
+            .observe_key_cache(0, self.ctx.switch_key_bytes(), self.ctx.key_store().stats());
         Ok(out)
     }
 }
@@ -1085,12 +1110,15 @@ mod tests {
             .build()
             .unwrap();
         let mut svc = TranscipherService::start(cfg).unwrap();
-        // Key memory gauge: relin + 1 rotation key, surfaced in metrics.
+        // Key memory gauge at startup: relin only — rotation keys are lazy
+        // and none has been requested yet.
         assert_eq!(
             svc.metrics().snapshot().key_bytes,
             svc.key_memory_bytes()
         );
         assert!(svc.key_memory_bytes() > 0);
+        assert_eq!(svc.context().key_store().resident_bytes(), 0);
+        let key_bytes_at_start = svc.key_memory_bytes();
 
         let l = svc.profile().l;
         let blocks = 4usize;
@@ -1116,6 +1144,14 @@ mod tests {
                 );
             }
         }
+        // The linear pass faulted the step-1 rotation key in, and the gauge
+        // tracked it live (one hybrid key > the relin-only startup figure).
+        let snap = svc.metrics().snapshot();
+        assert!(snap.key_bytes > key_bytes_at_start, "{}", snap.key_bytes);
+        assert_eq!(snap.key_bytes, svc.key_memory_bytes());
+        assert_eq!(snap.key_cache_misses, 1);
+        assert!(snap.key_cache_hits >= 1); // l outputs share the one key
+
         // An unregistered rotation step errors through the serving path.
         let bad = vec![(3usize, vec![1.0; slots])];
         let err = svc.transcipher_linear(&wire, &bad).unwrap_err();
@@ -1138,6 +1174,7 @@ mod tests {
             seed: 1,
             nonce: 1,
             rotations: vec![],
+            key_cache_bytes: 0,
         };
         let err = match TranscipherService::start(cfg) {
             Err(e) => e,

@@ -12,17 +12,22 @@
 //!
 //! Sessions are pinned to shards by hashing the session id, so one
 //! session's stream stays FIFO on one worker while different sessions
-//! spread across the fleet. Every shard derives identical key material
-//! from the manager seed, which makes outputs bit-identical regardless of
-//! shard count — the property the serving tests pin.
+//! spread across the fleet. All shards share **one** read-only CKKS
+//! context (and its lazy [`crate::he::ckks::KeyStore`]) built once from
+//! the manager seed, which makes outputs bit-identical regardless of
+//! shard count — the property the serving tests pin — and keeps key
+//! residency O(1) in the shard count instead of O(K). The symmetric
+//! cipher key is held in a zeroize-on-drop
+//! [`SecureKey`](crate::he::ckks::SecureKey) and never appears in
+//! `Debug` or trace output.
 
 use super::metrics::Metrics;
 use super::shard::{Job, Shard, ShardQueue, SubmitError};
 use crate::bail;
-use crate::he::ckks::{Ciphertext as CkksCiphertext, CkksContext};
-use crate::he::transcipher::{CkksCipherProfile, StreamCursor};
+use crate::he::ckks::{Ciphertext as CkksCiphertext, CkksContext, SecureKey};
+use crate::he::transcipher::{CkksCipherProfile, CkksTranscipher, StreamCursor};
 use crate::params::CkksParams;
-use crate::util::error::Result;
+use crate::util::error::{Context, Result};
 use crate::util::rng::SplitMix64;
 use std::collections::HashSet;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
@@ -75,11 +80,30 @@ pub struct SessionConfig {
     /// Nonce base: session `id` streams under nonce `nonce_base + id`, so
     /// distinct sessions never share a keystream.
     pub nonce_base: u64,
+    /// Byte budget for resident rotation keys in the shared context's
+    /// [`crate::he::ckks::KeyStore`] (0 = unbounded). Evicted keys are
+    /// regenerated bit-identically on demand, so a tight budget trades
+    /// regen latency for memory without changing any output.
+    pub key_cache_bytes: u64,
 }
 
 impl SessionConfig {
     /// Validating builder with the smallest workable defaults (ring 64,
     /// one shard, queue capacity 16).
+    ///
+    /// ```
+    /// use presto::coordinator::SessionConfig;
+    /// use presto::he::transcipher::CkksCipherProfile;
+    ///
+    /// let cfg = SessionConfig::builder(CkksCipherProfile::rubato_toy())
+    ///     .shards(2)
+    ///     .queue_cap(8)
+    ///     .build()?;
+    /// assert_eq!(cfg.shards, 2);
+    /// assert_eq!(cfg.shed_watermark, 6); // defaults to 3/4 of the cap
+    /// assert!(cfg.ckks.levels >= cfg.profile.required_levels());
+    /// # Ok::<(), presto::util::error::Error>(())
+    /// ```
     pub fn builder(profile: CkksCipherProfile) -> SessionConfigBuilder {
         SessionConfigBuilder {
             profile,
@@ -91,6 +115,7 @@ impl SessionConfig {
             output_level: 0,
             nonce_base: 1000,
             threads: None,
+            key_cache_bytes: 0,
         }
     }
 }
@@ -107,6 +132,7 @@ pub struct SessionConfigBuilder {
     output_level: usize,
     nonce_base: u64,
     threads: Option<usize>,
+    key_cache_bytes: u64,
 }
 
 impl SessionConfigBuilder {
@@ -159,6 +185,14 @@ impl SessionConfigBuilder {
         self
     }
 
+    /// Byte budget for resident rotation keys in the shared key store
+    /// (0 = unbounded; budgets below one key are rejected at context
+    /// build time).
+    pub fn key_cache_bytes(mut self, bytes: u64) -> Self {
+        self.key_cache_bytes = bytes;
+        self
+    }
+
     /// Validate and produce the configuration.
     pub fn build(self) -> Result<SessionConfig> {
         if self.shards == 0 {
@@ -202,6 +236,7 @@ impl SessionConfigBuilder {
             shed_watermark,
             output_level: self.output_level,
             nonce_base: self.nonce_base,
+            key_cache_bytes: self.key_cache_bytes,
         })
     }
 }
@@ -212,7 +247,7 @@ impl SessionConfigBuilder {
 pub struct SessionManager {
     cfg: SessionConfig,
     shards: Vec<Shard>,
-    sym_key: Arc<Vec<f64>>,
+    sym_key: Arc<SecureKey<Vec<f64>>>,
     metrics: Arc<Metrics>,
     /// Session ids currently open — duplicate ids are rejected because a
     /// reused id would reuse the session nonce (keystream reuse).
@@ -220,9 +255,11 @@ pub struct SessionManager {
 }
 
 impl SessionManager {
-    /// Build every shard's CKKS context + encrypted-key engine (identical
-    /// key material per shard, derived from `cfg.seed`) and start the
-    /// worker fleet.
+    /// Build **one** shared CKKS context + encrypted-key engine
+    /// (deterministic from `cfg.seed`) and start the worker fleet over
+    /// it. Key material is resident once, not once per shard; the lazy
+    /// key store materializes rotation keys on first use within
+    /// `cfg.key_cache_bytes`.
     pub fn start(cfg: SessionConfig) -> Result<SessionManager> {
         let need = cfg.profile.required_levels() + cfg.output_level;
         if cfg.shards == 0 {
@@ -248,22 +285,41 @@ impl SessionManager {
         }
         let metrics = Arc::new(Metrics::new());
         metrics.init_shards(cfg.shards, cfg.queue_cap);
-        let sym_key = Arc::new(cfg.profile.sample_key(cfg.seed ^ 0x5359_4D4B)); // "SYMK"
+        let sym_key = Arc::new(SecureKey::new(
+            cfg.profile.sample_key(cfg.seed ^ 0x5359_4D4B), // "SYMK"
+        ));
+        // One context + one encrypted-key engine for the whole fleet:
+        // keygen and the key upload run once, and every shard shares the
+        // same read-only Arc (the key store inside is interior-mutable).
+        let ctx = Arc::new(
+            CkksContext::builder(cfg.ckks)
+                .seed(cfg.seed)
+                .key_cache_bytes(cfg.key_cache_bytes)
+                .build()
+                .context("shared serving context")?,
+        );
+        let mut rng = SplitMix64::new(cfg.seed ^ 0x454E_434B); // "ENCK"
+        let engine = Arc::new(
+            CkksTranscipher::setup(cfg.profile.clone(), &ctx, sym_key.expose(), &mut rng)
+                .context("shared key upload")?,
+        );
         let mut shards = Vec::with_capacity(cfg.shards);
         for k in 0..cfg.shards {
             shards.push(Shard::start(
                 k,
-                cfg.profile.clone(),
-                cfg.ckks,
-                cfg.seed,
-                &sym_key,
+                Arc::clone(&ctx),
+                Arc::clone(&engine),
+                cfg.ckks.levels,
                 cfg.queue_cap,
                 cfg.shed_watermark,
                 Arc::clone(&metrics),
             )?);
         }
-        let key_bytes: u64 = shards.iter().map(|s| s.context().switch_key_bytes()).sum();
-        metrics.set_key_bytes(key_bytes);
+        // Live, single-copy accounting: the shared store holds the only
+        // resident key material, regardless of shard count.
+        for k in 0..cfg.shards {
+            metrics.observe_key_cache(k, ctx.switch_key_bytes(), ctx.key_store().stats());
+        }
         Ok(SessionManager {
             cfg,
             shards,
@@ -339,8 +395,8 @@ impl SessionManager {
         self.shards[0].context().slots()
     }
 
-    /// The CKKS context (shard 0's — all shards hold bit-identical key
-    /// material, so this is *the* decryption context for tests/examples).
+    /// The shared CKKS context (every shard holds the same `Arc`; this is
+    /// *the* decryption context for tests/examples).
     pub fn context(&self) -> &Arc<CkksContext> {
         self.shards[0].context()
     }
@@ -370,7 +426,7 @@ pub struct TranscipherSession {
     shard: usize,
     capacity: usize,
     profile: CkksCipherProfile,
-    sym_key: Arc<Vec<f64>>,
+    sym_key: Arc<SecureKey<Vec<f64>>>,
     cursor: StreamCursor,
     queue: Arc<ShardQueue>,
     tx: Sender<Result<CompletedBatch>>,
@@ -452,7 +508,7 @@ impl TranscipherSession {
                 let mut padded = m.clone();
                 padded.resize(l, 0.0);
                 self.profile
-                    .encrypt_block(&self.sym_key, nonce, counter, &padded)
+                    .encrypt_block(self.sym_key.expose(), nonce, counter, &padded)
             })
             .collect();
         let tr = crate::obs::trace::mint_for_session(self.id);

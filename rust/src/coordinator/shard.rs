@@ -2,12 +2,16 @@
 //! CKKS worker pools, each owning one context + encrypted-key engine and a
 //! bounded job queue with explicit backpressure.
 //!
-//! Replaces the single executor thread for transcipher serving. Every
-//! shard builds its own [`CkksContext`] (once, at startup) from the *same*
-//! seed, so the encrypted symmetric key — and therefore every transcipher
-//! output — is bit-identical no matter which shard executes a batch;
-//! sessions are pinned to shards by hashing the session id (see
-//! [`super::session::SessionManager::shard_of`]) for key/nonce locality.
+//! Replaces the single executor thread for transcipher serving. All
+//! shards of a manager share **one** read-only [`CkksContext`] and one
+//! encrypted-key engine (`Arc`-cloned into each worker, built once by
+//! [`super::session::SessionManager::start`]): the context's lazy
+//! [`crate::he::ckks::KeyStore`] is interior-mutable behind `&self`, so
+//! key residency is paid once per fleet instead of once per shard, and
+//! every transcipher output is bit-identical no matter which shard
+//! executes a batch; sessions are pinned to shards by hashing the session
+//! id (see [`super::session::SessionManager::shard_of`]) for key/nonce
+//! locality.
 //!
 //! Backpressure is explicit and typed: [`ShardQueue::push`] never blocks.
 //! A full queue rejects with [`SubmitError::QueueFull`]; a load-shedding
@@ -23,10 +27,8 @@ use super::metrics::Metrics;
 use super::server::{execute_transcipher_batch, BatchExec};
 use super::session::{CompletedBatch, Ticket};
 use crate::he::ckks::CkksContext;
-use crate::he::transcipher::{CkksCipherProfile, CkksTranscipher};
-use crate::params::CkksParams;
-use crate::util::error::{Context, Error, Result};
-use crate::util::rng::SplitMix64;
+use crate::he::transcipher::CkksTranscipher;
+use crate::util::error::{Error, Result};
 use std::collections::VecDeque;
 use std::fmt;
 use std::sync::mpsc::Sender;
@@ -262,9 +264,9 @@ impl ShardQueue {
     }
 }
 
-/// One worker pool: a CKKS context + encrypted-key transcipher engine built
-/// once at startup, a bounded queue, and a worker thread executing batches
-/// FIFO and replying to the owning sessions.
+/// One worker pool: a handle on the manager's shared CKKS context +
+/// encrypted-key engine, a bounded queue, and a worker thread executing
+/// batches FIFO and replying to the owning sessions.
 pub struct Shard {
     index: usize,
     queue: Arc<ShardQueue>,
@@ -273,32 +275,20 @@ pub struct Shard {
 }
 
 impl Shard {
-    /// Build the shard's context and engine (deterministic from `seed`, so
-    /// every shard of a manager holds bit-identical key material) and spawn
-    /// its worker thread.
+    /// Spawn a worker over the manager's **shared** context and engine.
+    /// Keygen and the encrypted-key upload happen once, in
+    /// [`super::session::SessionManager::start`] — not per shard — so K
+    /// shards hold one copy of the switching-key material, not K.
     pub(crate) fn start(
         index: usize,
-        profile: CkksCipherProfile,
-        ckks: CkksParams,
-        seed: u64,
-        sym_key: &[f64],
+        ctx: Arc<CkksContext>,
+        engine: Arc<CkksTranscipher>,
+        levels_total: usize,
         queue_cap: usize,
         watermark: usize,
         metrics: Arc<Metrics>,
     ) -> Result<Shard> {
-        let ctx = Arc::new(
-            CkksContext::builder(ckks)
-                .seed(seed)
-                .build()
-                .with_context(|| format!("shard {index} context"))?,
-        );
-        let mut rng = SplitMix64::new(seed ^ 0x454E_434B); // "ENCK"
-        let engine = Arc::new(
-            CkksTranscipher::setup(profile, &ctx, sym_key, &mut rng)
-                .with_context(|| format!("shard {index} key upload"))?,
-        );
         let queue = Arc::new(ShardQueue::new(index, queue_cap, watermark));
-        let levels_total = ckks.levels;
         let worker = {
             let ctx = Arc::clone(&ctx);
             let queue = Arc::clone(&queue);
@@ -319,7 +309,7 @@ impl Shard {
         self.index
     }
 
-    /// The shard's CKKS context (identical across a manager's shards).
+    /// The manager's shared CKKS context (the same `Arc` in every shard).
     pub fn context(&self) -> &Arc<CkksContext> {
         &self.ctx
     }
@@ -387,6 +377,9 @@ fn shard_loop(
                 .map_err(|e| e.wrap(format!("shard {index}")));
         // Delivered (success or typed failure) — the no-drops guarantee.
         metrics.record_shard_batch(index);
+        // Live key residency: lazy materialization / LRU eviction may have
+        // moved the resident byte count during this batch.
+        metrics.observe_key_cache(index, ctx.switch_key_bytes(), ctx.key_store().stats());
         let _ = job.reply.send(result);
         metrics.observe_shard_depth(index, queue.depth());
     }

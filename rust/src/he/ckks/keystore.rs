@@ -1,0 +1,427 @@
+//! Fleet-scale Galois-key lifecycle: lazy keygen, LRU residency, secret
+//! hygiene.
+//!
+//! Hybrid switching keys are the dominant memory consumer of the serving
+//! stack: each rotation target costs `(L+1) · 2 · (L+2) · N · 8` bytes
+//! (one [`super::KeyDigit`] per chain prime, two polynomials each, over
+//! Q_L·P). A fleet serving millions of sessions cannot pin every
+//! session's full rotation set, so this module replaces the eager
+//! `BTreeMap<step, RotKey>` of earlier revisions with a [`KeyStore`]:
+//!
+//! * **Lazy generation** — building a context declares which rotation
+//!   steps are *allowed* (the authorization set) but materializes no
+//!   rotation keys. The first rotation by step `r` generates its key on
+//!   demand; undeclared steps fail with the same typed error as before.
+//! * **Bounded residency** — an optional byte budget turns the store
+//!   into an LRU over rotation keys: before a miss materializes a key,
+//!   least-recently-used keys are evicted until the newcomer fits, so
+//!   resident rotation-key bytes never exceed the budget. Evicted keys
+//!   are regenerated **bit-identically** on their next use (see below),
+//!   so eviction is invisible to ciphertext outputs — only latency and
+//!   the hit/miss/eviction counters move.
+//! * **Deterministic regeneration** — each rotation step draws from its
+//!   own seed-derived randomness streams (a per-step [`SplitMix64`] and
+//!   a per-step AES-CTR XOF counter), independent of generation order.
+//!   Generating step 5 first or after a hundred evictions of step 1
+//!   yields the same key bytes, which is what makes LRU eviction safe
+//!   under a shared, concurrently-used store.
+//! * **Secret hygiene** — the keygen seed and the ternary secret
+//!   coefficients the store regenerates from live in [`SecureKey`]
+//!   containers that clear themselves on drop and never print their
+//!   contents through `Debug` (so they cannot leak into logs or
+//!   Chrome-trace exports).
+//!
+//! The store is interior-mutable behind a poison-tolerant [`Mutex`]: the
+//! rotation hot path takes `&self`, so one store can be shared read-only
+//! (`Arc<CkksContext>`) across every shard and session of a
+//! `SessionManager` instead of being cloned per shard.
+
+use super::super::rns::{RnsBasis, RnsPolyExt};
+use super::{galois_element, galois_inverse, make_switch_key, RotKey};
+use crate::sampler::DiscreteGaussian;
+use crate::util::error::{Error, Result};
+use crate::util::rng::SplitMix64;
+use crate::xof::XofKind;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Instant;
+
+/// Domain-separation constant mixed into the per-step RNG seed so the
+/// rotation-key streams never overlap the keygen stream for `s`/relin
+/// (which uses the raw seed) or the encryption stream.
+const ROT_RNG_DOMAIN: u64 = 0x524F_544B_0000_0000; // "ROTK" << 32
+
+/// Best-effort in-place clearing of secret material.
+///
+/// Implementations overwrite their buffer with zeros and launder the
+/// result through [`std::hint::black_box`] so the writes are observable
+/// and not elided as dead stores. This is the strongest guarantee
+/// available in safe, dependency-free Rust; a hardened build would add
+/// `write_volatile` + `mlock` (the secrets-service `SecureKey` pattern)
+/// behind a feature gate.
+pub trait Zeroize {
+    /// Overwrite the secret content with zeros.
+    fn zeroize(&mut self);
+}
+
+impl Zeroize for u64 {
+    fn zeroize(&mut self) {
+        *self = 0;
+        std::hint::black_box(self);
+    }
+}
+
+impl Zeroize for Vec<i64> {
+    fn zeroize(&mut self) {
+        for v in self.iter_mut() {
+            *v = 0;
+        }
+        std::hint::black_box(self.as_mut_slice());
+    }
+}
+
+impl Zeroize for Vec<u64> {
+    fn zeroize(&mut self) {
+        for v in self.iter_mut() {
+            *v = 0;
+        }
+        std::hint::black_box(self.as_mut_slice());
+    }
+}
+
+impl Zeroize for Vec<f64> {
+    fn zeroize(&mut self) {
+        for v in self.iter_mut() {
+            *v = 0.0;
+        }
+        std::hint::black_box(self.as_mut_slice());
+    }
+}
+
+/// A container for secret material that zeroizes on drop and redacts
+/// itself from `Debug` output.
+///
+/// Holds keygen seeds, ternary secret coefficients and symmetric cipher
+/// keys. Access goes through [`SecureKey::expose`], which keeps every
+/// read of the secret greppable; `Debug` prints a fixed redaction
+/// marker, so a `SecureKey` embedded in any struct that derives `Debug`
+/// (or is formatted into a trace/log line) cannot leak its contents.
+///
+/// ```
+/// use presto::he::ckks::SecureKey;
+/// let key = SecureKey::new(vec![42i64, -7]);
+/// assert_eq!(key.expose(), &[42, -7]);
+/// assert_eq!(format!("{key:?}"), "SecureKey(<redacted>)");
+/// ```
+pub struct SecureKey<T: Zeroize> {
+    value: T,
+}
+
+impl<T: Zeroize> SecureKey<T> {
+    /// Take ownership of secret material.
+    pub fn new(value: T) -> Self {
+        SecureKey { value }
+    }
+
+    /// Borrow the secret. Every call site of this method is a place the
+    /// secret is deliberately read.
+    pub fn expose(&self) -> &T {
+        &self.value
+    }
+
+    /// Clear the secret in place (what [`Drop`] does, exposed so tests
+    /// can assert the wipe without reading freed memory).
+    pub fn wipe(&mut self) {
+        self.value.zeroize();
+    }
+}
+
+impl<T: Zeroize> Drop for SecureKey<T> {
+    fn drop(&mut self) {
+        self.wipe();
+    }
+}
+
+impl<T: Zeroize> std::fmt::Debug for SecureKey<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("SecureKey(<redacted>)")
+    }
+}
+
+/// Cumulative counters of a [`KeyStore`], cheap to copy out under the
+/// lock and feed into the metrics registry.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KeyStoreStats {
+    /// Rotation-key lookups served from the resident cache.
+    pub hits: u64,
+    /// Lookups that had to generate (or regenerate) the key.
+    pub misses: u64,
+    /// Keys evicted to stay under the byte budget.
+    pub evictions: u64,
+    /// Total nanoseconds spent generating keys on the miss path.
+    pub regen_ns_total: u64,
+    /// Rotation-key bytes currently resident in the cache.
+    pub resident_bytes: u64,
+    /// High-water mark of `resident_bytes` over the store's lifetime.
+    pub peak_resident_bytes: u64,
+}
+
+impl KeyStoreStats {
+    /// Mean key-generation latency on the miss path, in nanoseconds
+    /// (0 when no key has been generated yet).
+    pub fn regen_mean_ns(&self) -> f64 {
+        if self.misses == 0 {
+            0.0
+        } else {
+            self.regen_ns_total as f64 / self.misses as f64
+        }
+    }
+}
+
+/// LRU-ordered resident keys plus the cumulative counters, everything
+/// the lock protects.
+struct StoreInner {
+    /// Resident keys by rotation step.
+    resident: BTreeMap<usize, Arc<RotKey>>,
+    /// Recency order: front = least recently used, back = most recent.
+    order: VecDeque<usize>,
+    stats: KeyStoreStats,
+}
+
+/// Lazy, byte-bounded, shareable store of Galois rotation keys.
+///
+/// Constructed by [`super::CkksContext::builder`]; read through
+/// [`super::CkksContext::key_store`]. See the [module docs](self) for
+/// the lifecycle design.
+///
+/// ```
+/// use presto::params::CkksParams;
+/// use presto::he::ckks::CkksContext;
+///
+/// let ctx = CkksContext::builder(CkksParams::with_shape(32, 3))
+///     .seed(7)
+///     .rotations(&[1, 2]) // authorization set: no keys materialized yet
+///     .build()?;
+/// let store = ctx.key_store();
+/// assert_eq!(store.stats().misses, 0);
+/// assert_eq!(store.resident_bytes(), 0);
+/// assert_eq!(store.declared_steps(), vec![1, 2]);
+/// # Ok::<(), presto::util::error::Error>(())
+/// ```
+pub struct KeyStore {
+    basis: Arc<RnsBasis>,
+    n: usize,
+    sigma: f64,
+    /// Keygen seed; secret because the whole key schedule (including the
+    /// ternary secret itself) derives from it.
+    seed: SecureKey<u64>,
+    /// Ternary secret coefficients, kept to rebuild `s(X)` extended to
+    /// Q_L·P on every (re)generation.
+    s_coeffs: SecureKey<Vec<i64>>,
+    /// Declared rotation steps and their Galois elements — the
+    /// authorization set; lookups outside it are typed errors.
+    allowed: BTreeMap<usize, usize>,
+    /// Rotation-key byte budget; 0 = unbounded.
+    budget_bytes: u64,
+    /// Size of one materialized rotation key, known a priori.
+    per_key_bytes: u64,
+    inner: Mutex<StoreInner>,
+}
+
+impl KeyStore {
+    /// Build a store over the declared rotation `steps`. Called by the
+    /// context builder after parameter validation (which also enforces
+    /// `budget_bytes == 0 || budget_bytes >= per_key_bytes`).
+    pub(crate) fn new(
+        basis: Arc<RnsBasis>,
+        n: usize,
+        sigma: f64,
+        seed: u64,
+        s_coeffs: Vec<i64>,
+        steps: &[usize],
+        budget_bytes: u64,
+    ) -> KeyStore {
+        let allowed: BTreeMap<usize, usize> =
+            steps.iter().map(|&r| (r, galois_element(n, r))).collect();
+        let per_key_bytes = Self::per_key_bytes_for(&basis, n);
+        KeyStore {
+            basis,
+            n,
+            sigma,
+            seed: SecureKey::new(seed),
+            s_coeffs: SecureKey::new(s_coeffs),
+            allowed,
+            budget_bytes,
+            per_key_bytes,
+            inner: Mutex::new(StoreInner {
+                resident: BTreeMap::new(),
+                order: VecDeque::new(),
+                stats: KeyStoreStats::default(),
+            }),
+        }
+    }
+
+    /// Bytes of one materialized rotation key under `basis`:
+    /// `(L+1) digits × 2 polys × (L+2) rows × N × 8`.
+    pub(crate) fn per_key_bytes_for(basis: &RnsBasis, n: usize) -> u64 {
+        let top = basis.max_level() as u64;
+        (top + 1) * 2 * (top + 2) * n as u64 * 8
+    }
+
+    /// The configured rotation-key byte budget (0 = unbounded).
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget_bytes
+    }
+
+    /// Bytes one rotation key occupies when resident.
+    pub fn per_key_bytes(&self) -> u64 {
+        self.per_key_bytes
+    }
+
+    /// The declared (authorized) rotation steps, sorted.
+    pub fn declared_steps(&self) -> Vec<usize> {
+        self.allowed.keys().copied().collect()
+    }
+
+    /// Rotation-key bytes currently resident.
+    pub fn resident_bytes(&self) -> u64 {
+        self.lock().stats.resident_bytes
+    }
+
+    /// Whether the key for `steps` is materialized right now (it may be
+    /// evicted and regenerated later; outputs do not depend on this).
+    pub fn is_resident(&self, steps: usize) -> bool {
+        self.lock().resident.contains_key(&steps)
+    }
+
+    /// Snapshot of the cumulative hit/miss/eviction/latency counters.
+    pub fn stats(&self) -> KeyStoreStats {
+        self.lock().stats
+    }
+
+    /// Poison-tolerant lock: a panicked holder cannot have left the LRU
+    /// bookkeeping half-updated in a way that corrupts key *contents*
+    /// (keys are immutable once built), so serving keys beats poisoning
+    /// every subsequent rotation.
+    fn lock(&self) -> MutexGuard<'_, StoreInner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Fetch the rotation key for `steps`, generating it on first use
+    /// and regenerating it bit-identically after an eviction. Returns
+    /// the same typed error as the eager design for undeclared steps.
+    pub(crate) fn rotation_key(&self, steps: usize) -> Result<Arc<RotKey>> {
+        let mut inner = self.lock();
+        if let Some(key) = inner.resident.get(&steps) {
+            let key = Arc::clone(key);
+            inner.stats.hits += 1;
+            // Refresh recency: move the step to the MRU end.
+            if let Some(pos) = inner.order.iter().position(|&s| s == steps) {
+                inner.order.remove(pos);
+            }
+            inner.order.push_back(steps);
+            return Ok(key);
+        }
+        let galois = *self.allowed.get(&steps).ok_or_else(|| {
+            Error::msg(format!(
+                "no rotation key for step {steps} (keys exist for {:?})",
+                self.declared_steps()
+            ))
+        })?;
+        inner.stats.misses += 1;
+        // Evict-before-generate: the newcomer's size is known a priori,
+        // so resident bytes never overshoot the budget, even transiently.
+        if self.budget_bytes > 0 {
+            while inner.stats.resident_bytes + self.per_key_bytes > self.budget_bytes {
+                let Some(lru) = inner.order.pop_front() else {
+                    break;
+                };
+                if inner.resident.remove(&lru).is_some() {
+                    inner.stats.resident_bytes -= self.per_key_bytes;
+                    inner.stats.evictions += 1;
+                }
+            }
+        }
+        // Generation happens under the lock: concurrent misses for the
+        // same step would otherwise race to duplicate work, and hits are
+        // cheap enough that the serialized window is the regen itself.
+        let t0 = Instant::now();
+        let key = Arc::new(self.generate(steps, galois));
+        inner.stats.regen_ns_total += t0.elapsed().as_nanos() as u64;
+        inner.resident.insert(steps, Arc::clone(&key));
+        inner.order.push_back(steps);
+        inner.stats.resident_bytes += self.per_key_bytes;
+        inner.stats.peak_resident_bytes =
+            inner.stats.peak_resident_bytes.max(inner.stats.resident_bytes);
+        Ok(key)
+    }
+
+    /// Deterministically (re)generate the key for one rotation step from
+    /// per-step randomness streams: the RNG seed and the XOF counter are
+    /// both derived from (keygen seed, step), never from generation
+    /// order, so the first generation and every post-eviction
+    /// regeneration produce identical bytes. The XOF counter space is
+    /// partitioned as: 0 = s/relin keygen, `1 + step` = rotation keys.
+    fn generate(&self, steps: usize, galois: usize) -> RotKey {
+        let seed = *self.seed.expose();
+        let mut rng = SplitMix64::new(seed ^ ROT_RNG_DOMAIN ^ steps as u64);
+        let mut dgd = DiscreteGaussian::new(self.sigma);
+        let mut xof = XofKind::AesCtr.instantiate(seed ^ 0x434B_4B53, 1 + steps as u64);
+        let top = self.basis.max_level();
+        let s_ext = RnsPolyExt::from_i64_coeffs(&self.basis, self.s_coeffs.expose(), top);
+        let sg_ext = s_ext.automorphism(galois);
+        let key = make_switch_key(
+            &self.basis,
+            &s_ext,
+            &sg_ext,
+            Some(galois_inverse(galois, self.n)),
+            &mut rng,
+            &mut dgd,
+            xof.as_mut(),
+        );
+        RotKey { galois, key }
+    }
+}
+
+impl std::fmt::Debug for KeyStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // Seed and secret coefficients are SecureKeys and stay redacted.
+        f.debug_struct("KeyStore")
+            .field("declared", &self.declared_steps())
+            .field("budget_bytes", &self.budget_bytes)
+            .field("per_key_bytes", &self.per_key_bytes)
+            .field("stats", &self.stats())
+            .finish_non_exhaustive()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn secure_key_wipes_and_redacts() {
+        let mut k = SecureKey::new(vec![3i64, -1, 7]);
+        assert_eq!(format!("{k:?}"), "SecureKey(<redacted>)");
+        k.wipe();
+        assert_eq!(k.expose(), &[0, 0, 0]);
+        let mut s = SecureKey::new(0xDEAD_BEEFu64);
+        s.wipe();
+        assert_eq!(*s.expose(), 0);
+        let mut f = SecureKey::new(vec![1.5f64, -2.5]);
+        f.wipe();
+        assert_eq!(f.expose(), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn stats_mean_handles_zero_misses() {
+        let s = KeyStoreStats::default();
+        assert_eq!(s.regen_mean_ns(), 0.0);
+        let s = KeyStoreStats {
+            misses: 4,
+            regen_ns_total: 100,
+            ..KeyStoreStats::default()
+        };
+        assert_eq!(s.regen_mean_ns(), 25.0);
+    }
+}

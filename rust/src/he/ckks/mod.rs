@@ -17,6 +17,13 @@
 //!   the working scale. One key works at every level because the gadget
 //!   congruence `Σ_i [d]_{q_i}·q̃_i ≡ d` holds modulo each prime
 //!   individually; no per-level key ladder, no base-2^w digit splitting.
+//! * Key lifecycle ([`keystore`]): rotation keys are **not** materialized
+//!   at build time. `builder().rotations(&[..])` declares the authorized
+//!   step set; the [`KeyStore`] generates each key lazily on first use
+//!   from per-step deterministic streams, optionally bounds resident
+//!   rotation-key bytes with an LRU (`.key_cache_bytes(budget)`), and
+//!   regenerates evicted keys bit-identically on their next use. Secret
+//!   keygen material is held in zeroize-on-drop [`SecureKey`] containers.
 //! * Ciphertext ops: add/sub (with physical scale realignment on drift),
 //!   plaintext add/mul, small-integer scalar mul, ciphertext mul with
 //!   relinearization, rescale, and slot rotations via the Galois
@@ -47,9 +54,11 @@
 //! every slot by the drift with no diagnostic.
 
 pub mod encoder;
+pub mod keystore;
 pub mod noise;
 
 pub use encoder::{Complex, Encoder};
+pub use keystore::{KeyStore, KeyStoreStats, SecureKey, Zeroize};
 pub use noise::NoiseBudget;
 
 use super::rns::{RnsBasis, RnsPoly, RnsPolyExt};
@@ -60,7 +69,6 @@ use crate::util::error::{Error, Result};
 use crate::util::par;
 use crate::util::rng::SplitMix64;
 use crate::xof::{Xof, XofKind};
-use std::collections::BTreeMap;
 use std::sync::Arc;
 
 /// An encoded (unencrypted) polynomial with its scale.
@@ -125,7 +133,7 @@ impl Ciphertext {
 /// `b = -(a·s + e) + P·q̃_i·target`, held row-wise in the NTT domain so the
 /// hot path is pointwise multiply-accumulate (keys are NTT'd once at
 /// keygen, never again).
-struct KeyDigit {
+pub(crate) struct KeyDigit {
     b_rows: Vec<Vec<u64>>,
     b_prow: Vec<u64>,
     a_rows: Vec<Vec<u64>>,
@@ -135,7 +143,7 @@ struct KeyDigit {
 /// A hybrid switching key: one [`KeyDigit`] per chain prime — O(L)
 /// components over the fixed modulus Q_L·P, usable at every level (the
 /// per-level key ladder of the previous design is gone).
-struct SwitchKey {
+pub(crate) struct SwitchKey {
     digits: Vec<KeyDigit>,
 }
 
@@ -163,9 +171,9 @@ impl SwitchKey {
 /// s(X^g) → s, stored **inverse-rotated** (φ_g^{-1} applied to both key
 /// polynomials at keygen) so hoisted application can multiply the
 /// un-rotated digits and apply φ_g once to the accumulated result.
-struct RotKey {
-    galois: usize,
-    key: SwitchKey,
+pub(crate) struct RotKey {
+    pub(crate) galois: usize,
+    pub(crate) key: SwitchKey,
 }
 
 /// One decomposed digit extended to Q_l·P: (chain rows, P row), NTT domain.
@@ -197,7 +205,7 @@ pub struct CkksContext {
     encoder: Encoder,
     s: RnsPoly,
     relin: SwitchKey,
-    rot_keys: BTreeMap<usize, RotKey>,
+    keys: KeyStore,
 }
 
 /// Galois element for a left-rotation by `steps` slots: 5^steps mod 2N.
@@ -207,7 +215,7 @@ pub fn galois_element(n: usize, steps: usize) -> usize {
 
 /// Inverse of an odd Galois element modulo 2N: the unit group of Z_{2N}
 /// (N a power of two ≥ 4) has exponent 2N/4, so g^{2N/4 − 1} = g^{-1}.
-fn galois_inverse(g: usize, n: usize) -> usize {
+pub(crate) fn galois_inverse(g: usize, n: usize) -> usize {
     let m = 2 * n as u64;
     debug_assert!(n >= 4 && g % 2 == 1);
     mod_pow64(g as u64, m / 4 - 1, m) as usize
@@ -248,7 +256,7 @@ fn gaussian_rns(
 /// Generate a hybrid switching key for `target` (s², or s(X^g) for
 /// rotations). `inv_galois` = Some(g^{-1}) stores the key inverse-rotated
 /// for hoisted application.
-fn make_switch_key(
+pub(crate) fn make_switch_key(
     basis: &Arc<RnsBasis>,
     s_ext: &RnsPolyExt,
     target: &RnsPolyExt,
@@ -323,6 +331,7 @@ pub struct CkksContextBuilder {
     params: CkksParams,
     seed: u64,
     rotations: Vec<usize>,
+    key_cache_bytes: u64,
 }
 
 impl CkksContextBuilder {
@@ -332,9 +341,23 @@ impl CkksContextBuilder {
         self
     }
 
-    /// Left-rotation step counts to generate rotation keys for.
+    /// Left-rotation step counts this context is authorized to rotate by.
+    /// No rotation key is materialized here: the [`KeyStore`] generates
+    /// each declared step's key lazily on first use. Undeclared steps
+    /// stay typed errors at rotation time.
     pub fn rotations(mut self, steps: &[usize]) -> Self {
         self.rotations = steps.to_vec();
+        self
+    }
+
+    /// Byte budget for resident rotation keys (default 0 = unbounded).
+    /// A non-zero budget turns the key store into an LRU: before a miss
+    /// materializes a key, least-recently-used keys are evicted until
+    /// the newcomer fits, and evicted keys are regenerated
+    /// bit-identically on their next use. `build()` rejects budgets
+    /// smaller than one key (use 0 for unbounded instead).
+    pub fn key_cache_bytes(mut self, bytes: u64) -> Self {
+        self.key_cache_bytes = bytes;
         self
     }
 
@@ -361,6 +384,15 @@ impl CkksContextBuilder {
         // the fan-out is over data the RNG never touches, so keys are
         // identical at any thread count.
         basis.set_threads(params.threads);
+        let per_key = KeyStore::per_key_bytes_for(&basis, params.n);
+        if self.key_cache_bytes != 0 && self.key_cache_bytes < per_key {
+            return Err(Error::msg(format!(
+                "key cache budget {} B is below one rotation key ({per_key} B); \
+                 use 0 for an unbounded store",
+                self.key_cache_bytes
+            ))
+            .wrap("CkksContext::builder"));
+        }
         let encoder = Encoder::new(params.n);
         let mut rng = SplitMix64::new(self.seed);
         let mut dgd = DiscreteGaussian::new(params.sigma);
@@ -379,28 +411,25 @@ impl CkksContextBuilder {
             &mut dgd,
             xof.as_mut(),
         );
-        let mut rot_keys = BTreeMap::new();
-        for r in self.rotations {
-            let g = galois_element(params.n, r);
-            let sg_ext = s_ext.automorphism(g);
-            let key = make_switch_key(
-                &basis,
-                &s_ext,
-                &sg_ext,
-                Some(galois_inverse(g, params.n)),
-                &mut rng,
-                &mut dgd,
-                xof.as_mut(),
-            );
-            rot_keys.insert(r, RotKey { galois: g, key });
-        }
+        // Rotation keys are NOT generated here: the store materializes
+        // each declared step lazily from its own per-step streams, so a
+        // context declaring a thousand steps costs nothing until rotated.
+        let keys = KeyStore::new(
+            Arc::clone(&basis),
+            params.n,
+            params.sigma,
+            self.seed,
+            s_coeffs,
+            &self.rotations,
+            self.key_cache_bytes,
+        );
         Ok(CkksContext {
             params,
             basis,
             encoder,
             s,
             relin,
-            rot_keys,
+            keys,
         })
     }
 }
@@ -412,6 +441,7 @@ impl CkksContext {
             params,
             seed: 0,
             rotations: Vec::new(),
+            key_cache_bytes: 0,
         }
     }
 
@@ -440,17 +470,24 @@ impl CkksContext {
         self.basis.primes[level]
     }
 
-    /// Rotation step counts this context has keys for.
+    /// Rotation step counts this context is authorized for (the declared
+    /// set; keys materialize lazily on first use).
     pub fn rotation_steps(&self) -> Vec<usize> {
-        self.rot_keys.keys().copied().collect()
+        self.keys.declared_steps()
     }
 
-    /// Total resident switching-key material (relinearization + rotation
-    /// keys) in bytes: O(L) digit components per key, each over the fixed
-    /// modulus Q_L·P — compare O(L³·digits) for the per-level ladder this
-    /// replaces.
+    /// The lazy rotation-key store: budget, residency, and
+    /// hit/miss/eviction/regen-latency counters.
+    pub fn key_store(&self) -> &KeyStore {
+        &self.keys
+    }
+
+    /// **Live** resident switching-key material in bytes: the
+    /// always-resident relinearization key plus whatever rotation keys
+    /// the [`KeyStore`] currently holds. Moves as keys materialize and
+    /// evict — poll it after operations, not just at setup.
     pub fn switch_key_bytes(&self) -> u64 {
-        self.relin.bytes() + self.rot_keys.values().map(|rk| rk.key.bytes()).sum::<u64>()
+        self.relin.bytes() + self.keys.resident_bytes()
     }
 
     // ---- encoding ----
@@ -776,12 +813,7 @@ impl CkksContext {
             ct.level(),
             "hoisted decomposition level does not match ciphertext"
         );
-        let rk = self.rot_keys.get(&steps).ok_or_else(|| {
-            Error::msg(format!(
-                "no rotation key for step {steps} (keys exist for {:?})",
-                self.rotation_steps()
-            ))
-        })?;
+        let rk = self.keys.rotation_key(steps)?;
         let (e0, e1) = self.accumulate_key(dec, &rk.key);
         // Keys are stored inverse-rotated: rotating the accumulated result
         // gives Σ φ_g(D_i(c1))·ksk_i, the hoisted key switch for φ_g(c1).
@@ -1143,12 +1175,121 @@ mod tests {
 
     #[test]
     fn switch_key_memory_is_linear_in_levels() {
-        let (ctx, _) = setup(&[1]);
+        let (ctx, mut rng) = setup(&[1]);
         let top = ctx.max_level();
         let n = ctx.params().n as u64;
         // Per key: (L+1) digits × 2 polys × (L+2) rows × N × 8 bytes.
         let per_key = (top as u64 + 1) * 2 * (top as u64 + 2) * n * 8;
+        assert_eq!(ctx.key_store().per_key_bytes(), per_key);
+        // Lazy store: only the relin key is resident until a rotation
+        // materializes the declared step.
+        assert_eq!(ctx.switch_key_bytes(), per_key);
+        let x = rand_slots(&mut rng, ctx.slots());
+        let cx = ctx.encrypt_values(&x, DELTA, &mut rng).unwrap();
+        ctx.rotate(&cx, 1).unwrap();
         assert_eq!(ctx.switch_key_bytes(), 2 * per_key); // relin + one rot key
+    }
+
+    #[test]
+    fn rotation_keys_materialize_lazily_and_hit_after() {
+        let (ctx, mut rng) = setup(&[1, 2]);
+        let store = ctx.key_store();
+        assert_eq!(store.stats(), KeyStoreStats::default());
+        assert!(!store.is_resident(1));
+        let x = rand_slots(&mut rng, ctx.slots());
+        let cx = ctx.encrypt_values(&x, DELTA, &mut rng).unwrap();
+        ctx.rotate(&cx, 1).unwrap();
+        let s = store.stats();
+        assert_eq!((s.hits, s.misses), (0, 1));
+        assert!(store.is_resident(1) && !store.is_resident(2));
+        assert!(s.regen_ns_total > 0 && s.regen_mean_ns() > 0.0);
+        ctx.rotate(&cx, 1).unwrap();
+        let s = store.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (1, 1, 0));
+        assert_eq!(s.resident_bytes, store.per_key_bytes());
+        assert_eq!(s.peak_resident_bytes, store.per_key_bytes());
+    }
+
+    #[test]
+    fn lru_eviction_stays_under_budget_and_regenerates_bit_identically() {
+        let mk = |budget_keys: u64| {
+            let per_key = {
+                let probe = CkksContext::builder(small_params()).build().unwrap();
+                probe.key_store().per_key_bytes()
+            };
+            CkksContext::builder(small_params())
+                .seed(7)
+                .rotations(&[1, 2, 3])
+                .key_cache_bytes(budget_keys * per_key)
+                .build()
+                .unwrap()
+        };
+        let bounded = mk(2); // room for 2 of the 3 declared keys
+        let (unbounded, _) = setup(&[1, 2, 3]);
+        let mut rng = SplitMix64::new(3);
+        let x = rand_slots(&mut rng, bounded.slots());
+        let cx = bounded.encrypt_values(&x, DELTA, &mut rng).unwrap();
+        let mut rng2 = SplitMix64::new(3);
+        let _ = rand_slots(&mut rng2, unbounded.slots());
+        let cu = unbounded.encrypt_values(&x, DELTA, &mut rng2).unwrap();
+        // Touch 1, 2, 3, then 1 again: 3 evicts 1 (LRU), 1 regenerates.
+        for &steps in &[1usize, 2, 3, 1, 2] {
+            let b = bounded.rotate(&cx, steps).unwrap();
+            let u = unbounded.rotate(&cu, steps).unwrap();
+            assert_eq!(b.c0, u.c0, "step {steps} diverged after eviction");
+            assert_eq!(b.c1, u.c1, "step {steps} diverged after eviction");
+        }
+        let s = bounded.key_store().stats();
+        assert!(s.evictions >= 1, "budget of 2 keys must evict: {s:?}");
+        assert!(
+            s.peak_resident_bytes <= bounded.key_store().budget_bytes(),
+            "peak {} exceeds budget {}",
+            s.peak_resident_bytes,
+            bounded.key_store().budget_bytes()
+        );
+        let su = unbounded.key_store().stats();
+        assert_eq!(su.evictions, 0);
+        assert_eq!(su.resident_bytes, 3 * unbounded.key_store().per_key_bytes());
+    }
+
+    #[test]
+    fn generation_order_does_not_change_key_streams() {
+        // Per-step randomness: materializing step 2 before step 1 yields
+        // the same rotation outputs as the natural order.
+        let mk = || {
+            CkksContext::builder(small_params())
+                .seed(7)
+                .rotations(&[1, 2])
+                .build()
+                .unwrap()
+        };
+        let (a, b) = (mk(), mk());
+        let mut rng = SplitMix64::new(3);
+        let x = rand_slots(&mut rng, a.slots());
+        let ca = a.encrypt_values(&x, DELTA, &mut rng).unwrap();
+        let mut rngb = SplitMix64::new(3);
+        let _ = rand_slots(&mut rngb, b.slots());
+        let cb = b.encrypt_values(&x, DELTA, &mut rngb).unwrap();
+        let a1 = a.rotate(&ca, 1).unwrap(); // a: 1 then 2
+        let a2 = a.rotate(&ca, 2).unwrap();
+        let b2 = b.rotate(&cb, 2).unwrap(); // b: 2 then 1
+        let b1 = b.rotate(&cb, 1).unwrap();
+        assert_eq!(a1.c0, b1.c0);
+        assert_eq!(a1.c1, b1.c1);
+        assert_eq!(a2.c0, b2.c0);
+        assert_eq!(a2.c1, b2.c1);
+    }
+
+    #[test]
+    fn undersized_key_cache_budget_is_a_typed_error() {
+        let e = CkksContext::builder(small_params())
+            .rotations(&[1])
+            .key_cache_bytes(1024)
+            .build()
+            .unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("key cache budget"), "{msg}");
+        assert!(msg.contains("unbounded"), "{msg}");
     }
 
     #[test]

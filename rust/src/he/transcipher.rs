@@ -783,8 +783,13 @@ impl CkksTranscipher {
     /// rotation is pointwise multiply-accumulate + mod-down. Diagonal
     /// weights are applied at the dropping prime's scale and the sum is
     /// rescaled once, so the layer costs one level and returns near the
-    /// input scale. A rotation step with no registered key surfaces as a
-    /// typed error, not a panic.
+    /// input scale.
+    ///
+    /// Rotation keys come from the context's lazy
+    /// [`KeyStore`](super::ckks::KeyStore): the first use of a step
+    /// generates its key (and may evict another under a byte budget), later
+    /// uses hit the cache. A step outside the declared rotation set
+    /// surfaces as a typed error, not a panic.
     pub fn slot_linear(
         &self,
         ctx: &CkksContext,

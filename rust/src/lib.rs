@@ -47,7 +47,12 @@
 //!   property-testing helper.
 //!
 //! See `DESIGN.md` for the hardware-substitution rationale and the
-//! per-experiment index, and `EXPERIMENTS.md` for paper-vs-measured results.
+//! per-experiment index, `ARCHITECTURE.md` for the module map and serving
+//! data flow, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+// Every public item must carry rustdoc; CI builds the docs with
+// `RUSTDOCFLAGS="-D warnings"` so broken intra-doc links fail too.
+#![deny(missing_docs)]
 
 pub mod arith;
 pub mod bench;
